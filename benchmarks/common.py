@@ -1,0 +1,114 @@
+"""Shared benchmark infrastructure.
+
+Measured vs modeled split (EXPERIMENTS.md documents this per figure):
+
+* MEASURED on this host: the vectorized match-action engine's service time
+  per pipeline pass (jit-compiled ChainSim node step, wall clock), and all
+  packet/hop/pass counts (exact, from the simulator).
+* MODELED: per-byte parse cost and per-hop wire latency - BMv2 constants
+  calibrated so the 4-node head-read ratio lands near the paper's 4.08x
+  (the paper's absolute numbers come from a software switch; ratios and
+  curve shapes are the reproduction target).
+
+Queueing (Fig 4) uses M/D/1 waiting time per visited node with the
+protocol's routing deciding each node's utilisation - under CR all reads
+hit the tail (the hot spot), under CRAQ load spreads.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ChainConfig, ChainSim, WorkloadConfig, make_schedule
+
+# Calibrated model constants.  BMv2 (the paper's testbed) is a SOFTWARE
+# switch: ~30 us per match-action pipeline pass, every emulated switch
+# sharing one host CPU - which is exactly why NetChain saturates at a few
+# kQPS in the paper's Fig 4.  Reply relays retrace the chain via plain IP
+# forwarding (no KVS pipeline pass).  With these constants the reproduced
+# ratios land at 4.2x head-read speedup (paper 4.08x), ~8.7x at 8 nodes
+# (paper 9.46x) and a 2.05x NetChain drop from 4->8 nodes (paper ~2x).
+T_OP_US = 30.0         # per KV pipeline pass (BMv2 software switch)
+T_BYTE_US = 0.05       # per header byte parse/deparse cost
+T_HOP_US = 5.0         # per link traversal (veth wire + kernel)
+RELAY_WEIGHT = 0.0     # reply relays bypass the KVS pipeline (IP fwd)
+
+
+def t_pass_us(header_bytes: int) -> float:
+    return T_OP_US + T_BYTE_US * header_bytes
+
+
+def run_workload(proto: str, n_nodes: int, *, wf=0.0, entry=None, ticks=8,
+                 q=8, seed=0, num_keys=64, versions=6):
+    cfg = ChainConfig(n_nodes=n_nodes, num_keys=num_keys,
+                      num_versions=versions, protocol=proto)
+    sim = ChainSim(cfg, inject_capacity=q, route_capacity=max(128, 8 * q),
+                   reply_capacity=8 * ticks * n_nodes * q + 64)
+    state = sim.init_state()
+    wl = WorkloadConfig(ticks=ticks, queries_per_tick=q,
+                        write_fraction=wf, entry_node=entry, seed=seed)
+    state = sim.run(state, make_schedule(cfg, wl), extra_ticks=4 * n_nodes)
+    return cfg, sim, state
+
+
+def measure_engine_us_per_query(proto: str = "netcraq", n_nodes: int = 4,
+                                batch: int = 256, iters: int = 20) -> float:
+    """MEASURED: wall-clock service time of the vectorized engine on this
+    host, per query (the TPU analogue of the switch pipeline rate)."""
+    cfg = ChainConfig(n_nodes=n_nodes, num_keys=256, protocol=proto)
+    sim = ChainSim(cfg, inject_capacity=batch, route_capacity=256,
+                   reply_capacity=batch * 4)
+    state = sim.init_state()
+    wl = WorkloadConfig(ticks=1, queries_per_tick=batch, write_fraction=0.0,
+                        entry_node=None, seed=0)
+    sched = make_schedule(cfg, wl)
+    inj = jax.tree.map(lambda x: x[0], sched)
+    state = sim.tick(state, inj)  # compile
+    jax.block_until_ready(state.metrics.packets)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        state = sim.tick(state, inj)
+    jax.block_until_ready(state.metrics.packets)
+    dt = (time.perf_counter() - t0) / iters
+    return dt * 1e6 / (batch * n_nodes)
+
+
+def replies_stats(state):
+    r = state.replies
+    n = int(r.cursor)
+    return {
+        "n": n,
+        "hops": np.asarray(r.hops[:n]),
+        "procs": np.asarray(r.procs[:n]),
+        "op": np.asarray(r.op[:n]),
+    }
+
+
+def throughput_qps(cfg: ChainConfig, procs_per_reply: float,
+                   relays_per_reply: float = 0.0) -> float:
+    """Service-limited throughput: one pipeline's pass rate divided by the
+    passes a query consumes (KV passes + weighted relay passes)."""
+    tp = t_pass_us(cfg.header_bytes)
+    total_us = procs_per_reply * tp + relays_per_reply * RELAY_WEIGHT * tp
+    return 1e6 / total_us
+
+
+def md1_wait_us(lam_qps: float, service_us: float) -> float:
+    """M/D/1 mean waiting time; saturates instead of going negative."""
+    mu = 1e6 / service_us
+    rho = min(lam_qps / mu, 0.999)
+    return rho / (2 * mu * (1 - rho)) * 1e6
+
+
+@dataclasses.dataclass
+class BenchRow:
+    name: str
+    us_per_call: float
+    derived: str
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.3f},{self.derived}"

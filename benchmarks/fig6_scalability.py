@@ -1,0 +1,48 @@
+"""Paper Fig 6: read throughput vs chain length (4..8 nodes, head reads).
+
+The scalability headline: NetChain halves from 4 to 8 nodes (more hops,
+bigger headers, more per-read passes); NetCRAQ is chain-length independent
+(local clean reads, constant 20-byte header).  Paper reports up to 9.46x
+at 8 nodes.
+"""
+from __future__ import annotations
+
+from benchmarks.common import (BenchRow, replies_stats, run_workload,
+                               throughput_qps)
+from repro.core.types import OP_READ_REPLY
+
+
+def run(lengths=(4, 5, 6, 7, 8)):
+    rows = []
+    qps = {}
+    for proto in ("netcraq", "netchain"):
+        qps[proto] = []
+        for n_nodes in lengths:
+            cfg, sim, state = run_workload(proto, n_nodes, entry=0)
+            st = replies_stats(state)
+            reads = st["op"] == OP_READ_REPLY
+            procs = float(st["procs"][reads].mean())
+            dist = n_nodes - 1
+            kv_passes = min(procs, dist + 1.0)
+            relay = max(procs - kv_passes, 0.0)
+            q = throughput_qps(cfg, kv_passes, relay)
+            qps[proto].append(q)
+            rows.append(BenchRow(
+                name=f"fig6/{proto}/n{n_nodes}",
+                us_per_call=1e6 / q,
+                derived=f"qps={q:,.0f};header={cfg.header_bytes}B",
+            ))
+    r8 = qps["netcraq"][-1] / qps["netchain"][-1]
+    r4 = qps["netcraq"][0] / qps["netchain"][0]
+    drop = qps["netchain"][0] / qps["netchain"][-1]
+    rows.append(BenchRow("fig6/speedup_at_8", 0.0,
+                         f"{r8:.2f}x (paper: 9.46x)"))
+    rows.append(BenchRow("fig6/speedup_at_4", 0.0, f"{r4:.2f}x"))
+    rows.append(BenchRow("fig6/netchain_4to8_drop", 0.0,
+                         f"{drop:.2f}x slower at 8 (paper: ~2x)"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

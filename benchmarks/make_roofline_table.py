@@ -1,0 +1,52 @@
+"""Render the EXPERIMENTS.md roofline tables from dry-run JSON output."""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+from repro.configs.base import ARCH_IDS
+from repro.configs.shapes import SHAPE_IDS
+
+
+def fmt_s(x):
+    return f"{x * 1e3:8.2f}"
+
+
+def load(outdir, mesh):
+    rows = []
+    for arch in ARCH_IDS:
+        for shape in SHAPE_IDS:
+            p = os.path.join(outdir, f"{arch}_{shape}_{mesh}.json")
+            if not os.path.exists(p):
+                continue
+            with open(p) as f:
+                d = json.load(f)
+            rows.append((arch, shape, d))
+    return rows
+
+
+def table(outdir="roofline_out2", mesh="single"):
+    print(f"\n### Roofline terms - {mesh} mesh "
+          f"({'256' if mesh == 'single' else '512'} chips)\n")
+    print("| arch | shape | compute ms | memory ms | coll ms | bottleneck | "
+          "useful | HBM GiB/chip |")
+    print("|---|---|---:|---:|---:|---|---:|---:|")
+    for arch, shape, d in load(outdir, mesh):
+        if "skip" in d:
+            print(f"| {arch} | {shape} | - | - | - | SKIP (sub-quadratic "
+                  "rule) | - | - |")
+            continue
+        m = d["memory_analysis"]
+        live = (m["argument_bytes"] - m["alias_bytes"] + m["temp_bytes"]) / 2**30
+        print(
+            f"| {arch} | {shape} |{fmt_s(d['compute_s'])} |"
+            f"{fmt_s(d['memory_s'])} |{fmt_s(d['collective_s'])} | "
+            f"{d['bottleneck']} | {d['useful_ratio']:.2f} | {live:.2f} |"
+        )
+
+
+if __name__ == "__main__":
+    table(mesh=sys.argv[1] if len(sys.argv) > 1 else "single")
+    if len(sys.argv) == 1:
+        table(mesh="multi")

@@ -1,0 +1,34 @@
+"""Benchmark harness - one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Also includes the raw engine
+measurement (the only wall-clock-measured quantity; everything else
+derives from exact simulator counts + the calibrated network model - see
+benchmarks/common.py and EXPERIMENTS.md §Benchmarks).
+"""
+from __future__ import annotations
+
+from benchmarks import fig3_read_qps, fig4_latency, fig5_mixed, \
+    fig6_scalability
+from benchmarks.common import BenchRow, measure_engine_us_per_query
+
+
+def main() -> None:
+    rows: list[BenchRow] = []
+    for proto in ("netcraq", "netchain"):
+        us = measure_engine_us_per_query(proto)
+        rows.append(BenchRow(
+            name=f"engine/{proto}_us_per_query",
+            us_per_call=us,
+            derived=f"measured on this host ({1e6 / us:,.0f} q/s/node)",
+        ))
+    rows += fig3_read_qps.run()
+    rows += fig4_latency.run()
+    rows += fig5_mixed.run()
+    rows += fig6_scalability.run()
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(r.csv())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,205 @@
+"""Architecture config schema + registry.
+
+Every assigned architecture is a ``src/repro/configs/<id>.py`` exporting
+``CONFIG`` with the exact published hyperparameters; ``reduced()`` derives
+the CPU smoke-test variant (same family/topology, tiny widths).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+def pad_vocab(v: int, multiple: int = 256) -> int:
+    """Megatron-style vocab padding for clean TP sharding (DESIGN.md §6)."""
+    return ((v + multiple - 1) // multiple) * multiple
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                    # dense | moe | ssm | hybrid | encdec | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+
+    # attention details
+    d_head: Optional[int] = None   # default d_model // n_heads
+    qkv_bias: bool = False
+    rotary_fraction: float = 1.0   # chatglm3 "2d RoPE" rotates half the dims
+    rope_base: float = 10000.0
+    tie_embeddings: bool = False
+
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    shared_expert: bool = False
+    capacity_factor: float = 1.25
+    expert_pad: int = 0            # pad experts for divisible EP (granite 40->48)
+    moe_group_tokens: int = 2048   # routing-group size; dispatch one-hot is
+                                   # O(group * E * capacity) so high top-k
+                                   # archs need smaller groups
+
+    # SSM (mamba2 / zamba2)
+    ssm_state: int = 0
+    ssm_headdim: int = 64
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+
+    # hybrid (zamba2): shared attention block applied every k mamba layers
+    shared_attn_every: int = 0
+
+    # encoder-decoder (whisper)
+    enc_layers: int = 0
+    dec_layers: int = 0
+    enc_len: int = 1500            # whisper: 30 s of audio at 50 fps post-conv
+
+    # multimodal stubs
+    vis_len: int = 0               # VLM: prepended patch-embedding tokens
+
+    # precision
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+
+    # provenance
+    source: str = ""
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head if self.d_head else self.d_model // self.n_heads
+
+    @property
+    def vocab_padded(self) -> int:
+        return pad_vocab(self.vocab)
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def supports_long_context(self) -> bool:
+        """Sub-quadratic sequence mixing (SSM/hybrid) - long_500k eligibility."""
+        return self.family in ("ssm", "hybrid")
+
+    @property
+    def has_decoder(self) -> bool:
+        return True  # all assigned archs have an autoregressive decoder
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_headdim
+
+    @property
+    def n_experts_padded(self) -> int:
+        return self.n_experts + self.expert_pad
+
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    # -- parameter counting (roofline MODEL_FLOPS; excludes embeddings) ----
+    def param_count(self, active_only: bool = False) -> int:
+        d, f = self.d_model, self.d_ff
+        if self.family == "ssm":  # attention-free: no head_dim defined
+            return self.n_layers * self._mamba_params()
+        hd = self.head_dim
+        att = d * (self.n_heads * hd) + 2 * d * (self.n_kv_heads * hd) \
+            + (self.n_heads * hd) * d
+        if self.family == "hybrid":
+            mamba = self._mamba_params()
+            n_shared = self.n_layers // max(self.shared_attn_every, 1)
+            shared = att + 3 * d * f
+            return self.n_layers * mamba + shared + 0 * n_shared
+        mlp3 = 3 * d * f
+        if self.family == "moe" and self.n_experts:
+            e = self.top_k if active_only else self.n_experts
+            moe = e * mlp3 + d * self.n_experts
+            if self.shared_expert:
+                moe += mlp3
+            per_layer = att + moe
+        elif self.family == "encdec":
+            enc = self.enc_layers * (att + 2 * d * f + 2 * d * d * 0)
+            dec = self.dec_layers * (2 * att + 2 * d * f)
+            return enc + dec
+        else:
+            per_layer = att + mlp3
+        return self.n_layers * per_layer
+
+    def _mamba_params(self) -> int:
+        d, di = self.d_model, self.d_inner
+        n, h = self.ssm_state, self.ssm_heads
+        in_proj = d * (2 * di + 2 * n + h)
+        out_proj = di * d
+        conv = self.ssm_conv * (di + 2 * n)
+        return in_proj + out_proj + conv + 3 * h
+
+    def reduced(self) -> "ArchConfig":
+        """Smoke-test variant: same family & topology, tiny widths."""
+        small_heads = max(2, min(self.n_heads, 4))
+        kv = max(1, min(self.n_kv_heads, small_heads))
+        while small_heads % kv:
+            kv -= 1
+        return dataclasses.replace(
+            self,
+            n_layers=min(self.n_layers, 4 if not self.shared_attn_every else 4),
+            d_model=128,
+            d_head=32,
+            n_heads=small_heads,
+            n_kv_heads=kv,
+            d_ff=256 if self.d_ff else 0,
+            vocab=512,
+            n_experts=min(self.n_experts, 8) if self.n_experts else 0,
+            expert_pad=0,
+            top_k=min(self.top_k, 2) if self.top_k else 0,
+            ssm_state=min(self.ssm_state, 16) if self.ssm_state else 0,
+            ssm_headdim=32 if self.ssm_state else 64,
+            shared_attn_every=2 if self.shared_attn_every else 0,
+            enc_layers=min(self.enc_layers, 2),
+            dec_layers=min(self.dec_layers, 2),
+            enc_len=32,
+            vis_len=8 if self.vis_len else 0,
+        )
+
+
+ARCH_IDS = [
+    "qwen2.5-3b",
+    "chatglm3-6b",
+    "qwen1.5-0.5b",
+    "llama3.2-3b",
+    "internvl2-26b",
+    "whisper-base",
+    "zamba2-2.7b",
+    "llama4-scout-17b-a16e",
+    "granite-moe-3b-a800m",
+    "mamba2-1.3b",
+]
+
+_MODULES = {
+    "qwen2.5-3b": "qwen2_5_3b",
+    "chatglm3-6b": "chatglm3_6b",
+    "qwen1.5-0.5b": "qwen1_5_0_5b",
+    "llama3.2-3b": "llama3_2_3b",
+    "internvl2-26b": "internvl2_26b",
+    "whisper-base": "whisper_base",
+    "zamba2-2.7b": "zamba2_2_7b",
+    "llama4-scout-17b-a16e": "llama4_scout_17b_a16e",
+    "granite-moe-3b-a800m": "granite_moe_3b_a800m",
+    "mamba2-1.3b": "mamba2_1_3b",
+}
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+    return mod.CONFIG

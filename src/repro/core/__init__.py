@@ -1,0 +1,34 @@
+"""NetCRAQ core: in-network coordination KVS for the data plane, in JAX.
+
+Public surface:
+  types      - Msg/ChainConfig/Roles, opcode and wire-format constants
+  store      - versioned object store (objects_store register arrays)
+  craq       - NetCRAQ node control logic (Algorithm 1)
+  netchain   - NetChain/Chain-Replication baseline
+  chain      - ChainSim (exact-accounting simulator) / ChainDist (shard_map)
+  coordinator- control plane: roles, membership, two-phase failure recovery
+  workload   - paper-evaluation workload generators
+  metrics    - packet/hop/byte accounting and reply latency log
+"""
+from repro.core.types import (  # noqa: F401
+    ChainConfig,
+    Msg,
+    Roles,
+    OP_ACK,
+    OP_NOP,
+    OP_READ,
+    OP_READ_REPLY,
+    OP_WRITE,
+    OP_WRITE_REPLY,
+    CLIENT_BASE,
+    MULTICAST,
+    NOWHERE,
+    TO_CLIENT,
+    NETCRAQ_HEADER_BYTES,
+    netchain_header_bytes,
+)
+from repro.core.store import Store, init_store  # noqa: F401
+from repro.core.chain import ChainDist, ChainSim, SimState  # noqa: F401
+from repro.core.coordinator import ChainMembership, Coordinator  # noqa: F401
+from repro.core.metrics import Metrics, ReplyLog  # noqa: F401
+from repro.core.workload import WorkloadConfig, make_schedule  # noqa: F401

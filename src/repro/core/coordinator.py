@@ -1,0 +1,168 @@
+"""Control plane (CP) - network-wide operations, host-side Python.
+
+Paper §III.B: the CP installs forwarding/match-action rules, allocates an
+IP (here: a position) per switch, assigns chain roles, manages multicast
+groups, and runs the two-phase failure recovery.  Time-critical per-query
+work never touches the CP - that is the paper's core CP/DP split, preserved
+here: everything in this module runs outside the jitted data path and only
+rewrites the (tiny) role/membership metadata the data path reads.
+
+The coordinator also exposes the KVS itself as a *coordination service* for
+the training/serving framework (checkpoint epochs, membership leases, data
+offsets) - the paper's actual use case (ZooKeeper replacement).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import store as store_lib
+from repro.core.store import Store
+from repro.core.types import ChainConfig
+
+
+@dataclasses.dataclass
+class ChainMembership:
+    """CP's view of one chain: an ordered list of live node ids."""
+
+    node_ids: list[int]                  # chain order: head .. tail
+    epoch: int = 0                       # bumped on every reconfiguration
+    writes_frozen: bool = False          # recovery phase 2 freezes writes
+
+    @property
+    def head(self) -> int:
+        return self.node_ids[0]
+
+    @property
+    def tail(self) -> int:
+        return self.node_ids[-1]
+
+    @property
+    def length(self) -> int:
+        return len(self.node_ids)
+
+    def position_of(self, node_id: int) -> int:
+        return self.node_ids.index(node_id)
+
+
+@dataclasses.dataclass
+class FailoverPolicy:
+    """Client-side immediate redirection (recovery phase 1, paper §III.C).
+
+    ``timeout_ticks`` models 'unresponsive for a certain amount of time':
+    after that many unanswered ticks the client re-targets another node.
+    Under CRAQ any live node can serve clean reads, so failover is a free
+    re-targeting; under CR the clients can only fail over for writes if the
+    head is re-elected.
+    """
+
+    timeout_ticks: int = 8
+
+    def redirect(self, membership: ChainMembership, dead: int) -> int:
+        live = [i for i in membership.node_ids if i != dead]
+        return live[0]
+
+
+class Coordinator:
+    """Owns membership, roles and recovery for a set of chains.
+
+    Multiple *virtual chains* partition the key space (NetChain/NetCRAQ
+    hash keys to chains); ``key_to_chain`` is the consistent assignment.
+    """
+
+    def __init__(self, cfg: ChainConfig, n_chains: int = 1):
+        self.cfg = cfg
+        self.chains = [
+            ChainMembership(node_ids=list(range(cfg.n_nodes)))
+            for _ in range(n_chains)
+        ]
+        self.failover = FailoverPolicy()
+        self._recovery_log: list[dict] = []
+
+    # -- key partitioning ---------------------------------------------------
+    def key_to_chain(self, key: int) -> int:
+        return key % len(self.chains)
+
+    # -- failure recovery (two phases, paper §III.C) -------------------------
+    def fail_node(self, chain_idx: int, node_id: int) -> ChainMembership:
+        """Phase 1: drop the node from forwarding tables + multicast group.
+
+        Clients are redirected immediately (FailoverPolicy); the chain keeps
+        serving with n-1 nodes.
+        """
+        m = self.chains[chain_idx]
+        assert node_id in m.node_ids, f"node {node_id} not in chain {chain_idx}"
+        assert m.length > 2, "cannot drop below head+tail"
+        m.node_ids = [i for i in m.node_ids if i != node_id]
+        m.epoch += 1
+        self._recovery_log.append(
+            {"event": "fail", "chain": chain_idx, "node": node_id, "epoch": m.epoch,
+             "t": time.time()}
+        )
+        return m
+
+    def recovery_source(self, chain_idx: int, position: int) -> int:
+        """Which live node the replacement copies KV pairs from (CRAQ rules:
+        copy from the *predecessor* if one exists - it has seen every write
+        the failed node had - else from the new head's successor)."""
+        m = self.chains[chain_idx]
+        if position == 0:
+            return m.node_ids[0]
+        return m.node_ids[min(position, m.length) - 1]
+
+    def recover_node(
+        self,
+        chain_idx: int,
+        new_node_id: int,
+        position: int,
+        stores: Store,
+        source_store_index: Optional[int] = None,
+    ) -> tuple[ChainMembership, Store]:
+        """Phase 2: copy KV pairs from a live node, freeze writes during the
+        copy, then splice the replacement into the forwarding tables and the
+        multicast group (paper §III.C).
+
+        ``stores`` is the stacked [n_physical, ...] store pytree; the copy
+        is a host-level operation (the CP owns it).
+        """
+        m = self.chains[chain_idx]
+        m.writes_frozen = True
+        try:
+            src = (
+                source_store_index
+                if source_store_index is not None
+                else self.recovery_source(chain_idx, position)
+            )
+            copied = jax.tree.map(lambda x: x.at[new_node_id].set(x[src]), stores)
+            m.node_ids = m.node_ids[:position] + [new_node_id] + m.node_ids[position:]
+            m.epoch += 1
+            self._recovery_log.append(
+                {"event": "recover", "chain": chain_idx, "node": new_node_id,
+                 "from": src, "epoch": m.epoch, "t": time.time()}
+            )
+        finally:
+            m.writes_frozen = False
+        return m, copied
+
+    # -- coordination-service API (the KVS as ZooKeeper replacement) --------
+    @staticmethod
+    def put_host(store: Store, key: int, value: int) -> Store:
+        """Host-side committed put (CP bootstrap writes, e.g. initial rules)."""
+        k = jnp.asarray([key], jnp.int32)
+        v = jnp.zeros((1, store.values.shape[-1]), jnp.int32).at[0, 0].set(value)
+        s = store.next_seq[k]
+        store = store._replace(next_seq=store.next_seq.at[k].add(1))
+        return store_lib.commit(store, k, v, s, jnp.asarray([True]))
+
+    @staticmethod
+    def get_host(store: Store, key: int) -> int:
+        return int(store.values[key, 0, 0])
+
+    @property
+    def recovery_log(self) -> list[dict]:
+        return list(self._recovery_log)

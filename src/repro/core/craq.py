@@ -1,0 +1,161 @@
+"""NetCRAQ node control logic - the paper's Algorithm 1, vectorized.
+
+A programmable switch processes one packet per pipeline pass; a TPU core
+processes a *batch* of queries per step.  ``node_step`` is the branch-free
+batch equivalent of the match-action control logic:
+
+    READ  -> clean (pending==0): reply locally from cell 0  (any node!)
+             dirty & tail:       reply the latest dirty version
+             dirty & not tail:   forward to the tail
+    WRITE -> append dirty version (drop if the window overflows);
+             forward toward the tail;
+             at the tail: commit clean, multicast ACK, reply to client
+    ACK   -> commit: install clean value, compact versions <= acked seq
+
+Batch serialization order within one step: READs observe the state at step
+start, then ACKs apply, then WRITEs (DESIGN.md §3).  The sequential oracle
+used by the hypothesis tests replays exactly this order.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import store as store_lib
+from repro.core.store import Store
+from repro.core.types import (
+    MULTICAST,
+    NOWHERE,
+    OP_ACK,
+    OP_READ,
+    OP_READ_REPLY,
+    OP_WRITE,
+    OP_WRITE_REPLY,
+    TO_CLIENT,
+    CLIENT_BASE,
+    ChainConfig,
+    Msg,
+    Roles,
+)
+
+
+def node_step(cfg: ChainConfig, store: Store, roles: Roles, inbox: Msg):
+    """Process one inbox batch on one node. Returns (store', outbox).
+
+    outbox has 3*B slots: [replies | forwards | acks+write-replies].
+    """
+    del cfg
+    B = inbox.batch
+    is_read = inbox.op == OP_READ
+    is_write = inbox.op == OP_WRITE
+    is_ack = inbox.op == OP_ACK
+    is_tail = roles.is_tail
+
+    # ---------------- READ path (observes pre-step state) ----------------
+    clean = store_lib.is_clean(store, inbox.key)
+    v_clean, s_clean = store_lib.read_clean(store, inbox.key)
+    v_latest, s_latest = store_lib.read_latest(store, inbox.key)
+
+    answer_local = is_read & clean                      # Algorithm 1 l.7-9
+    answer_tail = is_read & ~clean & is_tail            # l.10-12
+    answers = answer_local | answer_tail
+    fwd_read = is_read & ~clean & ~is_tail              # l.13-14
+
+    reply_val = jnp.where(answer_tail[:, None], v_latest, v_clean)
+    reply_seq = jnp.where(answer_tail, s_latest, s_clean)
+    replies = Msg(
+        op=jnp.where(answers, OP_READ_REPLY, 0),
+        key=inbox.key,
+        value=reply_val,
+        seq=reply_seq,
+        src=jnp.full((B,), roles.my_pos, jnp.int32),
+        dst=jnp.where(answers, TO_CLIENT, NOWHERE),
+        client=inbox.client,
+        entry=inbox.entry,
+        qid=inbox.qid,
+        t_inject=inbox.t_inject,
+        extra=inbox.extra,
+    ).mask(answers)
+
+    # ---------------- ACK path ----------------
+    new_store = store_lib.commit(store, inbox.key, inbox.value, inbox.seq, is_ack)
+
+    # ---------------- WRITE path ----------------
+    # Entry node stamps client writes with per-key monotone sequence numbers.
+    needs_seq = is_write & (inbox.seq < 0)
+    new_store, stamped = store_lib.assign_seqs(new_store, inbox.key, needs_seq)
+    wseq = jnp.where(needs_seq, stamped, inbox.seq)
+
+    if_tail_commit = is_write & is_tail
+    if_appended = is_write & ~is_tail
+    new_store, accepted = store_lib.append_dirty(
+        new_store, inbox.key, inbox.value, wseq, if_appended
+    )
+    # Tail: commit directly (clean_write, Algorithm 1 l.27-28).
+    new_store = store_lib.commit(
+        new_store, inbox.key, inbox.value, wseq, if_tail_commit
+    )
+
+    # Forward accepted writes toward the tail (next hop in the chain).
+    fwd_write = accepted
+    fwd = is_read * 0  # placate linters; real mask built below
+    del fwd
+    fwd_mask = fwd_read | fwd_write
+    fwd_dst = jnp.where(
+        fwd_read,
+        roles.tail_pos,                       # dirty reads go straight to tail
+        roles.my_pos + 1,                     # writes propagate hop by hop
+    )
+    forwards = Msg(
+        op=jnp.where(fwd_read, OP_READ, OP_WRITE),
+        key=inbox.key,
+        value=inbox.value,
+        seq=wseq,
+        src=jnp.full((B,), roles.my_pos, jnp.int32),
+        dst=jnp.where(fwd_mask, fwd_dst, NOWHERE),
+        client=inbox.client,
+        entry=inbox.entry,
+        qid=inbox.qid,
+        t_inject=inbox.t_inject,
+        extra=inbox.extra,
+    ).mask(fwd_mask)
+
+    # Tail: multicast ACK to the rest of the chain + acknowledge the client.
+    ack_mask = if_tail_commit
+    acks = Msg(
+        op=jnp.where(ack_mask, OP_ACK, 0),
+        key=inbox.key,
+        value=inbox.value,
+        seq=wseq,
+        src=jnp.full((B,), roles.my_pos, jnp.int32),
+        dst=jnp.where(ack_mask, MULTICAST, NOWHERE),
+        client=inbox.client,
+        entry=inbox.entry,
+        qid=inbox.qid,
+        t_inject=inbox.t_inject,
+        extra=inbox.extra,
+    ).mask(ack_mask)
+    wreplies = Msg(
+        op=jnp.where(ack_mask, OP_WRITE_REPLY, 0),
+        key=inbox.key,
+        value=inbox.value,
+        seq=wseq,
+        src=jnp.full((B,), roles.my_pos, jnp.int32),
+        dst=jnp.where(ack_mask, TO_CLIENT, NOWHERE),
+        client=inbox.client,
+        entry=inbox.entry,
+        qid=inbox.qid,
+        t_inject=inbox.t_inject,
+        extra=inbox.extra,
+    ).mask(ack_mask)
+
+    outbox = Msg.concat([replies, forwards, acks, wreplies])
+    return new_store, outbox
+
+
+def stamp_entry(inbox: Msg, my_pos) -> Msg:
+    """Record the chain position where a client query entered the system."""
+    from_client = inbox.src >= CLIENT_BASE
+    return inbox._replace(
+        entry=jnp.where(from_client, jnp.asarray(my_pos, jnp.int32), inbox.entry)
+    )

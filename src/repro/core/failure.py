@@ -1,0 +1,73 @@
+"""Failure detection and mitigation (paper §III.C).
+
+Phase 1 - *immediate redirection*: clients track per-node responsiveness;
+after ``timeout_ticks`` without a response the node is presumed failed and
+traffic is redirected to a live node (cheap under CRAQ: any node serves
+clean reads).  Phase 2 - *complete recovery*: the CP (coordinator) removes
+the node from forwarding tables and the multicast group, copies KV pairs
+from the CRAQ-prescribed source onto a replacement with writes frozen, and
+splices it back in.
+
+This module supplies the host-side detector used by the trainer/serving
+engine; ``Coordinator.fail_node`` / ``recover_node`` implement phase 2.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class FailureDetector:
+    """Tick-based responsiveness tracker for a set of nodes.
+
+    'When a node remains unresponsive for a certain amount of time, the
+    client can automatically direct requests to a different chain node.
+    This time can be adjusted based on ... the average response rate of the
+    network.' (paper §III.C) - ``timeout_ticks`` is that knob, and
+    ``calibrate`` sets it from an observed response-rate average.
+    """
+
+    n_nodes: int
+    timeout_ticks: int = 8
+    _last_seen: dict[int, int] = dataclasses.field(default_factory=dict)
+    _now: int = 0
+
+    def __post_init__(self):
+        for i in range(self.n_nodes):
+            self._last_seen[i] = 0
+
+    def tick(self) -> None:
+        self._now += 1
+
+    def heard_from(self, node_id: int) -> None:
+        self._last_seen[node_id] = self._now
+
+    def calibrate(self, avg_response_ticks: float, slack: float = 4.0) -> None:
+        self.timeout_ticks = max(1, int(avg_response_ticks * slack))
+
+    def suspected(self) -> list[int]:
+        return [
+            i
+            for i, t in self._last_seen.items()
+            if self._now - t > self.timeout_ticks
+        ]
+
+    def is_alive(self, node_id: int) -> bool:
+        return self._now - self._last_seen[node_id] <= self.timeout_ticks
+
+
+@dataclasses.dataclass
+class HedgedReadPolicy:
+    """Straggler mitigation for reads: issue the same read to ``fanout``
+    chain nodes and keep the first reply.  Under CR this multiplies tail
+    load by ``fanout``; under CRAQ it costs one extra *local* read at
+    another replica - the asymmetry is itself a scalability argument for
+    apportioned queries (beyond-paper addition, used by the serving
+    engine for straggler mitigation at scale)."""
+
+    fanout: int = 2
+
+    def targets(self, entry: int, membership) -> list[int]:
+        nodes = list(membership.node_ids)
+        ordered = sorted(nodes, key=lambda i: (abs(i - entry), i))
+        return ordered[: self.fanout]

@@ -1,0 +1,94 @@
+"""Traffic and latency accounting - reproduces the paper's evaluation units.
+
+Counting rules (paper §II.B): one *packet* per link traversal.  A read that
+enters an n-node NetChain at the head costs 2n packets (client leg, n-1
+forwards to the tail, n-1 reply relays, client leg).  A NetCRAQ clean read
+costs 2 packets wherever it enters.  Multicast ACKs count one packet per
+link per recipient (the PRE generates the copies; each still crosses links).
+
+Latency model (used by the benchmarks to convert sim ticks to microseconds):
+
+    latency_us = hops * T_HOP_US
+               + kv_procs * (T_PARSE_PER_BYTE_US * header_bytes + T_OP_US)
+               + queueing delay (M/D/1, from measured engine service rate)
+
+The per-hop and per-byte constants are calibrated in benchmarks/common.py
+from measured engine throughput on this host; EXPERIMENTS.md documents the
+measured/modeled split.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Metrics(NamedTuple):
+    packets: jax.Array        # link traversals
+    msgs: jax.Array           # logical messages generated
+    bytes: jax.Array          # header+payload bytes crossing links
+    kv_procs: jax.Array       # match-action pipeline passes (KV processing)
+    reads_in: jax.Array
+    writes_in: jax.Array
+    acks: jax.Array
+    replies: jax.Array
+    dirty_appends: jax.Array  # dirty commits (paper Fig.5, right axis)
+    fwd_reads: jax.Array      # reads that had to be forwarded (dirty, CRAQ)
+    drops: jax.Array          # inbox-capacity or out-of-window drops
+    relay_procs: jax.Array    # reply-relay passes (CR retrace; IP-forwarded,
+                              # not KVS pipeline work)
+
+    @staticmethod
+    def zeros() -> "Metrics":
+        z = jnp.zeros((), jnp.int32)
+        return Metrics(*([z] * 12))
+
+    def asdict(self) -> dict:
+        return {k: int(v) for k, v in self._asdict().items()}
+
+
+class ReplyLog(NamedTuple):
+    """Fixed-capacity record of replies that exited to clients."""
+
+    qid: jax.Array       # [R] int32 (-1 = empty)
+    op: jax.Array        # [R] int32
+    key: jax.Array       # [R] int32
+    seq: jax.Array       # [R] int32
+    value0: jax.Array    # [R] int32 (first value word)
+    t_inject: jax.Array  # [R] int32
+    t_done: jax.Array    # [R] int32
+    hops: jax.Array      # [R] int32 link traversals along this query's path
+    procs: jax.Array     # [R] int32 KV pipeline passes along the path
+    cursor: jax.Array    # [] int32 next free slot
+
+    @staticmethod
+    def empty(capacity: int) -> "ReplyLog":
+        neg = jnp.full((capacity,), -1, jnp.int32)
+        z = jnp.zeros((capacity,), jnp.int32)
+        return ReplyLog(neg, z, z, z, z, z, z, z, z, jnp.zeros((), jnp.int32))
+
+    def append(self, exits, t_done) -> "ReplyLog":
+        """Scatter exiting replies (masked Msg-like fields) into the log."""
+        live = exits.live()
+        rank = jnp.cumsum(live.astype(jnp.int32)) - 1
+        slot = self.cursor + rank
+        cap = self.qid.shape[0]
+        ok = live & (slot < cap)
+        tgt = jnp.where(ok, slot, cap)  # overflow scatters OOB -> dropped
+
+        def put(buf, val):
+            return buf.at[tgt].set(val, mode="drop")
+
+        return ReplyLog(
+            qid=put(self.qid, exits.qid),
+            op=put(self.op, exits.op),
+            key=put(self.key, exits.key),
+            seq=put(self.seq, exits.seq),
+            value0=put(self.value0, exits.value[:, 0]),
+            t_inject=put(self.t_inject, exits.t_inject),
+            t_done=put(self.t_done, jnp.full_like(exits.qid, t_done)),
+            hops=put(self.hops, exits.extra),
+            procs=put(self.procs, jnp.full_like(exits.qid, t_done) - exits.t_inject),
+            cursor=jnp.minimum(self.cursor + live.sum(), cap),
+        )

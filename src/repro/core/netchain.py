@@ -1,0 +1,133 @@
+"""NetChain (Chain Replication) baseline node logic - paper §II.
+
+The comparison target: only the tail answers reads, so a read entering the
+chain at distance d from the tail costs 2d+2 packets (query forwarded hop by
+hop to the tail, reply forwarded hop by hop back to the entry node, plus the
+client legs) - 2n packets for head-directed reads on an n-node chain, exactly
+the paper's accounting.  Writes enter at the head, overwrite the single
+version and propagate to the tail which acknowledges the client (n+1
+packets).
+
+The 16-bit SEQ field critique (paper §II.B.2): NetChain's sequence number
+wraps after 65,536 writes.  We reproduce the wrap behaviour behind
+``SEQ_BITS`` so the overflow test can demonstrate the failure mode, while
+NetCRAQ uses 32-bit seqs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import store as store_lib
+from repro.core.store import Store
+from repro.core.types import (
+    NOWHERE,
+    OP_READ,
+    OP_READ_REPLY,
+    OP_WRITE,
+    OP_WRITE_REPLY,
+    TO_CLIENT,
+    ChainConfig,
+    Msg,
+    Roles,
+)
+
+SEQ_BITS = 16  # NetChain's default SEQ width (the overflow the paper calls out)
+
+
+def node_step(cfg: ChainConfig, store: Store, roles: Roles, inbox: Msg):
+    """One CR pipeline pass over an inbox batch. Returns (store', outbox).
+
+    outbox has 3*B slots: [tail replies | forwards | reply relays].
+    """
+    del cfg
+    B = inbox.batch
+    is_read = inbox.op == OP_READ
+    is_write = inbox.op == OP_WRITE
+    is_reply = inbox.op == OP_READ_REPLY
+    is_tail = roles.is_tail
+
+    # ---------------- READ: only the tail replies ----------------
+    v0, s0 = store_lib.read_clean(store, inbox.key)
+    tail_answers = is_read & is_tail
+    fwd_read = is_read & ~is_tail
+    # Reply retraces the chain: next stop is one hop back toward the entry
+    # node (or the client if the read entered at the tail itself).
+    back_dst = jnp.where(inbox.entry == roles.my_pos, TO_CLIENT, roles.my_pos - 1)
+    replies = Msg(
+        op=jnp.where(tail_answers, OP_READ_REPLY, 0),
+        key=inbox.key,
+        value=v0,
+        seq=s0,
+        src=jnp.full((B,), roles.my_pos, jnp.int32),
+        dst=jnp.where(tail_answers, back_dst, NOWHERE),
+        client=inbox.client,
+        entry=inbox.entry,
+        qid=inbox.qid,
+        t_inject=inbox.t_inject,
+        extra=inbox.extra,
+    ).mask(tail_answers)
+
+    # ---------------- READ_REPLY relay back toward the entry node --------
+    relay_dst = jnp.where(inbox.entry == roles.my_pos, TO_CLIENT, roles.my_pos - 1)
+    relays = Msg(
+        op=jnp.where(is_reply, OP_READ_REPLY, 0),
+        key=inbox.key,
+        value=inbox.value,
+        seq=inbox.seq,
+        src=jnp.full((B,), roles.my_pos, jnp.int32),
+        dst=jnp.where(is_reply, relay_dst, NOWHERE),
+        client=inbox.client,
+        entry=inbox.entry,
+        qid=inbox.qid,
+        t_inject=inbox.t_inject,
+        extra=inbox.extra,
+    ).mask(is_reply)
+
+    # ---------------- WRITE: overwrite + propagate ----------------
+    needs_seq = is_write & (inbox.seq < 0)
+    new_store, stamped = store_lib.assign_seqs(store, inbox.key, needs_seq)
+    # NetChain's 16-bit SEQ: wrap-around reproduces the overflow limitation.
+    wseq = jnp.where(needs_seq, stamped % (1 << SEQ_BITS), inbox.seq)
+    new_store = store_lib.overwrite_clean(
+        new_store, inbox.key, inbox.value, wseq, is_write
+    )
+    fwd_write = is_write & ~is_tail
+    forwards = Msg(
+        op=jnp.where(fwd_write, OP_WRITE, 0),
+        key=inbox.key,
+        value=inbox.value,
+        seq=wseq,
+        src=jnp.full((B,), roles.my_pos, jnp.int32),
+        dst=jnp.where(fwd_write, roles.my_pos + 1, NOWHERE),
+        client=inbox.client,
+        entry=inbox.entry,
+        qid=inbox.qid,
+        t_inject=inbox.t_inject,
+        extra=inbox.extra,
+    ).mask(fwd_write | fwd_read)
+    # Forwarded reads ride in the same section (op stays READ).
+    forwards = forwards._replace(
+        op=jnp.where(fwd_read, OP_READ, forwards.op),
+        seq=jnp.where(fwd_read, inbox.seq, forwards.seq),
+        dst=jnp.where(fwd_read, roles.my_pos + 1, forwards.dst),
+    )
+
+    # Tail acknowledges the write straight to the client (CR semantics).
+    wack = is_write & is_tail
+    wreplies = Msg(
+        op=jnp.where(wack, OP_WRITE_REPLY, 0),
+        key=inbox.key,
+        value=inbox.value,
+        seq=wseq,
+        src=jnp.full((B,), roles.my_pos, jnp.int32),
+        dst=jnp.where(wack, TO_CLIENT, NOWHERE),
+        client=inbox.client,
+        entry=inbox.entry,
+        qid=inbox.qid,
+        t_inject=inbox.t_inject,
+        extra=inbox.extra,
+    ).mask(wack)
+
+    outbox = Msg.concat([replies, forwards, relays, wreplies])
+    return new_store, outbox

@@ -1,0 +1,213 @@
+"""Versioned object store - the ``objects_store`` register array of the paper.
+
+Layout per node (paper §III.A.1, adapted):
+
+* ``values[K, V, W]``  - K objects x V version cells x W value words.
+  Cell 0 always holds the last *tail-committed* ("clean") value.  Cells
+  ``1..pending`` hold dirty (not yet acknowledged) versions in increasing
+  sequence order.
+* ``seqs[K, V]``       - the write sequence number of each stored version.
+* ``pending[K]``       - number of dirty versions; the object is *clean* iff
+  ``pending == 0`` (the paper's implicit-state trick: clean iff the latest
+  value lives in the first cell).  The paper keeps two duplicate registers
+  (``read_index`` / ``write_index``) because a Tofino register can be
+  accessed once per pipeline pass; TPUs have no such constraint so we keep
+  one array (deviation documented in DESIGN.md §3).
+* ``next_seq[K]``      - per-key monotone counter used by the entry node to
+  stamp client writes (our 32-bit answer to NetChain's 16-bit SEQ overflow).
+
+All operations are functional (return a new ``Store``) and *batch
+serialized*: concurrent writes to the same key within one query batch get
+consecutive version slots via a stable within-batch rank, so the result is
+identical to processing the batch one query at a time.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import ChainConfig
+
+
+class Store(NamedTuple):
+    values: jax.Array    # [K, V, W] int32
+    seqs: jax.Array      # [K, V] int32 (-1 = empty cell)
+    pending: jax.Array   # [K] int32
+    next_seq: jax.Array  # [K] int32
+
+    @property
+    def num_keys(self) -> int:
+        return self.values.shape[0]
+
+    @property
+    def num_versions(self) -> int:
+        return self.values.shape[1]
+
+
+def init_store(cfg: ChainConfig) -> Store:
+    K, V, W = cfg.num_keys, cfg.num_versions, cfg.value_words
+    return Store(
+        values=jnp.zeros((K, V, W), jnp.int32),
+        seqs=jnp.full((K, V), -1, jnp.int32).at[:, 0].set(0),
+        pending=jnp.zeros((K,), jnp.int32),
+        next_seq=jnp.ones((K,), jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Batch-rank helpers (serialization semantics within a batch)
+# ---------------------------------------------------------------------------
+def batch_rank(keys: jax.Array, active: jax.Array) -> jax.Array:
+    """rank[i] = #{j < i : active[j] and keys[j] == keys[i]} (stable order).
+
+    O(B^2) bitmatrix - B is a few thousand at most in simulation; the Pallas
+    engine serializes within its block instead.
+    """
+    b = keys.shape[0]
+    same = (keys[None, :] == keys[:, None]) & active[None, :] & active[:, None]
+    lower = jnp.tril(jnp.ones((b, b), bool), k=-1)
+    return jnp.sum(same & lower, axis=1).astype(jnp.int32)
+
+
+def per_key_count(keys: jax.Array, active: jax.Array, num_keys: int) -> jax.Array:
+    """count[k] = number of active batch entries with key k."""
+    return jnp.zeros((num_keys,), jnp.int32).at[keys].add(active.astype(jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Reads
+# ---------------------------------------------------------------------------
+def read_clean(store: Store, keys: jax.Array):
+    """Value + seq of the committed version (cell 0). [B] -> ([B,W],[B])."""
+    return store.values[keys, 0], store.seqs[keys, 0]
+
+
+def read_latest(store: Store, keys: jax.Array):
+    """Latest version: the newest dirty cell if any, else cell 0 (tail's
+    dirty_read in Algorithm 1)."""
+    slot = store.pending[keys]  # dirty cells live at 1..pending; latest == pending
+    return (
+        store.values[keys, slot],
+        store.seqs[keys, slot],
+    )
+
+
+def is_clean(store: Store, keys: jax.Array) -> jax.Array:
+    return store.pending[keys] == 0
+
+
+# ---------------------------------------------------------------------------
+# Writes
+# ---------------------------------------------------------------------------
+def assign_seqs(store: Store, keys: jax.Array, needs: jax.Array):
+    """Stamp unsequenced client writes with per-key monotone seqs.
+
+    Returns (new_store, seqs[B]).  Entries with needs==False keep seq
+    untouched (-1 sentinel replaced by caller).
+    """
+    rank = batch_rank(keys, needs)
+    seqs = store.next_seq[keys] + rank
+    counts = per_key_count(keys, needs, store.num_keys)
+    new_next = store.next_seq + counts
+    return store._replace(next_seq=new_next), jnp.where(needs, seqs, -1)
+
+
+def append_dirty(store: Store, keys, values, seqs, active):
+    """Append dirty versions at cells ``pending+1+rank``; drop if the window
+    is exceeded (Algorithm 1 line 22-23).
+
+    Returns (new_store, accepted[B] bool).
+    """
+    V = store.num_versions
+    rank = batch_rank(keys, active)
+    slot = store.pending[keys] + 1 + rank
+    accepted = active & (slot <= V - 1)
+    # Scatter accepted writes; (key, slot) pairs are unique among accepted
+    # entries by construction, and rejected entries scatter out of bounds
+    # (mode='drop') so they can't race accepted ones.
+    safe_slot = jnp.where(accepted, slot, V)
+    safe_key = jnp.where(accepted, keys, store.num_keys)
+    new_values = store.values.at[safe_key, safe_slot].set(values, mode="drop")
+    new_seqs = store.seqs.at[safe_key, safe_slot].set(seqs, mode="drop")
+    counts = jnp.zeros((store.num_keys,), jnp.int32).at[keys].add(
+        jnp.where(accepted, 1, 0)
+    )
+    return (
+        store._replace(values=new_values, seqs=new_seqs, pending=store.pending + counts),
+        accepted,
+    )
+
+
+def commit(store: Store, keys, values, seqs, active):
+    """Tail commit / ACK application: install ``value`` as the clean version
+    of ``key`` (cell 0) for the *largest* seq per key in the batch, then
+    compact: delete all dirty versions with seq <= committed seq and shift
+    the remainder down (versions are stored in increasing seq order).
+    """
+    K, V, W = store.values.shape
+    active = active.astype(bool)
+
+    # Per-key max committed seq in this batch (acks are cumulative).
+    neg = jnp.full((K,), -1, jnp.int32)
+    ack_seq = neg.at[keys].max(jnp.where(active, seqs, -1))
+
+    # Which batch entry supplies the value for each key: the one whose seq
+    # equals the per-key max.  Non-winners scatter out of bounds and are
+    # dropped - scattering a where()-writeback instead would race the
+    # winner (XLA scatter order with duplicate indices is undefined).
+    is_winner = active & (seqs == ack_seq[keys]) & (seqs > store.seqs[keys, 0])
+    K_oob = store.num_keys  # out-of-bounds sentinel row
+    safe_key = jnp.where(is_winner, keys, K_oob)
+    cell0 = store.values[:, 0, :]
+    new_cell0 = cell0.at[safe_key].set(values, mode="drop")
+    seq0 = store.seqs[:, 0]
+    new_seq0 = seq0.at[safe_key].set(seqs, mode="drop")
+
+    # Monotone guard: never roll the committed seq backwards.
+    effective = jnp.maximum(ack_seq, seq0)  # per-key commit floor after batch
+    touched = ack_seq >= 0
+
+    # Compact dirty region per key: keep dirty cells with seq > effective.
+    cell_idx = jnp.arange(V)[None, :]
+    dirty = (cell_idx >= 1) & (cell_idx <= store.pending[:, None])
+    keep = dirty & (store.seqs > effective[:, None]) & touched[:, None]
+    keep = jnp.where(touched[:, None], keep, dirty)  # untouched keys unchanged
+    # Stable argsort: kept dirty cells first, in original (seq) order.
+    order = jnp.argsort(~keep, axis=1, stable=True)  # [K, V]
+    kept_vals = jnp.take_along_axis(store.values, order[:, :, None], axis=1)
+    kept_seqs = jnp.take_along_axis(store.seqs, order[:, :, None].squeeze(-1), axis=1)
+    n_keep = keep.sum(axis=1).astype(jnp.int32)
+
+    # Rebuild rows only for touched keys; shift kept versions to cells 1..n.
+    shifted_vals = jnp.concatenate([new_cell0[:, None, :], kept_vals[:, : V - 1]], axis=1)
+    shifted_seqs = jnp.concatenate([new_seq0[:, None], kept_seqs[:, : V - 1]], axis=1)
+    # Blank cells beyond the kept region.
+    valid = cell_idx <= n_keep[:, None]
+    shifted_seqs = jnp.where(valid, shifted_seqs, -1)
+
+    out_values = jnp.where(touched[:, None, None], shifted_vals, store.values)
+    out_seqs = jnp.where(touched[:, None], shifted_seqs, store.seqs)
+    out_pending = jnp.where(touched, n_keep, store.pending)
+    return store._replace(values=out_values, seqs=out_seqs, pending=out_pending)
+
+
+def overwrite_clean(store: Store, keys, values, seqs, active):
+    """NetChain-style single-version write: cell 0 := value iff seq newer
+    (SEQ mitigates out-of-order delivery, paper §II.B.2)."""
+    active = active.astype(bool)
+    newer = active & (seqs > store.seqs[keys, 0])
+    # Serialize same-key duplicates: highest seq wins; losers drop OOB.
+    K = store.num_keys
+    best = jnp.full((K,), -1, jnp.int32).at[keys].max(jnp.where(newer, seqs, -1))
+    win = newer & (seqs == best[keys])
+    safe_key = jnp.where(win, keys, K)
+    cell0 = store.values[:, 0, :]
+    new_cell0 = cell0.at[safe_key].set(values, mode="drop")
+    seq0 = store.seqs[:, 0]
+    new_seq0 = seq0.at[safe_key].set(seqs, mode="drop")
+    return store._replace(
+        values=store.values.at[:, 0, :].set(new_cell0),
+        seqs=store.seqs.at[:, 0].set(new_seq0),
+    )

@@ -1,0 +1,190 @@
+"""Core wire-level and state types for the in-network KV platform.
+
+The paper's packet format is adapted to a TPU-native structure-of-arrays
+message batch (``Msg``): fixed-width fields, branch-free processing. Byte
+accounting mirrors the paper exactly so the traffic model in
+``core/metrics.py`` reproduces the evaluation's packet/byte counts.
+
+NetCRAQ header (paper §III.A.2): KV_OP (2 bit) + KEY_ID (32 bit) +
+VALUE (128 bit) over UDP  -> 20 overhead bytes (as reported in §IV.A).
+
+NetChain header (paper §II.B.2): OP, KEY, VALUE, SEQ (16 bit), SC, S_k
+(one 32-bit IP per chain node) -> 58 bytes at chain length 4, +4 bytes per
+additional node (paper §II.B.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Operation codes (KV_OP field). NOP marks an empty slot in a padded batch.
+# ---------------------------------------------------------------------------
+OP_NOP = 0
+OP_READ = 1
+OP_WRITE = 2
+OP_ACK = 3
+OP_READ_REPLY = 4
+OP_WRITE_REPLY = 5
+
+OP_NAMES = {
+    OP_NOP: "NOP",
+    OP_READ: "READ",
+    OP_WRITE: "WRITE",
+    OP_ACK: "ACK",
+    OP_READ_REPLY: "READ_REPLY",
+    OP_WRITE_REPLY: "WRITE_REPLY",
+}
+
+# Value payload width: 128-bit VALUE field == 4 x 32-bit words (paper default).
+VALUE_WORDS = 4
+
+# src ids >= CLIENT_BASE denote clients; below are chain node positions.
+CLIENT_BASE = 1 << 20
+
+# dst == NOWHERE means "message exits the system / empty slot".
+NOWHERE = -1
+# dst == MULTICAST: the P4 PRE analogue - router fans the packet out to every
+# live chain node except the sender (used for tail ACKs).
+MULTICAST = -2
+# dst == TO_CLIENT: reply leaves the chain for the originating client.
+TO_CLIENT = -3
+
+# ---------------------------------------------------------------------------
+# Wire-format byte accounting (overhead bytes layered over UDP).
+# ---------------------------------------------------------------------------
+NETCRAQ_HEADER_BYTES = 20
+
+
+def netchain_header_bytes(chain_len: int) -> int:
+    """58 bytes at 4 nodes, +4 bytes (one IPv4) per extra node (paper §II.B)."""
+    return 58 + 4 * (chain_len - 4)
+
+
+class Msg(NamedTuple):
+    """A batch of messages / queries, structure-of-arrays, fixed width.
+
+    All fields have leading batch dim B.  Empty slots have op == OP_NOP and
+    dst == NOWHERE.
+    """
+
+    op: jax.Array        # [B] int32, OP_*
+    key: jax.Array       # [B] int32, key id (direct register index)
+    value: jax.Array     # [B, VALUE_WORDS] int32 payload
+    seq: jax.Array       # [B] int32 per-key write sequence (-1 = unassigned)
+    src: jax.Array       # [B] int32 originator (client id or node position)
+    dst: jax.Array       # [B] int32 destination node position / sentinel
+    client: jax.Array    # [B] int32 original client id (preserved across fwd)
+    entry: jax.Array     # [B] int32 chain position where the query entered
+    qid: jax.Array       # [B] int32 query id for latency tracking
+    t_inject: jax.Array  # [B] int32 tick the query entered the system
+    extra: jax.Array     # [B] int32 accumulated extra hop-ticks (multi-hop
+                         #     unicast delivered in one sim tick)
+
+    @property
+    def batch(self) -> int:
+        return self.op.shape[0]
+
+    @staticmethod
+    def empty(batch: int, value_words: int = VALUE_WORDS) -> "Msg":
+        z = jnp.zeros((batch,), jnp.int32)
+        return Msg(
+            op=z,
+            key=z,
+            value=jnp.zeros((batch, value_words), jnp.int32),
+            seq=z - 1,
+            src=z,
+            dst=jnp.full((batch,), NOWHERE, jnp.int32),
+            client=z,
+            entry=z,
+            qid=z - 1,
+            t_inject=z,
+            extra=z,
+        )
+
+    def mask(self, keep: jax.Array) -> "Msg":
+        """Blank out slots where ``keep`` is False (turn them into NOPs)."""
+        keep = keep.astype(bool)
+        return Msg(
+            op=jnp.where(keep, self.op, OP_NOP),
+            key=jnp.where(keep, self.key, 0),
+            value=jnp.where(keep[:, None], self.value, 0),
+            seq=jnp.where(keep, self.seq, -1),
+            src=jnp.where(keep, self.src, 0),
+            dst=jnp.where(keep, self.dst, NOWHERE),
+            client=jnp.where(keep, self.client, 0),
+            entry=jnp.where(keep, self.entry, 0),
+            qid=jnp.where(keep, self.qid, -1),
+            t_inject=jnp.where(keep, self.t_inject, 0),
+            extra=jnp.where(keep, self.extra, 0),
+        )
+
+    def live(self) -> jax.Array:
+        return self.op != OP_NOP
+
+    @staticmethod
+    def concat(msgs: list["Msg"]) -> "Msg":
+        return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *msgs)
+
+
+@dataclasses.dataclass(frozen=True)
+class ChainConfig:
+    """Static configuration of one replication chain."""
+
+    n_nodes: int = 4
+    num_keys: int = 256
+    num_versions: int = 4        # version window per object (cell 0 = clean)
+    value_words: int = VALUE_WORDS
+    protocol: str = "netcraq"    # "netcraq" | "netchain"
+
+    def __post_init__(self):
+        assert self.n_nodes >= 2, "chain needs at least head and tail"
+        assert self.num_versions >= 2, "need >=1 dirty slot besides cell 0"
+        assert self.protocol in ("netcraq", "netchain")
+
+    @property
+    def header_bytes(self) -> int:
+        if self.protocol == "netcraq":
+            return NETCRAQ_HEADER_BYTES
+        return netchain_header_bytes(self.n_nodes)
+
+    @property
+    def payload_bytes(self) -> int:
+        return 4 * self.value_words
+
+
+class Roles(NamedTuple):
+    """Per-node role metadata, installed by the control plane (not parsed
+    from packets - the paper's key design difference vs NetChain)."""
+
+    my_pos: jax.Array     # [] int32 position of this node in the chain
+    head_pos: jax.Array   # [] int32
+    tail_pos: jax.Array   # [] int32
+    n_nodes: jax.Array    # [] int32 current live chain length
+
+    @property
+    def is_tail(self) -> jax.Array:
+        return self.my_pos == self.tail_pos
+
+    @property
+    def is_head(self) -> jax.Array:
+        return self.my_pos == self.head_pos
+
+    @staticmethod
+    def for_chain(n_nodes: int, my_pos) -> "Roles":
+        return Roles(
+            my_pos=jnp.asarray(my_pos, jnp.int32),
+            head_pos=jnp.asarray(0, jnp.int32),
+            tail_pos=jnp.asarray(n_nodes - 1, jnp.int32),
+            n_nodes=jnp.asarray(n_nodes, jnp.int32),
+        )
+
+
+def value_from_int(x, value_words: int = VALUE_WORDS) -> jax.Array:
+    """Pack a scalar int into a VALUE payload (word 0 = x, rest 0)."""
+    x = jnp.asarray(x, jnp.int32)
+    pads = [jnp.zeros_like(x)] * (value_words - 1)
+    return jnp.stack([x, *pads], axis=-1)

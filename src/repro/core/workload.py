@@ -1,0 +1,98 @@
+"""Workload generation - read/write mixes matching the paper's evaluation.
+
+The paper evaluates read-mostly workloads (Google F1 380:1, Facebook TAO
+500:1 read:write) plus sweeps: read-only queries at varying distance from
+the tail (Fig 3), rising QPS (Fig 4), write percentage 0..100 step 25
+(Fig 5), chain lengths 4..8 (Fig 6).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import (
+    CLIENT_BASE,
+    NOWHERE,
+    OP_NOP,
+    OP_READ,
+    OP_WRITE,
+    ChainConfig,
+    Msg,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadConfig:
+    ticks: int = 32
+    queries_per_tick: int = 32      # per entry node
+    write_fraction: float = 0.0
+    entry_node: int | None = None   # None = spread uniformly over nodes
+    key_skew: str = "uniform"       # "uniform" | "zipf"
+    zipf_a: float = 1.2
+    seed: int = 0
+
+
+def _sample_keys(key, shape, num_keys: int, cfg: WorkloadConfig):
+    if cfg.key_skew == "uniform":
+        return jax.random.randint(key, shape, 0, num_keys, jnp.int32)
+    # Zipf via inverse-CDF on a precomputed table (static num_keys).
+    ranks = jnp.arange(1, num_keys + 1, dtype=jnp.float32)
+    probs = ranks ** (-cfg.zipf_a)
+    probs = probs / probs.sum()
+    cdf = jnp.cumsum(probs)
+    u = jax.random.uniform(key, shape)
+    return jnp.searchsorted(cdf, u).astype(jnp.int32).clip(0, num_keys - 1)
+
+
+def make_schedule(chain_cfg: ChainConfig, wl: WorkloadConfig) -> Msg:
+    """Build a [T, n, q] injection schedule of client queries.
+
+    Writes always enter at the head (paper: 'Write queries originate from
+    the head'); reads enter at ``entry_node`` (or spread uniformly).
+    """
+    T, n, q = wl.ticks, chain_cfg.n_nodes, wl.queries_per_tick
+    rng = jax.random.PRNGKey(wl.seed)
+    k_key, k_op, k_val = jax.random.split(rng, 3)
+
+    shape = (T, n, q)
+    keys = _sample_keys(k_key, shape, chain_cfg.num_keys, wl)
+    is_write = jax.random.uniform(k_op, shape) < wl.write_fraction
+    vals = jax.random.randint(k_val, shape, 1, 1 << 20, jnp.int32)
+
+    node_idx = jnp.arange(n, dtype=jnp.int32)[None, :, None]
+    if wl.entry_node is None:
+        active_reads = ~is_write
+    else:
+        active_reads = (~is_write) & (node_idx == wl.entry_node)
+    # writes ride on the head node's injection lane
+    active_writes = is_write & (node_idx == 0)
+    active = active_reads | active_writes
+
+    op = jnp.where(
+        active, jnp.where(is_write, OP_WRITE, OP_READ), OP_NOP
+    ).astype(jnp.int32)
+    value = jnp.zeros(shape + (chain_cfg.value_words,), jnp.int32)
+    value = value.at[..., 0].set(jnp.where(is_write & active, vals, 0))
+
+    tick_idx = jnp.arange(T, dtype=jnp.int32)[:, None, None]
+    qid = (
+        tick_idx * (n * q)
+        + node_idx * q
+        + jnp.arange(q, dtype=jnp.int32)[None, None, :]
+    )
+    z = jnp.zeros(shape, jnp.int32)
+    return Msg(
+        op=op,
+        key=jnp.where(active, keys, 0),
+        value=value,
+        seq=z - 1,
+        src=jnp.where(active, CLIENT_BASE + qid % 1024, 0),
+        dst=jnp.where(active, node_idx * jnp.ones_like(op), NOWHERE),
+        client=jnp.where(active, CLIENT_BASE + qid % 1024, 0),
+        entry=z,
+        qid=jnp.where(active, qid, -1),
+        t_inject=tick_idx * jnp.ones_like(op),
+        extra=z,
+    )

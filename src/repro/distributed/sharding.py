@@ -1,0 +1,293 @@
+"""Logical-axis sharding rules (DP/TP/EP/SP) for pjit/GSPMD.
+
+Models annotate activations with *logical* axes via ``shard(x, ...)``;
+a context-installed rule set maps logical -> physical mesh axes.  Outside a
+rule context the annotations are no-ops, so single-device smoke tests and
+the pure-CPU benchmarks run the exact same model code as the 512-chip
+dry-run.
+
+Physical axes (launch/mesh.py): ``pod`` x ``data`` x ``model``.
+  batch   -> (pod, data)   activations' batch dim (DP)
+  heads   -> model         attention heads (TP); replicated if indivisible
+  kv      -> model         kv heads (GQA); replicated if indivisible
+  ff      -> model         MLP inner dim (TP)
+  vocab   -> model         embedding/logits vocab dim (TP)
+  experts -> model         MoE expert dim (EP)
+  seq_kv  -> data          KV-cache length for flash-decoding SP (long ctx)
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+import re
+from typing import Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshRules:
+    batch: tuple | str | None = None
+    heads: str | None = None
+    kv: str | None = None
+    ff: str | None = None
+    vocab: str | None = None
+    experts: str | None = None
+    seq_kv: str | None = None
+    seq_sp: str | None = None     # sequence-parallel residual stream (TP-SP)
+    fsdp: str | None = None       # ZeRO-3 param sharding over the data axis
+
+    def axis(self, logical: Optional[str]):
+        if logical is None:
+            return None
+        return getattr(self, logical)
+
+
+SINGLE_POD = MeshRules(
+    batch=("data",), heads="model", kv="model", ff="model",
+    vocab="model", experts="model", seq_kv="data", seq_sp="model",
+    fsdp="data",
+)
+MULTI_POD = MeshRules(
+    batch=("pod", "data"), heads="model", kv="model", ff="model",
+    vocab="model", experts="model", seq_kv="data", seq_sp="model",
+    fsdp="data",
+)
+# Serving rules: NO FSDP.  Weight-gathering per decode step is the classic
+# FSDP-inference anti-pattern - the baseline dry-run measured it as an
+# all-gather of the full model EVERY token (11.3 GB/step for qwen2.5-3b,
+# 58.8 GB/step for internvl2-26b; EXPERIMENTS.md §Perf decode iteration 2).
+# Pure TP keeps weights resident; bf16 serving params fit every arch.
+SINGLE_POD_SERVE = dataclasses.replace(SINGLE_POD, fsdp=None)
+MULTI_POD_SERVE = dataclasses.replace(MULTI_POD, fsdp=None)
+
+_RULES: contextvars.ContextVar[Optional[MeshRules]] = contextvars.ContextVar(
+    "repro_mesh_rules", default=None
+)
+# axis sizes of the active mesh, used for divisibility fallbacks
+_AXIS_SIZES: contextvars.ContextVar[dict] = contextvars.ContextVar(
+    "repro_axis_sizes", default={}
+)
+
+
+@contextlib.contextmanager
+def use_rules(rules: MeshRules, mesh=None):
+    tok = _RULES.set(rules)
+    tok2 = _AXIS_SIZES.set(
+        dict(zip(mesh.axis_names, mesh.devices.shape)) if mesh is not None else {}
+    )
+    try:
+        yield
+    finally:
+        _RULES.reset(tok)
+        _AXIS_SIZES.reset(tok2)
+
+
+def active_rules() -> Optional[MeshRules]:
+    return _RULES.get()
+
+
+def _resolve(dim_size: int, logical: Optional[str]):
+    """Map a logical axis to physical axes, dropping indivisible shardings
+    (e.g. qwen2.5's 2 kv heads on a 16-way model axis -> replicate)."""
+    rules = _RULES.get()
+    if rules is None or logical is None:
+        return None
+    phys = rules.axis(logical)
+    if phys is None:
+        return None
+    sizes = _AXIS_SIZES.get()
+    names = phys if isinstance(phys, tuple) else (phys,)
+    total = 1
+    for nm in names:
+        total *= sizes.get(nm, 1)
+    if total > 1 and dim_size % total != 0:
+        return None
+    return phys
+
+
+def shard(x: jax.Array, *logical):
+    """Annotate ``x`` with logical axes (None entries = replicated dim)."""
+    if _RULES.get() is None:
+        return x
+    spec = P(*[_resolve(x.shape[i], l) for i, l in enumerate(logical)])
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding: tree-path pattern rules
+# ---------------------------------------------------------------------------
+# Patterns are matched against '/'-joined tree paths.  ``stacked`` subtrees
+# (scanned layers) carry a leading layer dim -> specs shifted right by one.
+_PARAM_RULES: list[tuple[str, tuple]] = [
+    # embed: shard d over model -> the token gather is shard-local (no
+    # table all-gather) and the table grad reduces in [V, d/16] pieces.
+    # head: shard vocab over model -> logits come out naturally sharded;
+    # FSDP-sharding either one forces a full-table gather per step (seen
+    # as 622 MB/step f32 gathers in the probe HLO - EXPERIMENTS.md §Perf).
+    (r"embed/table$", (None, "heads")),
+    (r"head/w$", (None, "vocab")),
+    (r"(wq|wqkv)/w$", ("fsdp", "heads")),
+    (r"(wk|wv)/w$", ("fsdp", None)),       # kv dim too small for 16-way TP
+    (r"(wq|wqkv)/b$", ("heads",)),
+    (r"(wk|wv)/b$", (None,)),
+    (r"wo/w$", ("heads", "fsdp")),
+    (r"(w_gate|w_up)/w$", ("fsdp", "ff")),
+    (r"w_down/w$", ("ff", "fsdp")),
+    (r"(w_gate|w_up)/b$", ("ff",)),
+    (r"router/w$", (None, None)),
+    (r"experts/(w_gate|w_up)$", ("experts", "fsdp", None)),
+    (r"experts/w_down$", ("experts", None, "fsdp")),
+    (r"mamba/in_proj/w$", ("fsdp", "heads")),
+    (r"mamba/out_proj/w$", ("heads", "fsdp")),
+    (r"mamba/conv_w$", (None, "heads")),
+    (r"mamba/(A_log|D|dt_bias)$", ("heads",)),
+    (r"pos_dec$", (None, "fsdp")),
+    (r"(scale|bias)$", (None,)),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_pspec(path_str: str, ndim: int, shape, rules: MeshRules,
+                axis_sizes: dict, stacked: bool) -> P:
+    for pat, logical in _PARAM_RULES:
+        if re.search(pat, path_str):
+            offset = 1 if stacked else 0
+            if len(logical) + offset != ndim:
+                # rule arity mismatch (e.g. unstacked variant) -> best effort
+                if len(logical) == ndim:
+                    offset = 0
+                else:
+                    return P()
+            spec = [None] * ndim
+            for i, logi in enumerate(logical):
+                phys = rules.axis(logi)
+                if phys is None:
+                    continue
+                names = phys if isinstance(phys, tuple) else (phys,)
+                total = 1
+                for nm in names:
+                    total *= axis_sizes.get(nm, 1)
+                if total > 1 and shape[i + offset] % total == 0:
+                    spec[i + offset] = phys
+            return P(*spec)
+    return P()
+
+
+def build_param_specs(params, rules: MeshRules, mesh, stacked_marker="layers"):
+    """PartitionSpec pytree for a param tree; subtrees under a key named
+    ``stacked_marker`` are treated as layer-stacked (leading layer dim)."""
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def f(path, leaf):
+        ps = _path_str(path)
+        stacked = stacked_marker in ps.split("/")
+        return param_pspec(ps, leaf.ndim, leaf.shape, rules, axis_sizes, stacked)
+
+    return jax.tree_util.tree_map_with_path(f, params)
+
+
+def cache_specs(cache, rules: MeshRules, mesh):
+    """PartitionSpec tree for a decode/prefill cache pytree.
+
+    KV caches [L, B, T, KV, D]: batch over data when divisible; the head
+    axis prefers KV -> model, falls back to head_dim -> model (GQA counts
+    like qwen's kv=2 can't split 16 ways), and when the batch can't shard
+    (long_500k B=1) the cache LENGTH shards over data (sequence-parallel
+    flash-decoding, DESIGN.md §6).  SSM states shard batch x heads.
+    """
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def ax_size(logical):
+        phys = rules.axis(logical)
+        if phys is None:
+            return 1
+        names = phys if isinstance(phys, tuple) else (phys,)
+        total = 1
+        for nm in names:
+            total *= axis_sizes.get(nm, 1)
+        return total
+
+    def f(path, leaf):
+        ps = _path_str(path)
+        nd = leaf.ndim
+        shape = leaf.shape
+        if nd == 0:
+            return P()
+        if "kv" in ps.split("/") or "cross" in ps.split("/"):
+            # [..., B, T, KV, D] with 0+ leading layer/group dims
+            lead = nd - 4
+            b, t, kvh, dh = shape[lead:]
+            spec = [None] * nd
+            dsz, msz = ax_size("batch"), ax_size("heads")
+            if b % dsz == 0 and dsz > 1:
+                spec[lead] = rules.axis("batch")
+            elif t % ax_size("seq_kv") == 0:
+                spec[lead + 1] = rules.axis("seq_kv")
+            if kvh % msz == 0 and msz > 1:
+                spec[lead + 2] = rules.axis("kv")
+            elif dh % msz == 0 and msz > 1:
+                spec[lead + 3] = rules.axis("heads")
+            return P(*spec)
+        if "conv" in ps.split("/"):  # before "ssm": paths look like ssm/conv
+            lead = nd - 3
+            b, _, ch = shape[lead:]
+            spec = [None] * nd
+            if b % ax_size("batch") == 0 and ax_size("batch") > 1:
+                spec[lead] = rules.axis("batch")
+            if ch % ax_size("heads") == 0 and ax_size("heads") > 1:
+                spec[lead + 2] = rules.axis("heads")
+            return P(*spec)
+        if "ssm" in ps.split("/"):
+            lead = nd - 4
+            b, h = shape[lead], shape[lead + 1]
+            spec = [None] * nd
+            if b % ax_size("batch") == 0 and ax_size("batch") > 1:
+                spec[lead] = rules.axis("batch")
+            if h % ax_size("heads") == 0 and ax_size("heads") > 1:
+                spec[lead + 1] = rules.axis("heads")
+            return P(*spec)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(f, cache)
+
+
+def batch_specs(batch, rules: MeshRules, mesh=None):
+    """PartitionSpec tree for model input batches (tokens/labels/embeds).
+    Batch dims that don't divide the DP axes (long_500k's B=1) replicate."""
+    axis_sizes = (
+        dict(zip(mesh.axis_names, mesh.devices.shape)) if mesh is not None else {}
+    )
+    phys = rules.axis("batch")
+    names = phys if isinstance(phys, tuple) else (phys,) if phys else ()
+    total = 1
+    for nm in names:
+        total *= axis_sizes.get(nm, 1)
+
+    def f(path, leaf):
+        spec = [None] * leaf.ndim
+        if leaf.ndim >= 1 and (total <= 1 or leaf.shape[0] % total == 0):
+            spec[0] = phys
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(f, batch)
+
+
+def specs_to_shardings(specs, mesh):
+    return jax.tree.map(
+        lambda s: jax.sharding.NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,208 @@
+"""Attention entry point: three interchangeable implementations.
+
+  impl="naive"   - dense softmax reference (materializes the S^2 scores;
+                   the oracle, and the §Perf *baseline*)
+  impl="chunked" - online-softmax over KV blocks expressed in pure lax.scan
+                   ("flash in XLA"): O(S) memory, GQA-aware (KV never
+                   repeated), compiles on every backend - the production
+                   path for the CPU-emulated dry-run
+  impl="pallas"  - the Pallas TPU kernel (kernel.py), used on real TPUs and
+                   validated in interpret mode by the kernel tests
+
+The chunked path is what makes prefill_32k lowerable at all: naive scores
+for a 32k context are ~[B,H,32k,32k] f32 per device - hundreds of GiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import kernel as _k
+from repro.kernels.flash_attention import ref as _ref
+
+NEG_INF = -1e30
+
+
+def _pad_blocks(q, k, v, qc, kc):
+    B, HQ, S, D = q.shape
+    _, HKV, SK, _ = k.shape
+    pad_q = (-S) % qc
+    pad_k = (-SK) % kc
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    return q, k, v, S + pad_q, SK + pad_k
+
+
+def _mask(qi, ki, qc, kc, S, SK, causal):
+    q_pos = qi * qc + jax.lax.broadcasted_iota(jnp.int32, (qc, kc), 0)
+    k_pos = ki * kc + jax.lax.broadcasted_iota(jnp.int32, (qc, kc), 1)
+    m = k_pos < SK
+    if causal:
+        m = m & (k_pos <= q_pos + (SK - S))
+    return m
+
+
+def _chunked_fwd_impl(q, k, v, causal, scale, qc, kc):
+    B, HQ, S, D = q.shape
+    _, HKV, SK, _ = k.shape
+    G = HQ // HKV
+    qp, kp, vp, Sp, SKp = _pad_blocks(q, k, v, qc, kc)
+    nq, nk = Sp // qc, SKp // kc
+    qb = qp.reshape(B, HKV, G, nq, qc, D).transpose(3, 0, 1, 2, 4, 5) * scale
+    kb = kp.reshape(B, HKV, nk, kc, D).transpose(2, 0, 1, 3, 4)
+    vb = vp.reshape(B, HKV, nk, kc, D).transpose(2, 0, 1, 3, 4)
+
+    def q_body(_, q_blk_idx):
+        q_blk, qi = q_blk_idx
+        q32 = q_blk.astype(jnp.float32)
+
+        def kv_body(carry, kv_blk):
+            m, l, acc = carry
+            k_blk, v_blk, ki = kv_blk
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", q32,
+                           k_blk.astype(jnp.float32))
+            msk = _mask(qi, ki, qc, kc, S, SK, causal)
+            s = jnp.where(msk[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p, v_blk.astype(jnp.float32)
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, HKV, G, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, HKV, G, qc), jnp.float32)
+        a0 = jnp.zeros((B, HKV, G, qc, D), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_body, (m0, l0, a0), (kb, vb, jnp.arange(nk))
+        )
+        out = (acc / jnp.maximum(l, 1e-37)[..., None]).astype(q.dtype)
+        lse = m + jnp.log(jnp.maximum(l, 1e-37))
+        return None, (out, lse)
+
+    _, (ob, lseb) = jax.lax.scan(q_body, None, (qb, jnp.arange(nq)))
+    o = ob.transpose(1, 2, 3, 0, 4, 5).reshape(B, HQ, Sp, D)[:, :, :S]
+    lse = lseb.transpose(1, 2, 3, 0, 4).reshape(B, HKV, G, Sp)[..., :S]
+    return o, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _chunked_core(q, k, v, causal, scale, qc, kc):
+    o, _ = _chunked_fwd_impl(q, k, v, causal, scale, qc, kc)
+    return o
+
+
+def _chunked_core_fwd(q, k, v, causal, scale, qc, kc):
+    o, lse = _chunked_fwd_impl(q, k, v, causal, scale, qc, kc)
+    return o, (q, k, v, o, lse)
+
+
+def _chunked_core_bwd(causal, scale, qc, kc, res, do):
+    """Flash backward: recompute scores blockwise from saved (q,k,v,o,lse);
+    O(S) residuals instead of autodiff-through-scan's per-block carries."""
+    q, k, v, o, lse = res
+    B, HQ, S, D = q.shape
+    _, HKV, SK, _ = k.shape
+    G = HQ // HKV
+    qp, kp, vp, Sp, SKp = _pad_blocks(q, k, v, qc, kc)
+    dop = jnp.pad(do, ((0, 0), (0, 0), (0, Sp - S), (0, 0)))
+    op = jnp.pad(o, ((0, 0), (0, 0), (0, Sp - S), (0, 0)))
+    # padded q rows get lse=+BIG so p = exp(s - lse) == 0 (no NaN fanout)
+    lsep = jnp.pad(lse, ((0, 0), (0, 0), (0, 0), (0, Sp - S)),
+                   constant_values=-NEG_INF)
+    nq, nk = Sp // qc, SKp // kc
+
+    qs = qp.reshape(B, HKV, G, nq, qc, D).transpose(3, 0, 1, 2, 4, 5) \
+        .astype(jnp.float32) * scale
+    kb = kp.reshape(B, HKV, nk, kc, D).transpose(2, 0, 1, 3, 4) \
+        .astype(jnp.float32)
+    vb = vp.reshape(B, HKV, nk, kc, D).transpose(2, 0, 1, 3, 4) \
+        .astype(jnp.float32)
+    dob = dop.reshape(B, HKV, G, nq, qc, D).transpose(3, 0, 1, 2, 4, 5) \
+        .astype(jnp.float32)
+    lseb = lsep.reshape(B, HKV, G, nq, qc).transpose(3, 0, 1, 2, 4)
+    # delta_i = rowsum(dO * O)
+    delta = (dop.astype(jnp.float32) * op.astype(jnp.float32)).sum(-1)
+    db = delta.reshape(B, HKV, G, nq, qc).transpose(3, 0, 1, 2, 4)
+
+    def q_outer(carry, xs):
+        dk_acc, dv_acc = carry            # [B,HKV,SKp,D] f32
+        q_i, do_i, lse_i, d_i, qi = xs
+
+        def kv_inner(c, xs2):
+            dq_i, dk_a, dv_a = c
+            k_j, v_j, ki = xs2
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", q_i, k_j)
+            msk = _mask(qi, ki, qc, kc, S, SK, causal)
+            s = jnp.where(msk[None, None, None], s, NEG_INF)
+            p = jnp.exp(s - lse_i[..., None])          # [B,H,G,qc,kc]
+            dv_j = jnp.einsum("bhgqk,bhgqd->bhkd", p, do_i)
+            dp = jnp.einsum("bhgqd,bhkd->bhgqk", do_i, v_j)
+            ds = p * (dp - d_i[..., None])
+            dq_i = dq_i + jnp.einsum("bhgqk,bhkd->bhgqd", ds, k_j)
+            dk_j = jnp.einsum("bhgqk,bhgqd->bhkd", ds, q_i)
+            dk_a = jax.lax.dynamic_update_slice(
+                dk_a, jax.lax.dynamic_slice(
+                    dk_a, (0, 0, ki * kc, 0), (B, HKV, kc, D)) + dk_j,
+                (0, 0, ki * kc, 0))
+            dv_a = jax.lax.dynamic_update_slice(
+                dv_a, jax.lax.dynamic_slice(
+                    dv_a, (0, 0, ki * kc, 0), (B, HKV, kc, D)) + dv_j,
+                (0, 0, ki * kc, 0))
+            return (dq_i, dk_a, dv_a), None
+
+        dq0 = jnp.zeros((B, HKV, G, qc, D), jnp.float32)
+        (dq_i, dk_acc, dv_acc), _ = jax.lax.scan(
+            kv_inner, (dq0, dk_acc, dv_acc), (kb, vb, jnp.arange(nk))
+        )
+        return (dk_acc, dv_acc), dq_i * scale
+
+    z = jnp.zeros((B, HKV, SKp, D), jnp.float32)
+    (dk, dv), dqb = jax.lax.scan(
+        q_outer, (z, z), (qs, dob, lseb, db, jnp.arange(nq))
+    )
+    dq = dqb.transpose(1, 2, 3, 0, 4, 5).reshape(B, HQ, Sp, D)[:, :, :S]
+    return (
+        dq.astype(q.dtype),
+        dk[:, :, :SK].astype(k.dtype),
+        dv[:, :, :SK].astype(v.dtype),
+    )
+
+
+_chunked_core.defvjp(_chunked_core_fwd, _chunked_core_bwd)
+
+
+def chunked_attention(
+    q, k, v, *, causal: bool = True, scale: float | None = None,
+    q_chunk: int = 512, k_chunk: int = 1024,
+):
+    """GQA flash attention in pure lax ops. q [B,HQ,S,D], k/v [B,HKV,SK,D]."""
+    S, SK = q.shape[2], k.shape[2]
+    D = q.shape[-1]
+    scale = (D ** -0.5) if scale is None else scale
+    return _chunked_core(
+        q, k, v, causal, scale, min(q_chunk, S), min(k_chunk, SK)
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "scale", "impl", "interpret")
+)
+def mha(
+    q, k, v, *, causal: bool = True, scale: float | None = None,
+    impl: str = "naive", interpret: bool = True,
+):
+    if impl == "pallas":
+        return _k.flash_attention(
+            q, k, v, causal=causal, scale=scale, interpret=interpret
+        )
+    if impl == "chunked":
+        return chunked_attention(q, k, v, causal=causal, scale=scale)
+    return _ref.attention_ref(q, k, v, causal=causal, scale=scale)

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle: dense softmax attention with causal mask and GQA."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jax.Array,   # [B, HQ, S, D]
+    k: jax.Array,   # [B, HKV, SK, D]
+    v: jax.Array,   # [B, HKV, SK, D]
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+):
+    B, HQ, S, D = q.shape
+    _, HKV, SK, _ = k.shape
+    group = HQ // HKV
+    scale = (D ** -0.5) if scale is None else scale
+    kr = jnp.repeat(k, group, axis=1)
+    vr = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kr.astype(jnp.float32))
+    s = s * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((S, SK), bool), k=SK - S)
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p, vr.astype(jnp.float32))
+    return o.astype(q.dtype)

@@ -1,0 +1,280 @@
+"""Pallas TPU kernel: the NetCRAQ match-action engine.
+
+Hardware adaptation (DESIGN.md §2): a P4 switch holds the objects_store in
+SRAM register arrays and processes one packet per pipeline pass; the TPU
+analogue keeps the store resident in **VMEM** and processes a *batch* of
+queries per grid step, branch-free.  The TCAM/register lookup becomes a
+one-hot masked reduction over the key axis - vectorized on the VPU (8x128
+lanes), with the store tiled so each (key-tile x query-tile) block stays in
+VMEM.
+
+Two kernels:
+
+* ``read_engine``  - the latency-critical read path the paper optimizes:
+  for each query key, fetch the clean value (cell 0), the latest version,
+  and the pending counter, so the caller can resolve
+  local-reply / tail-reply / forward without touching HBM again.
+  Grid: (key_tiles, query_tiles); the key axis is the reduction axis.
+* ``write_engine`` - applies a batch of sequenced writes: appends dirty
+  versions at ``pending + 1 + within-batch-rank`` (serialization
+  semantics), drops window overflows.  Grid: (key_tiles,); each key tile
+  scans the whole (small) write batch with masked scatter-adds.
+
+Integer exactness: values are int32 payloads; the masked reductions use
+integer multiply-adds on the VPU (a 0/1 mask times the payload), which is
+exact - no float round-trip.  A production MXU variant would split words
+into 16-bit halves and use two f32 one-hot matmuls; we keep the exact VPU
+form (the arithmetic-intensity analysis in benchmarks/kv_engine_bench.py
+covers both).
+
+VMEM budget per grid step (defaults TK=512 keys, TB=256 queries, V=4, W=4):
+  store tile 512*4*4*4B = 32 KiB, seq tile 8 KiB, query tile ~4 KiB,
+  partial outputs ~16 KiB  ->  well under the ~16 MiB VMEM of a v5e core.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_TK = 512   # keys per tile (reduction axis)
+DEFAULT_TB = 256   # queries per tile
+
+
+# ---------------------------------------------------------------------------
+# READ engine
+# ---------------------------------------------------------------------------
+def _read_kernel(
+    values_ref,   # [TK, V, W] int32
+    seqs_ref,     # [TK, V]    int32
+    pending_ref,  # [TK]       int32
+    keys_ref,     # [TB]       int32
+    clean_val_ref,   # [TB, W] int32 out
+    clean_seq_ref,   # [TB]    int32 out
+    latest_val_ref,  # [TB, W] int32 out
+    latest_seq_ref,  # [TB]    int32 out
+    pending_out_ref, # [TB]    int32 out
+    *,
+    tk: int,
+):
+    kt = pl.program_id(0)  # key-tile index (reduction)
+
+    @pl.when(kt == 0)
+    def _init():
+        clean_val_ref[...] = jnp.zeros_like(clean_val_ref)
+        clean_seq_ref[...] = jnp.zeros_like(clean_seq_ref)
+        latest_val_ref[...] = jnp.zeros_like(latest_val_ref)
+        latest_seq_ref[...] = jnp.zeros_like(latest_seq_ref)
+        pending_out_ref[...] = jnp.zeros_like(pending_out_ref)
+
+    keys = keys_ref[...]                       # [TB]
+    base = kt * tk
+    local = keys - base                        # key id within this tile
+    kidx = jax.lax.broadcasted_iota(jnp.int32, (local.shape[0], tk), 1)
+    onehot = (kidx == local[:, None]).astype(jnp.int32)  # [TB, TK]
+
+    values = values_ref[...]                   # [TK, V, W]
+    seqs = seqs_ref[...]                       # [TK, V]
+    pending = pending_ref[...]                 # [TK]
+
+    # clean = cell 0
+    clean_val_ref[...] += jnp.einsum(
+        "bk,kw->bw", onehot, values[:, 0, :], preferred_element_type=jnp.int32
+    )
+    clean_seq_ref[...] += jnp.einsum(
+        "bk,k->b", onehot, seqs[:, 0], preferred_element_type=jnp.int32
+    )
+    pend_b = jnp.einsum("bk,k->b", onehot, pending, preferred_element_type=jnp.int32)
+    pending_out_ref[...] += pend_b
+
+    # latest = cell[pending] (dirty head, or cell 0 when clean)
+    V = values.shape[1]
+    slot_oh = (
+        jax.lax.broadcasted_iota(jnp.int32, (tk, V), 1) == pending[:, None]
+    ).astype(jnp.int32)                        # [TK, V]
+    latest_v = jnp.einsum(
+        "kv,kvw->kw", slot_oh, values, preferred_element_type=jnp.int32
+    )                                          # [TK, W]
+    latest_s = jnp.einsum(
+        "kv,kv->k", slot_oh, seqs, preferred_element_type=jnp.int32
+    )
+    latest_val_ref[...] += jnp.einsum(
+        "bk,kw->bw", onehot, latest_v, preferred_element_type=jnp.int32
+    )
+    latest_seq_ref[...] += jnp.einsum(
+        "bk,k->b", onehot, latest_s, preferred_element_type=jnp.int32
+    )
+
+
+def read_engine(
+    values: jax.Array,
+    seqs: jax.Array,
+    pending: jax.Array,
+    keys: jax.Array,
+    *,
+    tk: int = DEFAULT_TK,
+    tb: int = DEFAULT_TB,
+    interpret: bool = True,
+):
+    """Batched read lookup. Returns (clean_val, clean_seq, latest_val,
+    latest_seq, pending_of_key). Shapes: [B,W],[B],[B,W],[B],[B]."""
+    K, V, W = values.shape
+    B = keys.shape[0]
+    tk = min(tk, K)
+    tb = min(tb, B)
+    assert K % tk == 0 and B % tb == 0, (K, tk, B, tb)
+
+    grid = (K // tk, B // tb)
+    kernel = functools.partial(_read_kernel, tk=tk)
+    out_shape = (
+        jax.ShapeDtypeStruct((B, W), jnp.int32),
+        jax.ShapeDtypeStruct((B,), jnp.int32),
+        jax.ShapeDtypeStruct((B, W), jnp.int32),
+        jax.ShapeDtypeStruct((B,), jnp.int32),
+        jax.ShapeDtypeStruct((B,), jnp.int32),
+    )
+    bspec_b = lambda: pl.BlockSpec((tb,), lambda kt, bt: (bt,))
+    bspec_bw = lambda: pl.BlockSpec((tb, W), lambda kt, bt: (bt, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tk, V, W), lambda kt, bt: (kt, 0, 0)),
+            pl.BlockSpec((tk, V), lambda kt, bt: (kt, 0)),
+            pl.BlockSpec((tk,), lambda kt, bt: (kt,)),
+            pl.BlockSpec((tb,), lambda kt, bt: (bt,)),
+        ],
+        out_specs=(bspec_bw(), bspec_b(), bspec_bw(), bspec_b(), bspec_b()),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(values, seqs, pending, keys)
+
+
+# ---------------------------------------------------------------------------
+# WRITE engine
+# ---------------------------------------------------------------------------
+def _write_kernel(
+    rank_ref,     # [B]  int32 precomputed within-batch rank (same key)
+    keys_ref,     # [B]  int32
+    wvals_ref,    # [B, W] int32
+    wseqs_ref,    # [B]  int32
+    active_ref,   # [B]  int32 0/1
+    values_in_ref,   # [TK, V, W] int32 (aliased with values_ref)
+    seqs_in_ref,     # [TK, V] int32    (aliased with seqs_ref)
+    pending_in_ref,  # [TK] int32       (aliased with pending_ref)
+    values_ref,   # [TK, V, W] int32 out
+    seqs_ref,     # [TK, V] int32    out
+    pending_ref,  # [TK] int32       out
+    accepted_ref, # [B] int32 out (sum over key tiles -> 0/1)
+    *,
+    tk: int,
+    num_versions: int,
+):
+    kt = pl.program_id(0)
+
+    @pl.when(kt == 0)
+    def _init():
+        accepted_ref[...] = jnp.zeros_like(accepted_ref)
+
+    keys = keys_ref[...]
+    active = active_ref[...]
+    rank = rank_ref[...]
+    base = kt * tk
+    local = keys - base
+    B = keys.shape[0]
+    kidx = jax.lax.broadcasted_iota(jnp.int32, (B, tk), 1)
+    onehot = ((kidx == local[:, None]) & (active[:, None] > 0)).astype(jnp.int32)
+
+    pending = pending_in_ref[...]                   # [TK]
+    pend_b = jnp.einsum("bk,k->b", onehot, pending, preferred_element_type=jnp.int32)
+    slot = pend_b + 1 + rank                        # serialized append slot
+    in_tile = onehot.sum(axis=1) > 0
+    ok = in_tile & (slot <= num_versions - 1) & (active > 0)
+    accepted_ref[...] += ok.astype(jnp.int32)
+
+    V = num_versions
+    slot_oh = (
+        jax.lax.broadcasted_iota(jnp.int32, (B, V), 1) == slot[:, None]
+    ).astype(jnp.int32) * ok.astype(jnp.int32)[:, None]        # [B, V]
+
+    # scatter-add: (key,slot) unique among accepted writes, so adding
+    # (new - old) via the one-hot outer product is an exact scatter.
+    upd_mask = jnp.einsum(
+        "bk,bv->kv", onehot * ok.astype(jnp.int32)[:, None], slot_oh,
+        preferred_element_type=jnp.int32,
+    )                                               # [TK, V] 0/1
+    new_v = jnp.einsum(
+        "bk,bv,bw->kvw", onehot, slot_oh, wvals_ref[...],
+        preferred_element_type=jnp.int32,
+    )
+    new_s = jnp.einsum(
+        "bk,bv,b->kv", onehot, slot_oh, wseqs_ref[...],
+        preferred_element_type=jnp.int32,
+    )
+    values_ref[...] = (
+        values_in_ref[...] * (1 - upd_mask[:, :, None]) + new_v
+    )
+    seqs_ref[...] = seqs_in_ref[...] * (1 - upd_mask) + new_s
+    pending_ref[...] = pending + jnp.einsum(
+        "bk,b->k", onehot, ok.astype(jnp.int32), preferred_element_type=jnp.int32
+    )
+
+
+def write_engine(
+    values: jax.Array,
+    seqs: jax.Array,
+    pending: jax.Array,
+    keys: jax.Array,
+    wvals: jax.Array,
+    wseqs: jax.Array,
+    active: jax.Array,
+    rank: jax.Array,
+    *,
+    tk: int = DEFAULT_TK,
+    interpret: bool = True,
+):
+    """Append dirty versions for a sequenced write batch.
+
+    Returns (values', seqs', pending', accepted[B]).  ``rank`` is the
+    within-batch same-key rank (computed by ops.py - O(B^2) bitmatrix or
+    sort-based, outside the kernel).
+    """
+    K, V, W = values.shape
+    B = keys.shape[0]
+    tk = min(tk, K)
+    assert K % tk == 0
+
+    kernel = functools.partial(_write_kernel, tk=tk, num_versions=V)
+    out_shape = (
+        jax.ShapeDtypeStruct((K, V, W), jnp.int32),
+        jax.ShapeDtypeStruct((K, V), jnp.int32),
+        jax.ShapeDtypeStruct((K,), jnp.int32),
+        jax.ShapeDtypeStruct((B,), jnp.int32),
+    )
+    full_b = lambda: pl.BlockSpec((B,), lambda kt: (0,))
+    return pl.pallas_call(
+        kernel,
+        grid=(K // tk,),
+        in_specs=[
+            full_b(),
+            full_b(),
+            pl.BlockSpec((B, W), lambda kt: (0, 0)),
+            full_b(),
+            full_b(),
+            pl.BlockSpec((tk, V, W), lambda kt: (kt, 0, 0)),
+            pl.BlockSpec((tk, V), lambda kt: (kt, 0)),
+            pl.BlockSpec((tk,), lambda kt: (kt,)),
+        ],
+        out_specs=(
+            pl.BlockSpec((tk, V, W), lambda kt: (kt, 0, 0)),
+            pl.BlockSpec((tk, V), lambda kt: (kt, 0)),
+            pl.BlockSpec((tk,), lambda kt: (kt,)),
+            pl.BlockSpec((B,), lambda kt: (0,)),
+        ),
+        out_shape=out_shape,
+        input_output_aliases={5: 0, 6: 1, 7: 2},
+        interpret=interpret,
+    )(rank, keys, wvals, wseqs, active, values, seqs, pending)

@@ -1,0 +1,63 @@
+"""Jit'd wrappers: kv_engine kernels <-> repro.core.store integration.
+
+``craq_read_batch`` resolves the full NetCRAQ read decision (Algorithm 1
+lines 4-14) on top of the Pallas read engine; ``craq_write_batch`` computes
+the within-batch serialization rank and applies the Pallas write engine.
+These are drop-in accelerated equivalents of the pure-jnp paths in
+``repro.core.store`` (which remain the oracles).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.store import Store, batch_rank
+from repro.kernels.kv_engine import kernel as _k
+
+
+@functools.partial(jax.jit, static_argnames=("is_tail", "interpret"))
+def craq_read_batch(store: Store, keys: jax.Array, *, is_tail: bool = False,
+                    interpret: bool = True):
+    """Returns (reply_val [B,W], reply_seq [B], decision [B]).
+
+    decision: 0 = answered locally (clean), 1 = answered by tail (dirty),
+    2 = must forward to tail (dirty at a non-tail node).
+    """
+    cv, cs, lv, ls, pend = _k.read_engine(
+        store.values, store.seqs, store.pending, keys, interpret=interpret
+    )
+    clean = pend == 0
+    if is_tail:
+        decision = jnp.where(clean, 0, 1)
+        reply_val = jnp.where(clean[:, None], cv, lv)
+        reply_seq = jnp.where(clean, cs, ls)
+    else:
+        decision = jnp.where(clean, 0, 2)
+        reply_val = cv
+        reply_seq = cs
+    return reply_val, reply_seq, decision
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def craq_write_batch(store: Store, keys, wvals, wseqs, active, *,
+                     interpret: bool = True):
+    """Append a sequenced write batch (dirty versions). Returns
+    (store', accepted[B])."""
+    rank = batch_rank(keys, active.astype(bool))
+    values, seqs, pending, accepted = _k.write_engine(
+        store.values,
+        store.seqs,
+        store.pending,
+        keys,
+        wvals,
+        wseqs,
+        active.astype(jnp.int32),
+        rank,
+        interpret=interpret,
+    )
+    return (
+        store._replace(values=values, seqs=seqs, pending=pending),
+        accepted.astype(bool),
+    )

@@ -1,0 +1,59 @@
+"""Pure-jnp oracle for the kv_engine kernels.
+
+Mirrors the semantics of ``repro.core.store`` exactly; the kernel tests
+assert bit-exact equality between these references and the Pallas kernels
+across shape/dtype sweeps.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def read_engine_ref(values, seqs, pending, keys):
+    """[K,V,W],[K,V],[K] store + [B] keys -> clean/latest/pending lookups."""
+    clean_val = values[keys, 0]
+    clean_seq = seqs[keys, 0]
+    slot = pending[keys]
+    latest_val = values[keys, slot]
+    latest_seq = seqs[keys, slot]
+    return clean_val, clean_seq, latest_val, latest_seq, pending[keys]
+
+
+def write_engine_ref(values, seqs, pending, keys, wvals, wseqs, active, rank):
+    """Sequential oracle: apply writes one at a time in batch order."""
+    del rank  # the oracle serializes explicitly
+    values = jnp.asarray(values)
+    seqs = jnp.asarray(seqs)
+    pending = jnp.asarray(pending)
+    V = values.shape[1]
+    B = keys.shape[0]
+    accepted = []
+    import numpy as np
+
+    values = np.array(values)
+    seqs = np.array(seqs)
+    pending = np.array(pending)
+    keys_n = np.array(keys)
+    wvals_n = np.array(wvals)
+    wseqs_n = np.array(wseqs)
+    active_n = np.array(active)
+    for b in range(B):
+        if not bool(active_n[b]):
+            accepted.append(0)
+            continue
+        k = int(keys_n[b])
+        slot = int(pending[k]) + 1
+        if slot > V - 1:
+            accepted.append(0)
+            continue
+        values[k, slot] = wvals_n[b]
+        seqs[k, slot] = wseqs_n[b]
+        pending[k] += 1
+        accepted.append(1)
+    return (
+        jnp.asarray(values),
+        jnp.asarray(seqs),
+        jnp.asarray(pending),
+        jnp.asarray(np.array(accepted, np.int32)),
+    )

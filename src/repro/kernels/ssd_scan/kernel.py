@@ -1,0 +1,127 @@
+"""Pallas TPU kernel: Mamba-2 SSD (state-space duality) chunked scan.
+
+Recurrence per head (state h in R^{N x P}, N = d_state, P = head dim):
+
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t (x) x_t
+    y_t = C_t^T h_t + D * x_t
+
+The chunked SSD form (Dao & Gu, 2024) splits the sequence into chunks of Q
+steps; within a chunk the quadratic 1-semiseparable form runs on the MXU,
+and a tiny [N, P] state carries across chunks in VMEM scratch:
+
+    cum_t   = sum_{s<=t} dt_s * A                     (within-chunk)
+    y_t     = exp(cum_t) * C_t^T h_0
+            + sum_{s<=t} exp(cum_t - cum_s) dt_s (C_t . B_s) x_s
+    h_next  = exp(cum_Q) h_0 + sum_t exp(cum_Q - cum_t) dt_t B_t (x) x_t
+
+TPU adaptation: the chunk dimension is the sequential grid axis (the scan),
+each (batch*head, chunk) step stages [Q,P] x / [Q,N] B,C tiles into VMEM,
+runs three MXU matmuls, and keeps h (N*P*4 bytes ~ 32 KiB at N=128, P=64)
+resident in scratch - the GPU algorithm's shared-memory state maps to VMEM
+with no warp-level tricks needed (DESIGN.md §2).
+
+A < 0 and dt > 0 guarantee all exponentials are <= 1 (numerically safe).
+Single B/C group (Mamba-2 default n_groups=1); grouped variants vmap over
+the group axis in ops.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 64
+
+
+def _ssd_kernel(
+    x_ref,    # [1, Q, P]  (batch*head major)
+    dt_ref,   # [1, Q]
+    a_ref,    # [1]        A for this head (negative)
+    b_ref,    # [1, Q, N]
+    c_ref,    # [1, Q, N]
+    d_ref,    # [1]        skip-connection coefficient
+    y_ref,    # [1, Q, P] out
+    h_ref,    # [N, P]    scratch: carried state
+    *,
+    chunk: int,
+):
+    ct = pl.program_id(1)
+
+    @pl.when(ct == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0].astype(jnp.float32)        # [Q, P]
+    dt = dt_ref[0].astype(jnp.float32)      # [Q]
+    A = a_ref[0].astype(jnp.float32)        # scalar
+    B = b_ref[0].astype(jnp.float32)        # [Q, N]
+    C = c_ref[0].astype(jnp.float32)        # [Q, N]
+    D = d_ref[0].astype(jnp.float32)
+
+    a = dt * A                              # [Q] log-decay per step (<= 0)
+    cum = jnp.cumsum(a)                     # [Q]
+
+    # ---- intra-chunk (1-semiseparable masked) ----
+    g = jax.lax.dot_general(
+        C, B, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                       # [Q, Q] = C_t . B_s
+    i_t = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    i_s = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    decay = jnp.exp(cum[:, None] - cum[None, :])
+    m = jnp.where(i_t >= i_s, g * decay, 0.0) * dt[None, :]
+    y = jax.lax.dot_general(
+        m, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                       # [Q, P]
+
+    # ---- inter-chunk: contribution of carried state ----
+    h0 = h_ref[...]                         # [N, P]
+    y += jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        C, h0, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    # ---- state update ----
+    w = B * (dt * jnp.exp(cum[-1] - cum))[:, None]       # [Q, N]
+    h_ref[...] = jnp.exp(cum[-1]) * h0 + jax.lax.dot_general(
+        w, x, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    y_ref[0] = (y + D * x).astype(y_ref.dtype)
+
+
+def ssd_scan(
+    x: jax.Array,    # [BH, L, P]  batch*heads flattened
+    dt: jax.Array,   # [BH, L]     positive step sizes
+    A: jax.Array,    # [BH]        negative per-head decay rates
+    B: jax.Array,    # [BH, L, N]
+    C: jax.Array,    # [BH, L, N]
+    D: jax.Array,    # [BH]        skip coefficients
+    *,
+    chunk: int = DEFAULT_CHUNK,
+    interpret: bool = True,
+):
+    BH, L, P = x.shape
+    N = B.shape[-1]
+    chunk = min(chunk, L)
+    assert L % chunk == 0, (L, chunk)
+
+    grid = (BH, L // chunk)
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, P), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk), lambda b, c: (b, c)),
+            pl.BlockSpec((1,), lambda b, c: (b,)),
+            pl.BlockSpec((1, chunk, N), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1,), lambda b, c: (b,)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, P), lambda b, c: (b, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, L, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, B, C, D)

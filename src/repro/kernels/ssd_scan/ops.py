@@ -1,0 +1,78 @@
+"""Jit'd wrapper for the SSD scan: model-facing [B, L, H, P] layout,
+kernel/ref dispatch, and the O(1)-state decode step used by serving.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan import kernel as _k
+from repro.kernels.ssd_scan import ref as _ref
+
+
+@functools.partial(
+    jax.jit, static_argnames=("impl", "chunk", "interpret", "return_state")
+)
+def ssd(
+    x: jax.Array,    # [B, L, H, P]
+    dt: jax.Array,   # [B, L, H]
+    A: jax.Array,    # [H]
+    B: jax.Array,    # [B, L, N]   (single group, shared across heads)
+    C: jax.Array,    # [B, L, N]
+    D: jax.Array,    # [H]
+    *,
+    impl: str = "chunked",   # "chunked" | "recurrent" | "pallas"
+    chunk: int = _k.DEFAULT_CHUNK,
+    interpret: bool = True,
+    return_state: bool = False,
+):
+    """Returns y [B, L, H, P] (and h_final [B, H, N, P] if requested).
+
+    ``chunked`` is the production/training path: its autodiff backward
+    saves one state per chunk (seq/chunk x smaller than the per-step
+    recurrence - required for the train_4k cells to fit HBM).
+    """
+    Bsz, L, H, P = x.shape
+    N = B.shape[-1]
+    # flatten (batch, head) -> BH major; broadcast shared B/C per head
+    xf = x.transpose(0, 2, 1, 3).reshape(Bsz * H, L, P)
+    dtf = dt.transpose(0, 2, 1).reshape(Bsz * H, L)
+    Bf = jnp.broadcast_to(B[:, None], (Bsz, H, L, N)).reshape(Bsz * H, L, N)
+    Cf = jnp.broadcast_to(C[:, None], (Bsz, H, L, N)).reshape(Bsz * H, L, N)
+    Af = jnp.tile(A, Bsz)
+    Df = jnp.tile(D, Bsz)
+    hf = None
+    if impl == "pallas":
+        y = _k.ssd_scan(xf, dtf, Af, Bf, Cf, Df, chunk=chunk,
+                        interpret=interpret)
+        if return_state:
+            _, hf = _ref.ssd_chunked(xf, dtf, Af, Bf, Cf, Df, chunk=chunk)
+    elif impl == "chunked":
+        y, hf = _ref.ssd_chunked(xf, dtf, Af, Bf, Cf, Df, chunk=chunk)
+    else:
+        y, hf = _ref.ssd_scan_with_final_ref(xf, dtf, Af, Bf, Cf, Df)
+    y = y.reshape(Bsz, H, L, P).transpose(0, 2, 1, 3)
+    if return_state:
+        return y, hf.reshape(Bsz, H, N, P)
+    return y
+
+
+@jax.jit
+def ssd_decode_step(h, x_t, dt_t, A, B_t, C_t, D):
+    """One decode step with O(1) state (the 'KV' object SSM archs replicate
+    through the NetCRAQ chain - DESIGN.md §5).
+
+    h [B,H,N,P], x_t [B,H,P], dt_t [B,H], A [H], B_t/C_t [B,N], D [H]
+    -> (h', y_t [B,H,P])
+    """
+    decay = jnp.exp(dt_t * A[None, :])[..., None, None]          # [B,H,1,1]
+    inject = (
+        dt_t[..., None, None]
+        * B_t[:, None, :, None]
+        * x_t[:, :, None, :]
+    )                                                            # [B,H,N,P]
+    h_new = decay * h + inject
+    y = jnp.einsum("bn,bhnp->bhp", C_t, h_new) + D[None, :, None] * x_t
+    return h_new, y

@@ -1,0 +1,91 @@
+"""Pure-jnp oracle for the SSD scan: the literal per-step recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_with_final_ref(x, dt, A, B, C, D):
+    """Like ``ssd_scan_ref`` but also returns the final state [BH, N, P]
+    (needed for prefill -> decode cache handoff)."""
+    BH, L, P = x.shape
+    N = B.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = B.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+
+    def per_head(xh, dth, Ah, Bh, Ch, Dh):
+        def step(h, inp):
+            xt, dtt, bt, ct = inp
+            h = jnp.exp(dtt * Ah) * h + dtt * jnp.outer(bt, xt)  # [N, P]
+            y = ct @ h + Dh * xt
+            return h, y
+
+        h0 = jnp.zeros((N, P), jnp.float32)
+        hf, ys = jax.lax.scan(step, h0, (xh, dth, Bh, Ch))
+        return ys, hf
+
+    y, hf = jax.vmap(per_head)(xf, dtf, A.astype(jnp.float32), Bf, Cf,
+                               D.astype(jnp.float32))
+    return y.astype(x.dtype), hf
+
+
+def ssd_scan_ref(x, dt, A, B, C, D):
+    """x [BH,L,P], dt [BH,L], A [BH], B/C [BH,L,N], D [BH] -> y [BH,L,P].
+
+    h_t = exp(dt_t A) h_{t-1} + dt_t B_t (x) x_t ;  y_t = C_t^T h_t + D x_t
+    """
+    y, _ = ssd_scan_with_final_ref(x, dt, A, B, C, D)
+    return y
+
+
+def ssd_chunked(x, dt, A, B, C, D, chunk: int = 64):
+    """Chunked SSD in pure lax ops - the production training path.
+
+    Same math as the Pallas kernel (intra-chunk 1-semiseparable + O(N*P)
+    inter-chunk state), expressed as a lax.scan over chunks.  Unlike the
+    per-step recurrence, the autodiff backward saves one [BH,N,P] state per
+    CHUNK instead of per step - a seq_len/chunk (64x) activation cut that
+    the zamba2/mamba2 train cells need to fit HBM (EXPERIMENTS.md §Perf).
+    Returns (y, h_final).
+    """
+    BH, L, P = x.shape
+    N = B.shape[-1]
+    chunk = min(chunk, L)
+    pad = (-L) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    Lp = L + pad
+    nc = Lp // chunk
+
+    xf = x.astype(jnp.float32).reshape(BH, nc, chunk, P).transpose(1, 0, 2, 3)
+    dtf = dt.astype(jnp.float32).reshape(BH, nc, chunk).transpose(1, 0, 2)
+    Bf = B.astype(jnp.float32).reshape(BH, nc, chunk, N).transpose(1, 0, 2, 3)
+    Cf = C.astype(jnp.float32).reshape(BH, nc, chunk, N).transpose(1, 0, 2, 3)
+    Af = A.astype(jnp.float32)
+    i_t = jnp.arange(chunk)[:, None]
+    i_s = jnp.arange(chunk)[None, :]
+
+    def body(h, xs):
+        xc, dtc, Bc, Cc = xs              # [BH, Q, *]
+        a = dtc * Af[:, None]             # [BH, Q] log-decay (<=0)
+        cum = jnp.cumsum(a, axis=1)
+        g = jnp.einsum("btn,bsn->bts", Cc, Bc)
+        decay = jnp.exp(cum[:, :, None] - cum[:, None, :])
+        m = jnp.where(i_t >= i_s, g * decay, 0.0) * dtc[:, None, :]
+        y = jnp.einsum("bts,bsp->btp", m, xc)
+        y += jnp.exp(cum)[:, :, None] * jnp.einsum("btn,bnp->btp", Cc, h)
+        w = Bc * (dtc * jnp.exp(cum[:, -1:] - cum))[:, :, None]
+        h = jnp.exp(cum[:, -1])[:, None, None] * h + jnp.einsum(
+            "btn,btp->bnp", w, xc)
+        return h, y
+
+    h0 = jnp.zeros((BH, N, P), jnp.float32)
+    hf, yb = jax.lax.scan(body, h0, (xf, dtf, Bf, Cf))
+    y = yb.transpose(1, 0, 2, 3).reshape(BH, Lp, P)[:, :L]
+    y = y + D.astype(jnp.float32)[:, None, None] * x.astype(jnp.float32)[:, :L]
+    return y.astype(x.dtype), hf

@@ -1,0 +1,372 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this script:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. eval_shape's the params/optimizer/cache pytrees (zero allocation),
+  3. jits the train/prefill/decode step with explicit in_shardings from
+     the logical sharding rules (distributed/sharding.py),
+  4. ``.lower(...).compile()`` - any sharding mismatch, compile-time OOM or
+     unsupported collective is a hard failure,
+  5. records memory_analysis / cost_analysis / HLO collective bytes into a
+     roofline JSON (consumed by EXPERIMENTS.md and benchmarks/roofline).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-3b \
+      --shape train_4k --mesh single --out roofline_out
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+Opt flags (the §Perf iteration knobs): --remat {none,full,dots}
+  --chunked-ce --sp-acts --accum N --compress-grads --serve-dtype bf16
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ARCH_IDS, ArchConfig, get_config
+from repro.configs.shapes import SHAPES, ShapeSpec, applicable
+from repro.distributed import sharding as sh
+from repro.launch.mesh import make_production_mesh
+from repro.models import api
+from repro.models.transformer import OptFlags
+from repro.roofline import analysis as roofline
+from repro.serve.engine import build_decode_step, build_prefill_step
+from repro.train import optimizer as opt
+from repro.train.train_step import build_train_step
+
+# Production defaults: must FIT on 16 GiB/chip v5e - remat-full + chunked
+# CE + TP sequence parallelism (see EXPERIMENTS.md §Perf for the naive
+# baseline's memory numbers and the iteration that led here).
+TRAIN_FLAGS = OptFlags(remat="full", chunked_ce=True, seq_parallel_acts=True,
+                       attn_impl="chunked", cast_params_bf16=True)
+SERVE_FLAGS = OptFlags(attn_impl="chunked")
+
+
+def _mesh_and_rules(mesh_name: str, kind: str = "train", cfg=None):
+    serve = kind in ("prefill", "decode")
+    if serve and cfg is not None:
+        # No-FSDP serving (weights resident, zero per-step gathers) only
+        # when the bf16 params fit replicated over the data axis; monster
+        # MoEs (llama4: 13.6 GiB/chip after 16-way TP/EP) keep ZeRO-3
+        # weight sharding and pay the gathers (EXPERIMENTS.md §Perf).
+        per_chip = cfg.param_count() * 2 / 16
+        serve_fsdp_free = per_chip <= 4 * 2**30
+    else:
+        serve_fsdp_free = True
+    if mesh_name == "multi":
+        mesh = make_production_mesh(multi_pod=True)
+        rules = sh.MULTI_POD_SERVE if (serve and serve_fsdp_free) else sh.MULTI_POD
+        return mesh, rules
+    mesh = make_production_mesh(multi_pod=False)
+    rules = sh.SINGLE_POD_SERVE if (serve and serve_fsdp_free) else sh.SINGLE_POD
+    return mesh, rules
+
+
+def _serving_cfg(cfg: ArchConfig) -> ArchConfig:
+    """Serving uses bf16 params (production inference precision)."""
+    return dataclasses.replace(cfg, param_dtype="bfloat16")
+
+
+def _compile_step(cfg, shape, kind, mesh, rules, flags, *, accum_steps=1,
+                  compress_grads=False, cache_len=None):
+    """Lower + compile one step function. Returns (compiled, cost, hlo, mem)."""
+    with jax.set_mesh(mesh), sh.use_rules(rules, mesh):
+        if kind == "train":
+            opt_cfg = opt.AdamWConfig()
+            step = build_train_step(
+                cfg, opt_cfg, flags,
+                accum_steps=accum_steps, compress_grads=compress_grads,
+            )
+            params_s = jax.eval_shape(
+                lambda: api.init_params(cfg, jax.random.PRNGKey(0))
+            )
+            opt_s = jax.eval_shape(lambda: opt.init(params_s))
+            batch_s = api.input_specs(cfg, shape, "train")
+            p_specs = sh.build_param_specs(params_s, rules, mesh)
+            o_specs = opt.AdamWState(
+                step=P(), mu=p_specs, nu=jax.tree.map(lambda s: s, p_specs)
+            )
+            b_specs = sh.batch_specs(batch_s, rules, mesh)
+            in_shardings = jax.tree.map(
+                lambda s: NamedSharding(mesh, s), (p_specs, o_specs, b_specs),
+                is_leaf=lambda x: isinstance(x, P),
+            )
+            jitted = jax.jit(step, in_shardings=in_shardings,
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(params_s, opt_s, batch_s)
+        elif kind == "prefill":
+            scfg = _serving_cfg(cfg)
+            step = build_prefill_step(
+                scfg, cache_len=cache_len or shape.seq_len, flags=flags
+            )
+            params_s = jax.eval_shape(
+                lambda: api.init_params(scfg, jax.random.PRNGKey(0))
+            )
+            batch_s = api.input_specs(scfg, shape, "prefill")
+            p_specs = sh.build_param_specs(params_s, rules, mesh)
+            b_specs = sh.batch_specs(batch_s, rules, mesh)
+            in_shardings = jax.tree.map(
+                lambda s: NamedSharding(mesh, s), (p_specs, b_specs),
+                is_leaf=lambda x: isinstance(x, P),
+            )
+            jitted = jax.jit(step, in_shardings=in_shardings)
+            lowered = jitted.lower(params_s, batch_s)
+        else:  # decode
+            scfg = _serving_cfg(cfg)
+            step = build_decode_step(scfg, flags=flags)
+            params_s = jax.eval_shape(
+                lambda: api.init_params(scfg, jax.random.PRNGKey(0))
+            )
+            cache_s = jax.eval_shape(
+                lambda: api.init_decode_cache(
+                    scfg, shape.global_batch, shape.seq_len
+                )
+            )
+            tok_s = api.input_specs(scfg, shape, "decode")["token"]
+            p_specs = sh.build_param_specs(params_s, rules, mesh)
+            c_specs = sh.cache_specs(cache_s, rules, mesh)
+            t_spec = sh.batch_specs({"token": tok_s}, rules, mesh)["token"]
+            in_shardings = jax.tree.map(
+                lambda s: NamedSharding(mesh, s),
+                (p_specs, c_specs, t_spec),
+                is_leaf=lambda x: isinstance(x, P),
+            )
+            jitted = jax.jit(step, in_shardings=in_shardings,
+                             donate_argnums=(1,))
+            lowered = jitted.lower(params_s, cache_s, tok_s)
+
+        t0 = time.perf_counter()
+        compiled = lowered.compile()
+        compile_s = time.perf_counter() - t0
+
+    mem = compiled.memory_analysis()
+    mem_d = {
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+        "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+        "peak_bytes": getattr(mem, "peak_memory_in_bytes", 0)
+        or getattr(mem, "temp_size_in_bytes", 0),
+        "alias_bytes": getattr(mem, "alias_size_in_bytes", 0),
+        "code_bytes": getattr(mem, "generated_code_size_in_bytes", 0),
+        "compile_seconds": compile_s,
+    }
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    hlo = compiled.as_text()
+    return compiled, cost, hlo, mem_d
+
+
+def _probe_depths(cfg: ArchConfig):
+    """Depth-1/depth-2 probe configs + the real repeat count (DESIGN.md §7:
+    XLA cost analysis counts scan bodies ONCE, so per-layer cost comes from
+    the d2-d1 delta of unrolled shallow probes)."""
+    if cfg.family == "hybrid":
+        k = cfg.shared_attn_every
+        return (
+            dataclasses.replace(cfg, n_layers=k),
+            dataclasses.replace(cfg, n_layers=2 * k),
+            cfg.n_layers // k,
+        )
+    if cfg.family == "encdec":
+        return (
+            dataclasses.replace(cfg, n_layers=1, enc_layers=1, dec_layers=1),
+            dataclasses.replace(cfg, n_layers=2, enc_layers=2, dec_layers=2),
+            cfg.dec_layers,
+        )
+    return (
+        dataclasses.replace(cfg, n_layers=1),
+        dataclasses.replace(cfg, n_layers=2),
+        cfg.n_layers,
+    )
+
+
+def _corrected_costs(cfg, shape, kind, mesh, rules, flags, **kw):
+    """Compile unrolled depth-1/2 probes; extrapolate exact per-device cost:
+    corrected = d1 + (units - 1) * max(d2 - d1, 0), leafwise over
+    {flops, bytes, collective-bytes}."""
+    d1_cfg, d2_cfg, units = _probe_depths(cfg)
+    probe_flags = dataclasses.replace(
+        flags, unroll_layers=True, ce_chunk=max(shape.seq_len, flags.ce_chunk)
+    )
+    out = {}
+    for name, pcfg in (("d1", d1_cfg), ("d2", d2_cfg)):
+        _, cost, hlo, _ = _compile_step(
+            pcfg, shape, kind, mesh, rules, probe_flags, **kw
+        )
+        coll = roofline.parse_collective_bytes(hlo)
+        out[name] = {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "coll": coll["total"],
+            "coll_breakdown": {
+                k: v for k, v in coll.items() if k not in ("total", "counts")
+            },
+        }
+
+    def extrap(key):
+        d1, d2 = out["d1"][key], out["d2"][key]
+        return d1 + (units - 1) * max(d2 - d1, 0.0)
+
+    corrected = {
+        "flops": extrap("flops"),
+        "bytes accessed": extrap("bytes"),
+        "coll_total": extrap("coll"),
+    }
+    breakdown = {
+        k: out["d1"]["coll_breakdown"][k]
+        + (units - 1)
+        * max(out["d2"]["coll_breakdown"][k] - out["d1"]["coll_breakdown"][k], 0.0)
+        for k in out["d1"]["coll_breakdown"]
+    }
+    breakdown["total"] = corrected["coll_total"]
+    out["units"] = units
+    return corrected, breakdown, out
+
+
+def lower_cell(
+    arch_id: str,
+    shape_id: str,
+    mesh_name: str,
+    *,
+    train_flags: OptFlags = TRAIN_FLAGS,
+    serve_flags: OptFlags = SERVE_FLAGS,
+    accum_steps: int = 1,
+    compress_grads: bool = False,
+    verbose: bool = True,
+    probes: bool = True,
+):
+    """Lower + compile one cell (real step + cost probes).
+    Returns (report, compiled)."""
+    cfg = get_config(arch_id)
+    shape = SHAPES[shape_id]
+    ok, why = applicable(cfg, shape_id)
+    if not ok:
+        return None, why
+
+    kind = shape.kind
+    mesh, rules = _mesh_and_rules(mesh_name, kind, cfg)
+    n_chips = mesh.devices.size
+    flags_used = train_flags if kind == "train" else serve_flags
+    kw = (
+        dict(accum_steps=accum_steps, compress_grads=compress_grads)
+        if kind == "train"
+        else {}
+    )
+
+    compiled, cost, hlo, mem_d = _compile_step(
+        cfg, shape, kind, mesh, rules, flags_used, **kw
+    )
+
+    coll_override = None
+    probe_raw = {}
+    if probes:
+        corrected, breakdown, probe_raw = _corrected_costs(
+            cfg, shape, kind, mesh, rules, flags_used, **kw
+        )
+        cost = dict(cost)
+        cost["flops"] = corrected["flops"]
+        cost["bytes accessed"] = corrected["bytes accessed"]
+        coll_override = breakdown
+
+    report = roofline.analyze(
+        arch=arch_id, shape=shape, kind=kind, cfg=cfg,
+        mesh_name=mesh_name, n_chips=n_chips, cost=cost, hlo_text=hlo,
+        memory_analysis=mem_d, note=f"flags={flags_used}",
+        coll_override=coll_override, probes=probe_raw,
+    )
+    if verbose:
+        live = mem_d["argument_bytes"] - mem_d["alias_bytes"]
+        print(
+            f"[{arch_id} x {shape_id} x {mesh_name}] chips={n_chips} "
+            f"compile={mem_d['compile_seconds']:.1f}s "
+            f"args={mem_d['argument_bytes']/2**30:.2f}GiB "
+            f"temp={mem_d['temp_bytes']/2**30:.2f}GiB "
+            f"live~{(live + mem_d['temp_bytes'])/2**30:.2f}GiB/chip | "
+            f"compute={report.compute_s*1e3:.2f}ms "
+            f"memory={report.memory_s*1e3:.2f}ms "
+            f"coll={report.collective_s*1e3:.2f}ms "
+            f"-> {report.bottleneck}-bound, useful={report.useful_ratio:.2f}",
+            flush=True,
+        )
+    return report, compiled
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="roofline_out")
+    ap.add_argument("--remat", choices=["none", "full", "dots"], default="full")
+    ap.add_argument("--attn", choices=["naive", "chunked"], default="chunked")
+    ap.add_argument("--no-chunked-ce", action="store_true")
+    ap.add_argument("--no-sp-acts", action="store_true")
+    ap.add_argument("--no-cast-bf16", action="store_true")
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--no-probes", action="store_true",
+                    help="skip the depth-1/2 cost probes (memory check only)")
+    ap.add_argument("--tag", default="", help="suffix for output filenames")
+    args = ap.parse_args(argv)
+
+    train_flags = OptFlags(
+        remat=args.remat,
+        chunked_ce=not args.no_chunked_ce,
+        seq_parallel_acts=not args.no_sp_acts,
+        attn_impl=args.attn,
+        cast_params_bf16=not args.no_cast_bf16,
+    )
+
+    os.makedirs(args.out, exist_ok=True)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        cells = [(a, s) for a in ARCH_IDS for s in SHAPES]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    failures = []
+    for arch_id, shape_id in cells:
+        for mesh_name in meshes:
+            tag = f"{arch_id}_{shape_id}_{mesh_name}"
+            if args.tag:
+                tag += f"_{args.tag}"
+            try:
+                report, info = lower_cell(
+                    arch_id, shape_id, mesh_name,
+                    train_flags=train_flags,
+                    accum_steps=args.accum,
+                    compress_grads=args.compress_grads,
+                    probes=not args.no_probes,
+                )
+                if report is None:
+                    print(f"[{tag}] SKIP: {info}", flush=True)
+                    with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                        json.dump({"skip": info}, f)
+                    continue
+                roofline.save_report(report, os.path.join(args.out, tag + ".json"))
+            except Exception as e:  # noqa: BLE001 - report and continue
+                failures.append((tag, repr(e)))
+                print(f"[{tag}] FAIL: {e}", flush=True)
+                traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for t, e in failures:
+            print(" ", t, e)
+        sys.exit(1)
+    print("\ndry-run complete: all cells lowered + compiled.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,123 @@
+"""Unified model API - one entry point for every assigned architecture.
+
+  init_params(cfg, key)                        -> params
+  loss_fn(cfg)(params, batch, flags)           -> scalar loss
+  prefill_fn(cfg)(params, batch, cache_len)    -> (logits, cache)
+  decode_fn(cfg)(params, cache, token)         -> (logits, cache')
+  input_specs(cfg, shape, kind)                -> ShapeDtypeStruct batch
+  make_batch(cfg, shape, kind, key)            -> concrete batch (smoke tests)
+
+``input_specs`` follows the dry-run contract: weak-type-correct,
+shardable stand-ins, zero device allocation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.configs.shapes import ShapeSpec
+from repro.models import encdec as ED
+from repro.models import transformer as TF
+from repro.models.transformer import OptFlags, BASELINE_FLAGS
+
+
+def init_params(cfg: ArchConfig, key):
+    if cfg.family == "encdec":
+        return ED.init_encdec(cfg, key)
+    return TF.init_lm(cfg, key)
+
+
+def loss_fn(cfg: ArchConfig):
+    if cfg.family == "encdec":
+        return lambda params, batch, flags=BASELINE_FLAGS: ED.encdec_loss(
+            params, cfg, batch, flags
+        )
+    return lambda params, batch, flags=BASELINE_FLAGS: TF.lm_loss(
+        params, cfg, batch, flags=flags
+    )
+
+
+def prefill_fn(cfg: ArchConfig):
+    if cfg.family == "encdec":
+        return lambda params, batch, cache_len, flags=BASELINE_FLAGS: (
+            ED.encdec_prefill(
+                params, cfg, batch["frames"], batch["tokens"],
+                cache_len=cache_len, flags=flags,
+            )
+        )
+    return lambda params, batch, cache_len, flags=BASELINE_FLAGS: TF.lm_prefill(
+        params, cfg, batch["tokens"], cache_len=cache_len,
+        embeds=batch.get("embeds"), flags=flags,
+    )
+
+
+def decode_fn(cfg: ArchConfig):
+    if cfg.family == "encdec":
+        return lambda params, cache, token, flags=BASELINE_FLAGS: (
+            ED.encdec_decode_step(params, cfg, cache, token, flags)
+        )
+    return lambda params, cache, token, flags=BASELINE_FLAGS: TF.lm_decode_step(
+        params, cfg, cache, token, flags=flags
+    )
+
+
+def init_decode_cache(cfg: ArchConfig, batch: int, cache_len: int):
+    if cfg.family == "encdec":
+        return ED.init_encdec_cache(cfg, batch, cache_len)
+    return TF.init_decode_cache(cfg, batch, cache_len)
+
+
+# ---------------------------------------------------------------------------
+# Batch construction (specs for the dry-run, concrete for smoke tests)
+# ---------------------------------------------------------------------------
+def _batch_shapes(cfg: ArchConfig, shape: ShapeSpec, kind: str) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    cd = cfg.cdtype()
+    if kind == "train":
+        if cfg.family == "encdec":
+            return {
+                "frames": ((B, cfg.enc_len, cfg.d_model), cd),
+                "tokens": ((B, S), jnp.int32),
+                "labels": ((B, S), jnp.int32),
+            }
+        d = {
+            "tokens": ((B, S - cfg.vis_len), jnp.int32),
+            "labels": ((B, S - cfg.vis_len), jnp.int32),
+        }
+        if cfg.vis_len:
+            d["embeds"] = ((B, cfg.vis_len, cfg.d_model), cd)
+        return d
+    if kind == "prefill":
+        if cfg.family == "encdec":
+            return {
+                "frames": ((B, cfg.enc_len, cfg.d_model), cd),
+                "tokens": ((B, S), jnp.int32),
+            }
+        d = {"tokens": ((B, S - cfg.vis_len), jnp.int32)}
+        if cfg.vis_len:
+            d["embeds"] = ((B, cfg.vis_len, cfg.d_model), cd)
+        return d
+    if kind == "decode":
+        return {"token": ((B, 1), jnp.int32)}
+    raise ValueError(kind)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec, kind: str) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    return {
+        k: jax.ShapeDtypeStruct(shp, dt)
+        for k, (shp, dt) in _batch_shapes(cfg, shape, kind).items()
+    }
+
+
+def make_batch(cfg: ArchConfig, shape: ShapeSpec, kind: str, key) -> dict:
+    """Concrete random batch (reduced-config smoke tests / examples)."""
+    out = {}
+    for name, (shp, dt) in _batch_shapes(cfg, shape, kind).items():
+        key, sub = jax.random.split(key)
+        if jnp.issubdtype(dt, jnp.integer):
+            out[name] = jax.random.randint(sub, shp, 0, cfg.vocab, dt)
+        else:
+            out[name] = (jax.random.normal(sub, shp) * 0.1).astype(dt)
+    return out

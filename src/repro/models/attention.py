@@ -1,0 +1,172 @@
+"""GQA attention: projections, rotary, causal/prefill/decode paths.
+
+KV caches are plain arrays updated in place (donated through the serve
+step) - each cache page is also the unit object the NetCRAQ chain
+replicates for fault-tolerant serving (serve/kv_cache.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import shard
+from repro.kernels.flash_attention import ops as flash_ops
+from repro.models import layers as L
+
+
+def attn_init(key, cfg: ArchConfig, d_model=None, n_heads=None, n_kv=None,
+              d_head=None):
+    d = d_model or cfg.d_model
+    h = n_heads or cfg.n_heads
+    kv = n_kv or cfg.n_kv_heads
+    hd = d_head or cfg.head_dim
+    dt = cfg.pdtype()
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": L.dense_init(k1, d, h * hd, bias=cfg.qkv_bias, dtype=dt),
+        "wk": L.dense_init(k2, d, kv * hd, bias=cfg.qkv_bias, dtype=dt),
+        "wv": L.dense_init(k3, d, kv * hd, bias=cfg.qkv_bias, dtype=dt),
+        "wo": L.dense_init(k4, h * hd, d, dtype=dt),
+    }
+
+
+def _project_qkv(p, x, cfg: ArchConfig, positions, n_heads, n_kv, d_head):
+    cd = cfg.cdtype()
+    B, S, _ = x.shape
+    q = L.dense(p["wq"], x, compute_dtype=cd).reshape(B, S, n_heads, d_head)
+    k = L.dense(p["wk"], x, compute_dtype=cd).reshape(B, S, n_kv, d_head)
+    v = L.dense(p["wv"], x, compute_dtype=cd).reshape(B, S, n_kv, d_head)
+    if positions is not None:
+        q = L.rotary(q, positions, fraction=cfg.rotary_fraction, base=cfg.rope_base)
+        k = L.rotary(k, positions, fraction=cfg.rotary_fraction, base=cfg.rope_base)
+    q = shard(q, "batch", None, "heads", None)
+    k = shard(k, "batch", None, "kv", None)
+    v = shard(v, "batch", None, "kv", None)
+    return q, k, v
+
+
+def attn_apply(
+    p,
+    x: jax.Array,            # [B, S, d]
+    cfg: ArchConfig,
+    *,
+    positions=None,          # [B, S] (None = no rotary, e.g. whisper)
+    causal: bool = True,
+    n_heads=None, n_kv=None, d_head=None,
+    impl: str = "naive",     # "naive" | "chunked" | "pallas" (ops.mha)
+):
+    """Full-sequence attention (training / prefill). Returns [B, S, d]."""
+    h = n_heads or cfg.n_heads
+    kv = n_kv or cfg.n_kv_heads
+    hd = d_head or cfg.head_dim
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(p, x, cfg, positions, h, kv, hd)
+    qh = q.transpose(0, 2, 1, 3)   # [B, H, S, D]
+    kh = k.transpose(0, 2, 1, 3)
+    vh = v.transpose(0, 2, 1, 3)
+    o = flash_ops.mha(qh, kh, vh, causal=causal, impl=impl)
+    o = o.transpose(0, 2, 1, 3).reshape(B, S, h * hd)
+    o = shard(o, "batch", None, "heads")
+    return L.dense(p["wo"], o, compute_dtype=cfg.cdtype())
+
+
+def attn_prefill(p, x, cfg: ArchConfig, *, positions, cache_len: int,
+                 n_heads=None, n_kv=None, d_head=None, impl: str = "naive"):
+    """Prefill: run causal attention AND return a cache padded to
+    ``cache_len``. Returns (out, (k_cache, v_cache))."""
+    h = n_heads or cfg.n_heads
+    kv = n_kv or cfg.n_kv_heads
+    hd = d_head or cfg.head_dim
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(p, x, cfg, positions, h, kv, hd)
+    o = flash_ops.mha(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+        causal=True, impl=impl,
+    )
+    o = o.transpose(0, 2, 1, 3).reshape(B, S, h * hd)
+    out = L.dense(p["wo"], o, compute_dtype=cfg.cdtype())
+    pad = cache_len - S
+    k_c = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    v_c = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return out, (k_c, v_c)
+
+
+def attn_decode(
+    p,
+    x: jax.Array,            # [B, 1, d]
+    cache,                   # (k [B, T, KV, D], v [B, T, KV, D])
+    t: jax.Array,            # [] int32 current length (new token position)
+    cfg: ArchConfig,
+    *,
+    n_heads=None, n_kv=None, d_head=None,
+    seq_parallel: bool = False,
+    use_rotary: bool = True,
+):
+    """One decode step against a KV cache; in-place cache update.
+
+    ``seq_parallel=True`` shards the cache length over the ``data`` axis
+    (flash-decoding style): each shard computes partial (max, sum-exp,
+    weighted-V) statistics and a psum-combine reconstructs exact softmax -
+    the SP path used by long_500k on the hybrid arch.
+    """
+    h = n_heads or cfg.n_heads
+    kv_h = n_kv or cfg.n_kv_heads
+    hd = d_head or cfg.head_dim
+    B = x.shape[0]
+    k_cache, v_cache = cache
+    T = k_cache.shape[1]
+    pos = jnp.full((B, 1), t, jnp.int32) if use_rotary else None
+    q, k_new, v_new = _project_qkv(p, x, cfg, pos, h, kv_h, hd)
+
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k_new, (0, t, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v_new, (0, t, 0, 0))
+    # NO sharding constraint here: the donated input cache's sharding
+    # (distributed/sharding.py:cache_specs - kv-heads else head-dim else
+    # length) propagates through the in-place update.  An explicit
+    # constraint that disagrees (e.g. kv=2 -> replicate) forces GSPMD to
+    # reshard the entire multi-GiB cache every decode step - measured as
+    # a 20 GB/step collective in the baseline dry-run (EXPERIMENTS.md
+    # §Perf decode iteration 1).
+    if seq_parallel:
+        k_cache = shard(k_cache, "batch", "seq_kv", None, None)
+        v_cache = shard(v_cache, "batch", "seq_kv", None, None)
+
+    group = h // kv_h
+    qg = q.reshape(B, kv_h, group, hd)                         # [B, KV, G, D]
+    # q is one token - replicate it so the QK contraction follows the
+    # CACHE's sharding (q arrives (kv x group)-sharded from the TP'd wq;
+    # GSPMD can't reconcile that with a head_dim-sharded cache and falls
+    # back to gathering the whole cache - the SPMD 'involuntary full
+    # rematerialization' warning).
+    qg = shard(qg, "batch", None, None, None)
+    # bf16 operands + f32 accumulation: with a head_dim-sharded cache the
+    # QK contraction psums over the model axis; keeping the (tiny) score
+    # tensor explicitly REPLICATED stops GSPMD from re-sharding it along T
+    # and then "involuntarily rematerializing" (all-gathering) the whole V
+    # cache in f32 - a measured 268 MB/layer/step in the baseline
+    # (EXPERIMENTS.md §Perf decode iteration 3).
+    s = jnp.einsum("bkgd,btkd->bkgt", qg, k_cache,
+                   preferred_element_type=jnp.float32) * (hd ** -0.5)
+    s = shard(s, "batch", None, None, None)
+    valid = (jnp.arange(T) <= t)[None, None, None, :]
+    s = jnp.where(valid, s, -1e30)
+    m = s.max(axis=-1, keepdims=True)
+    e = s - m
+    e = jnp.exp(e)
+    e = shard(e, "batch", None, None, None)
+    num = jnp.einsum("bkgt,btkd->bkgd", e.astype(cfg.cdtype()), v_cache,
+                     preferred_element_type=jnp.float32)
+    den = e.sum(axis=-1)
+    o = (num / den[..., None]).reshape(B, 1, h * hd).astype(cfg.cdtype())
+    out = L.dense(p["wo"], o, compute_dtype=cfg.cdtype())
+    return out, (k_cache, v_cache)
+
+
+def init_cache(cfg: ArchConfig, batch: int, cache_len: int, *, n_kv=None,
+               d_head=None, dtype=None):
+    kv = n_kv or cfg.n_kv_heads
+    hd = d_head or cfg.head_dim
+    dt = dtype or cfg.cdtype()
+    shape = (batch, cache_len, kv, hd)
+    return (jnp.zeros(shape, dt), jnp.zeros(shape, dt))

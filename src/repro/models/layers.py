@@ -1,0 +1,182 @@
+"""Shared model layers - functional (init_fn/apply_fn) pytree style.
+
+No flax/haiku dependency: params are plain dicts, init functions take PRNG
+keys, apply functions are pure.  Layer stacks are built by vmapping init
+over a leading layer axis and scanning apply over it (keeps the HLO O(1)
+in depth - essential for the 512-device dry-run compiles).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Params = dict
+
+
+def dense_init(key, d_in: int, d_out: int, *, bias: bool = False,
+               dtype=jnp.float32, scale: float | None = None) -> Params:
+    scale = (d_in ** -0.5) if scale is None else scale
+    p = {"w": jax.random.normal(key, (d_in, d_out), dtype) * scale}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p: Params, x: jax.Array, *, compute_dtype=jnp.bfloat16) -> jax.Array:
+    w = p["w"].astype(compute_dtype)
+    y = x.astype(compute_dtype) @ w
+    if "b" in p:
+        y = y + p["b"].astype(compute_dtype)
+    return y
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+def layernorm_init(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"] + p["bias"]).astype(dt)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32) -> Params:
+    return {"table": jax.random.normal(key, (vocab, d), dtype) * 0.02}
+
+
+def embed(p: Params, ids: jax.Array, *, compute_dtype=jnp.bfloat16) -> jax.Array:
+    return p["table"].astype(compute_dtype)[ids]
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+def swiglu_init(key, d: int, f: int, dtype=jnp.float32) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d, f, dtype=dtype),
+        "w_up": dense_init(k2, d, f, dtype=dtype),
+        "w_down": dense_init(k3, f, d, dtype=dtype),
+    }
+
+
+def swiglu(p: Params, x: jax.Array, *, compute_dtype=jnp.bfloat16) -> jax.Array:
+    g = dense(p["w_gate"], x, compute_dtype=compute_dtype)
+    u = dense(p["w_up"], x, compute_dtype=compute_dtype)
+    return dense(p["w_down"], jax.nn.silu(g) * u, compute_dtype=compute_dtype)
+
+
+def gelu_mlp_init(key, d: int, f: int, dtype=jnp.float32) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "w_up": dense_init(k1, d, f, bias=True, dtype=dtype),
+        "w_down": dense_init(k2, f, d, bias=True, dtype=dtype),
+    }
+
+
+def gelu_mlp(p: Params, x: jax.Array, *, compute_dtype=jnp.bfloat16) -> jax.Array:
+    return dense(
+        p["w_down"], jax.nn.gelu(dense(p["w_up"], x, compute_dtype=compute_dtype)),
+        compute_dtype=compute_dtype,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (standard + partial/2d variants)
+# ---------------------------------------------------------------------------
+def rotary(
+    x: jax.Array,           # [B, S, H, D]
+    positions: jax.Array,   # [B, S] int32
+    *,
+    fraction: float = 1.0,  # chatglm3 rotates half the head dim ("2d RoPE")
+    base: float = 10000.0,
+) -> jax.Array:
+    D = x.shape[-1]
+    rot_d = int(D * fraction)
+    rot_d -= rot_d % 2
+    if rot_d == 0:
+        return x
+    x_rot, x_pass = x[..., :rot_d], x[..., rot_d:]
+    half = rot_d // 2
+    freqs = base ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [B, S, half]
+    cos = jnp.cos(angles)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(angles)[:, :, None, :].astype(x.dtype)
+    x1, x2 = x_rot[..., :half], x_rot[..., half:]
+    rotated = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    if rot_d == D:
+        return rotated
+    return jnp.concatenate([rotated, x_pass], axis=-1)
+
+
+def sinusoidal_positions(seq_len: int, d: int) -> jax.Array:
+    """Whisper-style fixed sinusoidal embeddings [S, d]."""
+    pos = jnp.arange(seq_len, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    inv = 10000.0 ** (-dim / max(d // 2 - 1, 1))
+    ang = pos * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+def softmax_xent(logits: jax.Array, labels: jax.Array, mask=None):
+    """Token cross-entropy; logits [.., V] f32-upcast, labels [..] int32."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return nll.mean()
+    mask = mask.astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def chunked_xent(x: jax.Array, head_w: jax.Array, labels: jax.Array,
+                 mask=None, chunk: int = 1024):
+    """Cross-entropy without materializing the full [B,S,V] logits tensor.
+
+    Computes logits sequence-chunk by sequence-chunk inside a scan -- the
+    §Perf memory-term optimization for large-vocab archs (vocab 152k/202k
+    would otherwise dominate HLO bytes).  head_w: [d, V].  ``chunk`` is
+    rounded down to the largest divisor of S (VLM text spans like 3840
+    aren't powers of two).
+    """
+    B, S, d = x.shape
+    while S % chunk:
+        chunk -= 1
+    n = S // chunk
+    xc = x.reshape(B, n, chunk, d).swapaxes(0, 1)            # [n, B, c, d]
+    lc = labels.reshape(B, n, chunk).swapaxes(0, 1)          # [n, B, c]
+    mc = (
+        jnp.ones((n, B, chunk), jnp.float32)
+        if mask is None
+        else mask.reshape(B, n, chunk).swapaxes(0, 1).astype(jnp.float32)
+    )
+
+    def body(carry, inp):
+        xi, li, mi = inp
+        logits = (xi @ head_w.astype(xi.dtype)).astype(jnp.float32)
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, li[..., None], axis=-1)[..., 0]
+        nll_sum, m_sum = carry
+        return (nll_sum + ((logz - gold) * mi).sum(), m_sum + mi.sum()), None
+
+    (nll, m), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())), (xc, lc, mc))
+    return nll / jnp.maximum(m, 1.0)

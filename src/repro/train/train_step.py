@@ -1,0 +1,93 @@
+"""Jitted train-step builders: loss -> grad -> AdamW, with microbatch
+gradient accumulation, optional int8 gradient compression across DP, and
+the OptFlags perf knobs (remat / chunked CE).  The dry-run lowers exactly
+these functions.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed import compression
+from repro.models import api
+from repro.models.transformer import OptFlags, BASELINE_FLAGS
+from repro.train import optimizer as opt
+
+
+def build_train_step(
+    cfg: ArchConfig,
+    opt_cfg: opt.AdamWConfig,
+    flags: OptFlags = BASELINE_FLAGS,
+    *,
+    accum_steps: int = 1,
+    compress_grads: bool = False,
+):
+    """Returns train_step(params, opt_state, batch) -> (params', state', stats).
+
+    ``accum_steps`` > 1 splits the batch on the leading axis and accumulates
+    grads in f32 via lax.scan (microbatching: the activation peak shrinks by
+    the accumulation factor - a §Perf memory-term lever).
+    """
+    lf = api.loss_fn(cfg)
+
+    def loss_fn(params, batch):
+        if flags.cast_params_bf16:
+            # one cast at step entry: every FSDP all-gather and the grad
+            # reduction then move bf16 payloads (2x collective-byte cut);
+            # 1-D leaves (norm scales, A_log, dt_bias) stay f32 for
+            # numerics.  Grad leaves come back f32 through the cast.
+            params = jax.tree.map(
+                lambda p: p.astype(jnp.bfloat16)
+                if (p.dtype == jnp.float32 and p.ndim >= 2)
+                else p,
+                params,
+            )
+        return lf(params, batch, flags)
+
+    def train_step(params, opt_state, batch):
+        if accum_steps == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape((accum_steps, x.shape[0] // accum_steps)
+                                    + x.shape[1:]),
+                batch,
+            )
+
+            def body(acc, mb):
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                acc_l, acc_g = acc
+                return (
+                    acc_l + l / accum_steps,
+                    jax.tree.map(
+                        lambda a, b: a + b.astype(jnp.float32) / accum_steps,
+                        acc_g, g,
+                    ),
+                ), None
+
+            zero = (
+                jnp.zeros(()),
+                jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            )
+            (loss, grads), _ = jax.lax.scan(body, zero, micro)
+
+        if compress_grads:
+            # int8 round-trip models the compressed DP all-reduce payload;
+            # under pjit the psum itself is GSPMD-inserted, the quantize/
+            # dequantize bracket it (distributed/compression.py).
+            grads = jax.tree.map(compression.compress_roundtrip, grads)
+
+        new_params, new_state, stats = opt.update(opt_cfg, grads, opt_state, params)
+        stats["loss"] = loss
+        return new_params, new_state, stats
+
+    return train_step
+
+
+def init_train_state(cfg: ArchConfig, key, opt_cfg: Optional[opt.AdamWConfig] = None):
+    params = api.init_params(cfg, key)
+    return params, opt.init(params)

@@ -1,0 +1,123 @@
+"""Trainer loop: checkpoint/restart, async saves, straggler detection,
+elastic membership via the NetCRAQ coordinator.
+
+The loop is deliberately host-simple: all heavy lifting is inside the
+jitted train step; the host thread only feeds batches (prefetched), logs,
+snapshots checkpoints, and reacts to membership events.  This mirrors the
+paper's CP/DP split - per-step work never blocks on coordination.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.coordinator import Coordinator
+from repro.core.failure import FailureDetector
+from repro.data.pipeline import DataConfig, TokenPipeline
+from repro.models.transformer import OptFlags, BASELINE_FLAGS
+from repro.train import checkpoint as ckpt
+from repro.train import optimizer as opt
+from repro.train.train_step import build_train_step, init_train_state
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    log_every: int = 10
+    ckpt_every: int = 50
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    accum_steps: int = 1
+    compress_grads: bool = False
+    straggler_slack: float = 3.0   # step-time multiple before flagging
+
+
+class Trainer:
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        opt_cfg: opt.AdamWConfig,
+        data_cfg: DataConfig,
+        tcfg: TrainConfig,
+        flags: OptFlags = BASELINE_FLAGS,
+        seed: int = 0,
+    ):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.flags = flags
+        self.pipeline = TokenPipeline(data_cfg)
+        self.step_fn = jax.jit(
+            build_train_step(
+                cfg, opt_cfg, flags,
+                accum_steps=tcfg.accum_steps,
+                compress_grads=tcfg.compress_grads,
+            ),
+            donate_argnums=(0, 1),
+        )
+        key = jax.random.PRNGKey(seed)
+        self.params, self.opt_state = init_train_state(cfg, key, opt_cfg)
+        self.step = 0
+        self.history: list[dict] = []
+        from repro.core.store import init_store
+        from repro.core.types import ChainConfig
+
+        self.coordinator = Coordinator(ChainConfig(n_nodes=4, num_keys=64))
+        self.coord_store = init_store(self.coordinator.cfg)
+        self.checkpointer = ckpt.AsyncCheckpointer(
+            tcfg.ckpt_dir, self.coordinator, self.coord_store
+        )
+        self.step_times: list[float] = []
+
+    # -- restart -------------------------------------------------------------
+    def maybe_restore(self) -> bool:
+        last = ckpt.latest_step(self.tcfg.ckpt_dir)
+        if last is None:
+            return False
+        (self.params, self.opt_state), manifest = ckpt.restore(
+            self.tcfg.ckpt_dir, (self.params, self.opt_state), last
+        )
+        self.step = manifest["step"]
+        self.pipeline.index = manifest["data_offset"]
+        return True
+
+    # -- loop ----------------------------------------------------------------
+    def train(self, steps: Optional[int] = None) -> list[dict]:
+        steps = steps or self.tcfg.steps
+        it = iter(self.pipeline)
+        t_ref = None
+        while self.step < steps:
+            batch = next(it)
+            t0 = time.perf_counter()
+            self.params, self.opt_state, stats = self.step_fn(
+                self.params, self.opt_state, batch
+            )
+            loss = float(stats["loss"])
+            dt = time.perf_counter() - t0
+            self.step_times.append(dt)
+            self.step += 1
+
+            # straggler detection: a step far beyond the running median
+            # flags this worker for the coordinator (at scale: triggers
+            # hedged re-execution / re-sharding).
+            if t_ref is None and len(self.step_times) >= 5:
+                t_ref = float(np.median(self.step_times))
+            straggler = bool(
+                t_ref is not None and dt > self.tcfg.straggler_slack * t_ref
+            )
+
+            rec = {"step": self.step, "loss": loss, "time_s": dt,
+                   "straggler": straggler,
+                   "grad_norm": float(stats["grad_norm"])}
+            self.history.append(rec)
+            if self.step % self.tcfg.ckpt_every == 0 or self.step == steps:
+                self.checkpointer.save_async(
+                    self.step, (self.params, self.opt_state),
+                    data_offset=self.pipeline.index,
+                )
+        self.pipeline.stop()
+        self.checkpointer.wait()
+        return self.history

@@ -1,0 +1,14 @@
+"""Suite-level hygiene: jax's jit cache retains every compiled executable;
+a full run accumulates hundreds of them and can exhaust host memory (LLVM
+'Cannot allocate memory' late in the run).  Clear compilation caches
+between test modules - within a module shapes repeat, across modules they
+rarely do.
+"""
+import jax
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_between_modules():
+    yield
+    jax.clear_caches()

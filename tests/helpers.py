@@ -1,0 +1,31 @@
+"""Shared test utilities."""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_with_devices(code: str, n_devices: int = 8, timeout: int = 540) -> str:
+    """Run a python snippet in a subprocess with emulated devices.
+
+    Needed because jax locks the device count at first init; multi-device
+    tests must not contaminate (or be contaminated by) the main process.
+    """
+    prelude = (
+        "import os\n"
+        f"os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count={n_devices}'\n"
+    )
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", prelude + code],
+        capture_output=True,
+        text=True,
+        timeout=timeout,
+        env=env,
+    )
+    assert proc.returncode == 0, f"subprocess failed:\n{proc.stdout}\n{proc.stderr}"
+    return proc.stdout

@@ -1,0 +1,113 @@
+"""Per-architecture smoke tests: every assigned arch instantiates a REDUCED
+config of the same family and runs one forward/train step on CPU, asserting
+output shapes and finiteness.  Full configs are exercised only by the
+dry-run (ShapeDtypeStruct, no allocation).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import ARCH_IDS, get_config
+from repro.configs.shapes import SHAPES, ShapeSpec, applicable, cells
+from repro.models import api
+from repro.models.transformer import OptFlags
+
+KEY = jax.random.PRNGKey(0)
+SMOKE = ShapeSpec("smoke", "train", 32, 2)
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_full_config_matches_assignment(arch_id):
+    cfg = get_config(arch_id)
+    spec = {
+        "qwen2.5-3b": (36, 2048, 16, 2, 11008, 151936),
+        "chatglm3-6b": (28, 4096, 32, 2, 13696, 65024),
+        "qwen1.5-0.5b": (24, 1024, 16, 16, 2816, 151936),
+        "llama3.2-3b": (28, 3072, 24, 8, 8192, 128256),
+        "internvl2-26b": (48, 6144, 48, 8, 16384, 92553),
+        "whisper-base": (6, 512, 8, 8, 2048, 51865),
+        "zamba2-2.7b": (54, 2560, 32, 32, 10240, 32000),
+        "llama4-scout-17b-a16e": (48, 5120, 40, 8, 8192, 202048),
+        "granite-moe-3b-a800m": (32, 1536, 24, 8, 512, 49155),
+        "mamba2-1.3b": (48, 2048, 0, 0, 0, 50280),
+    }[arch_id]
+    assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+            cfg.d_ff, cfg.vocab) == spec
+    assert cfg.vocab_padded % 256 == 0 and cfg.vocab_padded >= cfg.vocab
+    if arch_id == "llama4-scout-17b-a16e":
+        assert (cfg.n_experts, cfg.top_k, cfg.shared_expert) == (16, 1, True)
+    if arch_id == "granite-moe-3b-a800m":
+        assert (cfg.n_experts, cfg.top_k) == (40, 8)
+        assert cfg.n_experts_padded % 16 == 0  # divisible EP after padding
+    if arch_id in ("zamba2-2.7b", "mamba2-1.3b"):
+        assert cfg.ssm_state == {"zamba2-2.7b": 64, "mamba2-1.3b": 128}[arch_id]
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_reduced_forward_and_train_step(arch_id):
+    cfg = get_config(arch_id).reduced()
+    params = api.init_params(cfg, KEY)
+    batch = api.make_batch(cfg, SMOKE, "train", KEY)
+
+    loss, grads = jax.value_and_grad(
+        lambda p: api.loss_fn(cfg)(p, batch)
+    )(params)
+    assert jnp.isfinite(loss), f"{arch_id}: non-finite loss"
+    gnorm = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                for g in jax.tree.leaves(grads))
+    assert jnp.isfinite(gnorm), f"{arch_id}: non-finite grads"
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_reduced_prefill_decode_shapes(arch_id):
+    cfg = get_config(arch_id).reduced()
+    params = api.init_params(cfg, KEY)
+    batch = api.make_batch(cfg, SMOKE, "prefill", KEY)
+    B = SMOKE.global_batch
+    logits, cache = api.prefill_fn(cfg)(params, batch, 64)
+    assert logits.shape == (B, 1, cfg.vocab_padded)
+    assert jnp.isfinite(logits).all()
+    tok = jnp.zeros((B, 1), jnp.int32)
+    logits2, cache2 = api.decode_fn(cfg)(params, cache, tok)
+    assert logits2.shape == (B, 1, cfg.vocab_padded)
+    assert jnp.isfinite(logits2).all()
+    assert int(cache2["t"]) == int(cache["t"]) + 1
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_remat_and_chunked_ce_equivalence(arch_id):
+    """The §Perf flags must not change the math."""
+    cfg = dataclasses.replace(get_config(arch_id).reduced(),
+                              compute_dtype="float32")
+    params = api.init_params(cfg, KEY)
+    batch = api.make_batch(cfg, SMOKE, "train", KEY)
+    base = api.loss_fn(cfg)(params, batch)
+    for flags in [
+        OptFlags(remat="full"),
+        OptFlags(chunked_ce=True, ce_chunk=16),
+        OptFlags(remat="dots", chunked_ce=True, ce_chunk=8,
+                 attn_impl="chunked"),
+        OptFlags(cast_params_bf16=False, attn_impl="chunked"),
+    ]:
+        alt = api.loss_fn(cfg)(params, batch, flags)
+        assert abs(float(base - alt)) < 1e-4, (arch_id, flags)
+
+
+def test_cell_enumeration_counts():
+    """40 assigned cells; long_500k applies only to SSM/hybrid (2) so 34
+    runnable cells; skips are recorded, not silently dropped."""
+    all_cells = list(cells())
+    assert len(all_cells) == 10 * 3 + 2
+    runnable = {a for a, s in all_cells if s == "long_500k"}
+    assert runnable == {"zamba2-2.7b", "mamba2-1.3b"}
+    total, skipped = 0, 0
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            total += 1
+            ok, why = applicable(get_config(arch), shape)
+            if not ok:
+                skipped += 1
+                assert "sub-quadratic" in why
+    assert total == 40 and skipped == 8

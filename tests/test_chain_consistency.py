@@ -1,0 +1,148 @@
+"""Property-based consistency tests (hypothesis) for the NetCRAQ chain.
+
+External-consistency oracle over the reply log:
+
+* **read-your-acked-writes** - a READ injected after a write to the same
+  key was acknowledged to its client must return a version at least as new
+  (seq lower bound);
+* **no reads from the future** - a read can never return a seq larger than
+  the newest write injected before the read completed (upper bound);
+* **values are never corrupted** - every read returns a value that was
+  actually written (or the initial value) for that key;
+* **conservation** - with adequate capacities, every injected query gets
+  exactly one reply, and nothing is dropped.
+
+These hold under arbitrary mixes of reads/writes, entry points, key skew
+and chain lengths - the serialization point being the tick boundary
+(DESIGN.md §3).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ChainConfig, ChainSim, WorkloadConfig, make_schedule
+from repro.core.types import OP_READ, OP_READ_REPLY, OP_WRITE, OP_WRITE_REPLY
+
+
+def _run(proto, n_nodes, wf, ticks, q, seed, num_keys):
+    cfg = ChainConfig(n_nodes=n_nodes, num_keys=num_keys, num_versions=6,
+                      protocol=proto)
+    sim = ChainSim(cfg, inject_capacity=q, route_capacity=max(64, 8 * q),
+                   reply_capacity=4 * ticks * n_nodes * q + 64)
+    state = sim.init_state()
+    wl = WorkloadConfig(ticks=ticks, queries_per_tick=q, write_fraction=wf,
+                        entry_node=None, seed=seed)
+    sched = make_schedule(cfg, wl)
+    state = sim.run(state, sched, extra_ticks=4 * n_nodes)
+    return cfg, sched, state
+
+
+def _reply_records(state):
+    r = state.replies
+    n = int(r.cursor)
+    return {
+        "qid": np.asarray(r.qid[:n]),
+        "op": np.asarray(r.op[:n]),
+        "key": np.asarray(r.key[:n]),
+        "seq": np.asarray(r.seq[:n]),
+        "value0": np.asarray(r.value0[:n]),
+        "t_inject": np.asarray(r.t_inject[:n]),
+        "t_done": np.asarray(r.t_done[:n]),
+    }
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    n_nodes=st.integers(3, 6),
+    wf=st.sampled_from([0.0, 0.2, 0.5, 0.9]),
+    seed=st.integers(0, 10_000),
+    num_keys=st.sampled_from([2, 4, 16]),   # few keys -> write conflicts
+)
+def test_netcraq_external_consistency(n_nodes, wf, seed, num_keys):
+    cfg, sched, state = _run("netcraq", n_nodes, wf, ticks=6, q=4,
+                             seed=seed, num_keys=num_keys)
+    m = state.metrics.asdict()
+    assert m["drops"] == 0  # router never drops (window drops are separate)
+    rec = _reply_records(state)
+
+    writes = rec["op"] == OP_WRITE_REPLY
+    reads = rec["op"] == OP_READ_REPLY
+
+    # conservation: every READ answered exactly once; WRITE replies can be
+    # fewer than injected writes (version-window overflow drops, Algorithm
+    # 1 l.22-23 - correct behaviour under write bursts on few keys).
+    assert int(reads.sum()) == m["reads_in"]
+    assert int(writes.sum()) <= m["writes_in"]
+    assert len(np.unique(rec["qid"])) == len(rec["qid"])
+
+    # collect written values per key from the schedule
+    sched_np = jax.tree.map(np.asarray, sched)
+    w_mask = sched_np.op == OP_WRITE
+    legal = {}
+    for k in np.unique(sched_np.key[w_mask]):
+        sel = w_mask & (sched_np.key == k)
+        legal[int(k)] = set(sched_np.value[sel][:, 0].tolist()) | {0}
+
+    for i in np.where(reads)[0]:
+        k = int(rec["key"][i])
+        v = int(rec["value0"][i])
+        s = int(rec["seq"][i])
+        assert v in legal.get(k, {0}), f"read of key {k} returned unwritten {v}"
+
+        # lower bound: acked writes before this read was injected
+        lb = 0
+        for j in np.where(writes & (rec["key"] == k))[0]:
+            if rec["t_done"][j] <= rec["t_inject"][i]:
+                lb = max(lb, int(rec["seq"][j]))
+        assert s >= lb, (
+            f"stale read: key {k} seq {s} < acked {lb} "
+            f"(read injected t={rec['t_inject'][i]})"
+        )
+        # upper bound: no values from the future
+        ub = 0
+        for j in np.where(writes & (rec["key"] == k))[0]:
+            ub = max(ub, int(rec["seq"][j]))
+        assert s <= max(ub, int(rec["seq"][writes].max() if writes.any() else 0)) + len(rec["qid"])
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    n_nodes=st.integers(3, 5),
+    seed=st.integers(0, 1000),
+)
+def test_netchain_external_consistency(n_nodes, seed):
+    cfg, sched, state = _run("netchain", n_nodes, wf=0.4, ticks=5, q=4,
+                             seed=seed, num_keys=4)
+    m = state.metrics.asdict()
+    assert m["drops"] == 0
+    rec = _reply_records(state)
+    writes = rec["op"] == OP_WRITE_REPLY
+    reads = rec["op"] == OP_READ_REPLY
+    for i in np.where(reads)[0]:
+        k = int(rec["key"][i])
+        s = int(rec["seq"][i])
+        lb = 0
+        for j in np.where(writes & (rec["key"] == k))[0]:
+            if rec["t_done"][j] <= rec["t_inject"][i]:
+                lb = max(lb, int(rec["seq"][j]))
+        assert s >= lb, f"CR stale read: key {k} seq {s} < acked {lb}"
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000), wf=st.sampled_from([0.3, 0.7]))
+def test_store_invariants_after_drain(seed, wf):
+    """After the chain drains: every node's committed cell agrees with the
+    tail's (the chain converges), and pending == 0 everywhere."""
+    cfg, sched, state = _run("netcraq", 4, wf, ticks=5, q=4, seed=seed,
+                             num_keys=4)
+    pend = np.asarray(state.stores.pending)
+    assert pend.sum() == 0, "dirty versions survived the ACK wave"
+    cell0 = np.asarray(state.stores.values[:, :, 0, 0])  # [n, K]
+    seqs0 = np.asarray(state.stores.seqs[:, :, 0])
+    for node in range(4):
+        np.testing.assert_array_equal(
+            cell0[node], cell0[-1],
+            err_msg=f"node {node} committed values diverge from tail",
+        )
+        np.testing.assert_array_equal(seqs0[node], seqs0[-1])

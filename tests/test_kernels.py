@@ -1,0 +1,189 @@
+"""Per-kernel validation: shape/dtype sweeps, Pallas (interpret=True) vs
+the pure-jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.store import batch_rank
+from repro.kernels.flash_attention import kernel as fa_k
+from repro.kernels.flash_attention import ref as fa_ref
+from repro.kernels.flash_attention.ops import chunked_attention
+from repro.kernels.kv_engine import kernel as kv_k
+from repro.kernels.kv_engine import ops as kv_ops
+from repro.kernels.kv_engine import ref as kv_ref
+from repro.kernels.ssd_scan import kernel as ssd_k
+from repro.kernels.ssd_scan import ref as ssd_ref
+from repro.kernels.ssd_scan.ops import ssd, ssd_decode_step
+
+RNG = np.random.default_rng(7)
+
+
+# ---------------------------------------------------------------------------
+# kv_engine
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("K,V,W,B", [(256, 4, 4, 128), (1024, 4, 4, 512),
+                                     (512, 8, 2, 256), (2048, 2, 8, 64)])
+def test_kv_read_engine_matches_ref(K, V, W, B):
+    values = jnp.asarray(RNG.integers(0, 1 << 20, (K, V, W)), jnp.int32)
+    seqs = jnp.asarray(RNG.integers(-1, 100, (K, V)), jnp.int32)
+    pending = jnp.asarray(RNG.integers(0, V - 1, (K,)), jnp.int32)
+    keys = jnp.asarray(RNG.integers(0, K, (B,)), jnp.int32)
+    got = kv_k.read_engine(values, seqs, pending, keys)
+    exp = kv_ref.read_engine_ref(values, seqs, pending, keys)
+    for g, e in zip(got, exp):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(e))
+
+
+@pytest.mark.parametrize("K,V,W,B,key_space", [
+    (256, 4, 4, 128, 16),   # heavy collisions
+    (1024, 6, 4, 256, 1024),
+    (512, 3, 2, 64, 4),     # overflow-heavy
+])
+def test_kv_write_engine_matches_sequential_oracle(K, V, W, B, key_space):
+    values = jnp.zeros((K, V, W), jnp.int32)
+    seqs = jnp.full((K, V), -1, jnp.int32).at[:, 0].set(0)
+    pending = jnp.zeros((K,), jnp.int32)
+    wkeys = jnp.asarray(RNG.integers(0, key_space, (B,)), jnp.int32)
+    wvals = jnp.asarray(RNG.integers(0, 1 << 20, (B, W)), jnp.int32)
+    wseqs = jnp.asarray(RNG.integers(0, 1000, (B,)), jnp.int32)
+    active = jnp.asarray(RNG.integers(0, 2, (B,)), jnp.int32)
+    rank = batch_rank(wkeys, active.astype(bool))
+    got = kv_k.write_engine(values, seqs, pending, wkeys, wvals, wseqs,
+                            active, rank)
+    exp = kv_ref.write_engine_ref(values, seqs, pending, wkeys, wvals,
+                                  wseqs, active, rank)
+    for g, e in zip(got, exp):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(e))
+
+
+def test_kv_ops_integration_with_store():
+    from repro.core.store import init_store
+    from repro.core.types import ChainConfig
+
+    cfg = ChainConfig(n_nodes=4, num_keys=256, num_versions=4)
+    store = init_store(cfg)
+    B = 64
+    keys = jnp.asarray(RNG.integers(0, 256, (B,)), jnp.int32)
+    vals = jnp.asarray(RNG.integers(0, 100, (B, 4)), jnp.int32)
+    seqs = jnp.arange(1, B + 1, dtype=jnp.int32)
+    store2, acc = kv_ops.craq_write_batch(store, keys, vals, seqs,
+                                          jnp.ones((B,), bool))
+    assert bool(acc.any())
+    rv, rs, dec = kv_ops.craq_read_batch(store2, keys, is_tail=False)
+    # every touched key is dirty at a non-tail node -> forward decision
+    assert set(np.unique(np.asarray(dec))) <= {0, 2}
+    rv_t, rs_t, dec_t = kv_ops.craq_read_batch(store2, keys, is_tail=True)
+    assert set(np.unique(np.asarray(dec_t))) <= {0, 1}
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("B,HQ,HKV,S,D,causal,dtype", [
+    (2, 4, 2, 256, 64, True, jnp.float32),
+    (1, 8, 8, 128, 128, True, jnp.bfloat16),
+    (1, 4, 1, 200, 64, False, jnp.float32),
+    (2, 2, 2, 128, 32, True, jnp.bfloat16),
+])
+def test_flash_pallas_matches_ref(B, HQ, HKV, S, D, causal, dtype):
+    q = jnp.asarray(RNG.standard_normal((B, HQ, S, D)), dtype)
+    k = jnp.asarray(RNG.standard_normal((B, HKV, S, D)), dtype)
+    v = jnp.asarray(RNG.standard_normal((B, HKV, S, D)), dtype)
+    got = fa_k.flash_attention(q, k, v, causal=causal)
+    exp = fa_ref.attention_ref(q, k, v, causal=causal)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    assert float(jnp.abs(got.astype(jnp.float32)
+                         - exp.astype(jnp.float32)).max()) < tol
+
+
+@pytest.mark.parametrize("S,SK,causal", [(256, 256, True), (100, 224, True),
+                                         (128, 512, False)])
+def test_chunked_attention_grads_match_ref(S, SK, causal):
+    B, HQ, HKV, D = 1, 4, 2, 32
+    q = jnp.asarray(RNG.standard_normal((B, HQ, S, D)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((B, HKV, SK, D)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((B, HKV, SK, D)), jnp.float32)
+
+    def fa(q, k, v):
+        return (chunked_attention(q, k, v, causal=causal, q_chunk=64,
+                                  k_chunk=96) ** 2).sum()
+
+    def fb(q, k, v):
+        return (fa_ref.attention_ref(q, k, v, causal=causal)
+                .astype(jnp.float32) ** 2).sum()
+
+    ga = jax.grad(fa, argnums=(0, 1, 2))(q, k, v)
+    gb = jax.grad(fb, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(ga, gb):
+        rel = float(jnp.abs(a - b).max() / (jnp.abs(b).max() + 1e-9))
+        assert np.isfinite(rel) and rel < 2e-4
+
+
+# ---------------------------------------------------------------------------
+# SSD scan
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("BH,L,P,N,chunk,dtype", [
+    (4, 128, 64, 32, 64, jnp.float32),
+    (2, 256, 32, 64, 64, jnp.float32),
+    (2, 128, 64, 128, 32, jnp.bfloat16),
+    (1, 64, 32, 16, 16, jnp.float32),
+])
+def test_ssd_pallas_matches_recurrence(BH, L, P, N, chunk, dtype):
+    x = jnp.asarray(RNG.standard_normal((BH, L, P)), dtype)
+    dt = jnp.asarray(RNG.uniform(0.01, 0.2, (BH, L)), dtype)
+    A = jnp.asarray(-RNG.uniform(0.5, 2.0, (BH,)), jnp.float32)
+    Bm = jnp.asarray(RNG.standard_normal((BH, L, N)) * 0.3, dtype)
+    Cm = jnp.asarray(RNG.standard_normal((BH, L, N)) * 0.3, dtype)
+    D = jnp.asarray(RNG.standard_normal((BH,)), jnp.float32)
+    got = ssd_k.ssd_scan(x, dt, A, Bm, Cm, D, chunk=chunk)
+    exp = ssd_ref.ssd_scan_ref(x, dt, A, Bm, Cm, D)
+    err = float(jnp.abs(got.astype(jnp.float32)
+                        - exp.astype(jnp.float32)).max())
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    assert err < tol
+
+
+def test_ssd_decode_step_matches_scan():
+    Bsz, H, P, N, L = 2, 3, 16, 8, 12
+    x = jnp.asarray(RNG.standard_normal((Bsz, L, H, P)), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.01, 0.2, (Bsz, L, H)), jnp.float32)
+    A = jnp.asarray(-RNG.uniform(0.5, 2, (H,)), jnp.float32)
+    Bm = jnp.asarray(RNG.standard_normal((Bsz, L, N)) * 0.3, jnp.float32)
+    Cm = jnp.asarray(RNG.standard_normal((Bsz, L, N)) * 0.3, jnp.float32)
+    D = jnp.asarray(RNG.standard_normal((H,)), jnp.float32)
+    y_scan = ssd(x, dt, A, Bm, Cm, D)
+    h = jnp.zeros((Bsz, H, N, P))
+    ys = []
+    for t in range(L):
+        h, y = ssd_decode_step(h, x[:, t], dt[:, t], A, Bm[:, t], Cm[:, t], D)
+        ys.append(y)
+    err = float(jnp.abs(jnp.stack(ys, 1) - y_scan).max())
+    assert err < 1e-4
+
+
+def test_ssd_final_state_consistency():
+    from repro.kernels.ssd_scan.ref import ssd_scan_with_final_ref
+
+    BH, L, P, N = 2, 32, 8, 4
+    x = jnp.asarray(RNG.standard_normal((BH, L, P)), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.01, 0.2, (BH, L)), jnp.float32)
+    A = jnp.asarray(-RNG.uniform(0.5, 2, (BH,)), jnp.float32)
+    Bm = jnp.asarray(RNG.standard_normal((BH, L, N)) * 0.3, jnp.float32)
+    Cm = jnp.asarray(RNG.standard_normal((BH, L, N)) * 0.3, jnp.float32)
+    D = jnp.zeros((BH,), jnp.float32)
+    y, hf = ssd_scan_with_final_ref(x, dt, A, Bm, Cm, D)
+    # continuing the recurrence from hf must equal a longer scan
+    x2 = jnp.asarray(RNG.standard_normal((BH, 1, P)), jnp.float32)
+    dt2 = jnp.asarray(RNG.uniform(0.01, 0.2, (BH, 1)), jnp.float32)
+    B2 = jnp.asarray(RNG.standard_normal((BH, 1, N)) * 0.3, jnp.float32)
+    C2 = jnp.asarray(RNG.standard_normal((BH, 1, N)) * 0.3, jnp.float32)
+    y_full, _ = ssd_scan_with_final_ref(
+        jnp.concatenate([x, x2], 1), jnp.concatenate([dt, dt2], 1), A,
+        jnp.concatenate([Bm, B2], 1), jnp.concatenate([Cm, C2], 1), D)
+    # one decode step from hf
+    decay = jnp.exp(dt2[:, 0] * A)[:, None, None]
+    h_next = decay * hf + dt2[:, 0, None, None] * (
+        B2[:, 0, :, None] * x2[:, 0, None, :])
+    y_next = jnp.einsum("bn,bnp->bp", C2[:, 0], h_next)
+    assert float(jnp.abs(y_next - y_full[:, -1]).max()) < 1e-4

@@ -1,0 +1,124 @@
+"""Model-level correctness: decode==prefill consistency, attention impl
+equivalence, MoE routing behaviour, rotary variants."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.models import api
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models.transformer import OptFlags
+
+KEY = jax.random.PRNGKey(1)
+
+
+@pytest.mark.parametrize("arch_id", [
+    "qwen2.5-3b", "chatglm3-6b", "llama3.2-3b", "internvl2-26b",
+    "whisper-base", "zamba2-2.7b", "mamba2-1.3b",
+])
+def test_decode_matches_prefill_f32(arch_id):
+    cfg = dataclasses.replace(get_config(arch_id).reduced(),
+                              compute_dtype="float32")
+    params = api.init_params(cfg, KEY)
+    B, S = 2, 16
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab, jnp.int32)
+    batch = {"tokens": toks}
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            KEY, (B, cfg.enc_len, cfg.d_model), jnp.float32) * 0.1
+    if cfg.vis_len:
+        batch["embeds"] = jax.random.normal(
+            KEY, (B, cfg.vis_len, cfg.d_model), jnp.float32) * 0.1
+    logits, _ = api.prefill_fn(cfg)(params, batch, 32)
+    batch2 = dict(batch)
+    batch2["tokens"] = toks[:, :-1]
+    _, cache = api.prefill_fn(cfg)(params, batch2, 32)
+    logits2, _ = api.decode_fn(cfg)(params, cache, toks[:, -1:])
+    assert float(jnp.abs(logits - logits2).max()) < 1e-3
+
+
+@pytest.mark.parametrize("arch_id", ["granite-moe-3b-a800m",
+                                     "llama4-scout-17b-a16e"])
+def test_moe_decode_exact_without_capacity_drops(arch_id):
+    cfg = dataclasses.replace(get_config(arch_id).reduced(),
+                              compute_dtype="float32", capacity_factor=8.0)
+    params = api.init_params(cfg, KEY)
+    B, S = 2, 16
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab, jnp.int32)
+    logits, _ = api.prefill_fn(cfg)(params, {"tokens": toks}, 32)
+    _, cache = api.prefill_fn(cfg)(params, {"tokens": toks[:, :-1]}, 32)
+    logits2, _ = api.decode_fn(cfg)(params, cache, toks[:, -1:])
+    assert float(jnp.abs(logits - logits2).max()) < 1e-4
+
+
+def test_moe_capacity_drops_bounded():
+    """Token-drop rate under capacity_factor=1.25 stays modest for a
+    balanced router at init."""
+    cfg = dataclasses.replace(get_config("granite-moe-3b-a800m").reduced(),
+                              compute_dtype="float32")
+    p = MOE.moe_init(KEY, cfg)
+    x = jax.random.normal(KEY, (4, 64, cfg.d_model), jnp.float32)
+    y = MOE.moe_apply(p, x, cfg)
+    assert y.shape == x.shape and bool(jnp.isfinite(y).all())
+    aux = MOE.moe_aux_loss(p, x, cfg)
+    # balanced-ish at init: aux loss near 1 (its minimum for uniform routing)
+    assert 0.5 < float(aux) < 3.0
+
+
+def test_moe_padded_experts_receive_no_tokens():
+    cfg = dataclasses.replace(
+        get_config("granite-moe-3b-a800m").reduced(),
+        n_experts=6, expert_pad=2, compute_dtype="float32",
+    )
+    p = MOE.moe_init(KEY, cfg)
+    logits = L.dense(p["router"], jax.random.normal(KEY, (2, 8, cfg.d_model)),
+                     compute_dtype=jnp.float32)
+    pad_mask = jnp.arange(cfg.n_experts_padded) >= cfg.n_experts
+    masked = jnp.where(pad_mask[None, None], -1e30, logits)
+    top = jax.lax.top_k(jax.nn.softmax(masked, -1), cfg.top_k)[1]
+    assert int((top >= cfg.n_experts).sum()) == 0
+
+
+def test_rotary_partial_fraction():
+    """ChatGLM3's 2d RoPE rotates half the head dim; the rest passes
+    through untouched."""
+    x = jax.random.normal(KEY, (1, 8, 2, 32))
+    pos = jnp.arange(8)[None]
+    full = L.rotary(x, pos, fraction=1.0)
+    half = L.rotary(x, pos, fraction=0.5)
+    np.testing.assert_allclose(np.asarray(half[..., 16:]),
+                               np.asarray(x[..., 16:]))
+    assert not np.allclose(np.asarray(half[..., :16]), np.asarray(x[..., :16]))
+    assert not np.allclose(np.asarray(full[..., 16:]), np.asarray(x[..., 16:]))
+    # position 0 is identity
+    np.testing.assert_allclose(np.asarray(full[:, :1]), np.asarray(x[:, :1]),
+                               atol=1e-6)
+
+
+def test_chunked_ce_matches_full():
+    B, S, d, V = 2, 32, 16, 64
+    x = jax.random.normal(KEY, (B, S, d), jnp.float32)
+    w = jax.random.normal(KEY, (d, V), jnp.float32) * 0.1
+    labels = jax.random.randint(KEY, (B, S), 0, V, jnp.int32)
+    full = L.softmax_xent((x @ w), labels)
+    for chunk in (8, 16, 32):
+        c = L.chunked_xent(x, w, labels, chunk=chunk)
+        assert abs(float(full - c)) < 1e-5
+
+
+def test_vlm_embeds_change_text_logits():
+    """The stub frontend is really wired in: visual embeddings must affect
+    the text-position hidden states (causal flow: embeds are prepended)."""
+    cfg = dataclasses.replace(get_config("internvl2-26b").reduced(),
+                              compute_dtype="float32")
+    params = api.init_params(cfg, KEY)
+    toks = jax.random.randint(KEY, (1, 8), 0, cfg.vocab, jnp.int32)
+    e1 = jnp.zeros((1, cfg.vis_len, cfg.d_model))
+    e2 = jnp.ones((1, cfg.vis_len, cfg.d_model)) * 0.3
+    l1, _ = api.prefill_fn(cfg)(params, {"tokens": toks, "embeds": e1}, 32)
+    l2, _ = api.prefill_fn(cfg)(params, {"tokens": toks, "embeds": e2}, 32)
+    assert float(jnp.abs(l1 - l2).max()) > 1e-4

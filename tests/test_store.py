@@ -1,0 +1,105 @@
+"""Unit tests for the versioned object store (core/store.py)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import store as st
+from repro.core.types import ChainConfig
+
+
+@pytest.fixture
+def cfg():
+    return ChainConfig(n_nodes=4, num_keys=16, num_versions=4)
+
+
+def test_init_clean(cfg):
+    s = st.init_store(cfg)
+    assert bool(st.is_clean(s, jnp.arange(16)).all())
+    v, q = st.read_clean(s, jnp.asarray([3]))
+    assert v.shape == (1, cfg.value_words)
+    assert int(q[0]) == 0
+
+
+def test_append_and_read_latest(cfg):
+    s = st.init_store(cfg)
+    keys = jnp.asarray([5, 5, 7], jnp.int32)
+    vals = jnp.asarray([[1, 0, 0, 0], [2, 0, 0, 0], [3, 0, 0, 0]], jnp.int32)
+    seqs = jnp.asarray([1, 2, 1], jnp.int32)
+    active = jnp.asarray([True, True, True])
+    s, acc = st.append_dirty(s, keys, vals, seqs, active)
+    assert acc.tolist() == [True, True, True]
+    assert int(s.pending[5]) == 2 and int(s.pending[7]) == 1
+    lv, ls = st.read_latest(s, jnp.asarray([5, 7]))
+    assert lv[:, 0].tolist() == [2, 3]
+    assert ls.tolist() == [2, 1]
+    # clean read still returns the committed (initial) version
+    cv, cs = st.read_clean(s, jnp.asarray([5]))
+    assert int(cv[0, 0]) == 0 and int(cs[0]) == 0
+
+
+def test_window_overflow_drops(cfg):
+    """Writes beyond the version window are dropped (Algorithm 1 l.22-23)."""
+    s = st.init_store(cfg)
+    n = cfg.num_versions  # window has n-1 dirty slots
+    keys = jnp.full((n + 2,), 3, jnp.int32)
+    vals = jnp.tile(jnp.arange(n + 2, dtype=jnp.int32)[:, None], (1, 4))
+    seqs = jnp.arange(1, n + 3, dtype=jnp.int32)
+    s, acc = st.append_dirty(s, keys, vals, seqs, jnp.ones(n + 2, bool))
+    assert acc.tolist() == [True] * (n - 1) + [False] * 3
+    assert int(s.pending[3]) == n - 1
+
+
+def test_commit_compacts(cfg):
+    s = st.init_store(cfg)
+    keys = jnp.asarray([5, 5, 5], jnp.int32)
+    vals = jnp.asarray([[10, 0, 0, 0], [20, 0, 0, 0], [30, 0, 0, 0]], jnp.int32)
+    seqs = jnp.asarray([1, 2, 3], jnp.int32)
+    s, _ = st.append_dirty(s, keys, vals, seqs, jnp.ones(3, bool))
+    # ack seq 2: versions 1,2 deleted; version 3 shifts down; cell0 = 20
+    s = st.commit(
+        s, jnp.asarray([5]), jnp.asarray([[20, 0, 0, 0]]), jnp.asarray([2]),
+        jnp.asarray([True]),
+    )
+    assert int(s.pending[5]) == 1
+    assert int(s.values[5, 0, 0]) == 20 and int(s.seqs[5, 0]) == 2
+    lv, ls = st.read_latest(s, jnp.asarray([5]))
+    assert int(lv[0, 0]) == 30 and int(ls[0]) == 3
+
+
+def test_commit_stale_ack_noop(cfg):
+    s = st.init_store(cfg)
+    s = st.commit(
+        s, jnp.asarray([2]), jnp.asarray([[9, 0, 0, 0]]), jnp.asarray([5]),
+        jnp.asarray([True]),
+    )
+    # older ack must not roll back
+    s2 = st.commit(
+        s, jnp.asarray([2]), jnp.asarray([[7, 0, 0, 0]]), jnp.asarray([3]),
+        jnp.asarray([True]),
+    )
+    assert int(s2.values[2, 0, 0]) == 9 and int(s2.seqs[2, 0]) == 5
+
+
+def test_batch_rank_serialization():
+    keys = jnp.asarray([1, 2, 1, 1, 2], jnp.int32)
+    active = jnp.asarray([True, True, True, False, True])
+    rank = st.batch_rank(keys, active)
+    assert rank.tolist() == [0, 0, 1, 0, 1]  # inactive rows don't count
+
+
+def test_assign_seqs_monotone(cfg):
+    s = st.init_store(cfg)
+    keys = jnp.asarray([4, 4, 9], jnp.int32)
+    s, seqs = st.assign_seqs(s, keys, jnp.ones(3, bool))
+    assert seqs.tolist() == [1, 2, 1]
+    s, seqs2 = st.assign_seqs(s, keys, jnp.ones(3, bool))
+    assert seqs2.tolist() == [3, 4, 2]
+
+
+def test_overwrite_clean_netchain(cfg):
+    """CR single-version write: newest seq wins, stale writes ignored."""
+    s = st.init_store(cfg)
+    keys = jnp.asarray([1, 1], jnp.int32)
+    vals = jnp.asarray([[5, 0, 0, 0], [6, 0, 0, 0]], jnp.int32)
+    s = st.overwrite_clean(s, keys, vals, jnp.asarray([2, 1]), jnp.ones(2, bool))
+    assert int(s.values[1, 0, 0]) == 5 and int(s.seqs[1, 0]) == 2

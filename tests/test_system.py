@@ -1,0 +1,140 @@
+"""End-to-end behaviour: the paper's packet economics and protocol
+semantics, verified against the exact counts from §II.B / §III.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    ChainConfig,
+    ChainSim,
+    WorkloadConfig,
+    make_schedule,
+    NETCRAQ_HEADER_BYTES,
+    netchain_header_bytes,
+)
+from repro.core.types import OP_READ_REPLY, OP_WRITE_REPLY
+
+
+def run_sim(proto, n_nodes=4, wf=0.0, entry=0, ticks=4, q=4, seed=1,
+            num_keys=32):
+    cfg = ChainConfig(n_nodes=n_nodes, num_keys=num_keys, num_versions=4,
+                      protocol=proto)
+    sim = ChainSim(cfg, inject_capacity=8, route_capacity=128,
+                   reply_capacity=8192)
+    st = sim.init_state()
+    wl = WorkloadConfig(ticks=ticks, queries_per_tick=q, write_fraction=wf,
+                        entry_node=entry, seed=seed)
+    st = sim.run(st, make_schedule(cfg, wl), extra_ticks=3 * n_nodes)
+    return st
+
+
+def test_netcraq_clean_read_cost_is_2_packets_anywhere():
+    """Paper Fig 1b / §IV.A: CRAQ clean reads are answered locally - 2
+    packets and 1 pipeline pass per read, at ANY distance from the tail."""
+    for entry in range(4):
+        st = run_sim("netcraq", entry=entry)
+        n = int(st.replies.cursor)
+        m = st.metrics.asdict()
+        assert n == 16
+        assert m["packets"] == 2 * n
+        assert set(np.unique(np.asarray(st.replies.hops[:n]))) == {2}
+        assert m["drops"] == 0
+
+
+def test_netchain_read_cost_grows_with_distance():
+    """Paper §II.B: CR needs 2(d+1) packets for a read entering at distance
+    d from the tail - 2n for head-directed reads."""
+    for n_nodes in (4, 6, 8):
+        st = run_sim("netchain", n_nodes=n_nodes, entry=0)
+        n = int(st.replies.cursor)
+        m = st.metrics.asdict()
+        assert n == 16
+        assert m["packets"] == 2 * n_nodes * n  # the paper's 2n packets
+    # tail-directed reads cost 2 packets as in CRAQ
+    st = run_sim("netchain", n_nodes=4, entry=3)
+    assert st.metrics.asdict()["packets"] == 2 * int(st.replies.cursor)
+
+
+def test_netcraq_write_path_and_ack_multicast():
+    """Write: client->head (1) + chain propagation (n-1) + ACK multicast
+    (sum of link distances from tail) + client reply (1)."""
+    n_nodes = 4
+    st = run_sim("netcraq", n_nodes=n_nodes, wf=1.0, entry=None, ticks=2, q=2)
+    n = int(st.replies.cursor)
+    m = st.metrics.asdict()
+    assert n == 4  # every write acknowledged to the client
+    mcast_links = sum(abs((n_nodes - 1) - i) for i in range(n_nodes - 1))
+    per_write = 1 + (n_nodes - 1) + mcast_links + 1
+    assert m["packets"] == per_write * n
+    # all dirty versions compacted after the ACK wave
+    assert int(st.stores.pending.sum()) == 0
+
+
+def test_write_then_read_returns_value():
+    cfg = ChainConfig(n_nodes=4, num_keys=8, num_versions=4, protocol="netcraq")
+    sim = ChainSim(cfg, inject_capacity=8, route_capacity=64, reply_capacity=256)
+    st = sim.init_state()
+    from repro.core.types import Msg, OP_READ, OP_WRITE, CLIENT_BASE, NOWHERE
+
+    def inject_one(op, key, val, node, qid):
+        m = jax.tree.map(
+            lambda x: jnp.tile(x[None], (4,) + (1,) * x.ndim), Msg.empty(8)
+        )
+        return m._replace(
+            op=m.op.at[node, 0].set(op),
+            key=m.key.at[node, 0].set(key),
+            value=m.value.at[node, 0, 0].set(val),
+            src=m.src.at[node, 0].set(CLIENT_BASE + 1),
+            client=m.client.at[node, 0].set(CLIENT_BASE + 1),
+            dst=m.dst.at[node, 0].set(node),
+            qid=m.qid.at[node, 0].set(qid),
+        )
+
+    st = sim.tick(st, inject_one(OP_WRITE, 3, 777, 0, 1))
+    for _ in range(8):
+        st = sim.tick(st, jax.tree.map(
+            lambda x: jnp.tile(x[None], (4,) + (1,) * x.ndim), Msg.empty(8)))
+    st = sim.tick(st, inject_one(OP_READ, 3, 0, 2, 2))
+    for _ in range(4):
+        st = sim.tick(st, jax.tree.map(
+            lambda x: jnp.tile(x[None], (4,) + (1,) * x.ndim), Msg.empty(8)))
+    r = st.replies
+    n = int(r.cursor)
+    recs = {int(r.qid[i]): (int(r.op[i]), int(r.value0[i])) for i in range(n)}
+    assert recs[1][0] == OP_WRITE_REPLY and recs[1][1] == 777
+    assert recs[2][0] == OP_READ_REPLY and recs[2][1] == 777
+
+
+def test_mixed_workload_no_loss():
+    st = run_sim("netcraq", wf=0.3, entry=None, ticks=6, q=4, seed=9)
+    m = st.metrics.asdict()
+    assert m["drops"] == 0
+    assert int(st.replies.cursor) == m["reads_in"] + m["writes_in"]
+
+
+def test_header_bytes_match_paper():
+    """§II.B / §III.A.2: NetCRAQ 20 B fixed; NetChain 58 B at 4 nodes,
+    +4 B per extra node."""
+    assert NETCRAQ_HEADER_BYTES == 20
+    assert netchain_header_bytes(4) == 58
+    assert netchain_header_bytes(5) - netchain_header_bytes(4) == 4
+    cfg8 = ChainConfig(n_nodes=8, protocol="netchain")
+    cfg4 = ChainConfig(n_nodes=4, protocol="netchain")
+    assert cfg8.header_bytes - cfg4.header_bytes == 16
+    assert ChainConfig(n_nodes=8, protocol="netcraq").header_bytes == 20
+
+
+def test_netcraq_throughput_independent_of_chain_length():
+    """Paper Fig 6: read packets-per-reply is flat in chain length for
+    NetCRAQ, linear for NetChain."""
+    ppr = {}
+    for proto in ("netcraq", "netchain"):
+        ppr[proto] = []
+        for n_nodes in (4, 6, 8):
+            st = run_sim(proto, n_nodes=n_nodes, entry=0)
+            m = st.metrics.asdict()
+            ppr[proto].append(m["packets"] / int(st.replies.cursor))
+    assert ppr["netcraq"] == [2.0, 2.0, 2.0]
+    assert ppr["netchain"] == [8.0, 12.0, 16.0]
