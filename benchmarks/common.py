@@ -23,7 +23,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import ChainConfig, ChainSim, WorkloadConfig, make_schedule
+from repro.core import (ChainConfig, ChainSim, ClusterConfig, WorkloadConfig,
+                        make_schedule)
 
 # Calibrated model constants.  BMv2 (the paper's testbed) is a SOFTWARE
 # switch: ~30 us per match-action pipeline pass, every emulated switch
@@ -42,17 +43,35 @@ def t_pass_us(header_bytes: int) -> float:
     return T_OP_US + T_BYTE_US * header_bytes
 
 
-def run_workload(proto: str, n_nodes: int, *, wf=0.0, entry=None, ticks=8,
-                 q=8, seed=0, num_keys=64, versions=6):
-    cfg = ChainConfig(n_nodes=n_nodes, num_keys=num_keys,
-                      num_versions=versions, protocol=proto)
-    sim = ChainSim(cfg, inject_capacity=q, route_capacity=max(128, 8 * q),
+def run_cluster_workload(proto: str, n_chains: int, n_nodes: int = 4, *,
+                         wf=0.0, entry=None, ticks=8, q=8, seed=0,
+                         num_keys=64, versions=6):
+    """Run a paper-style workload over a C-chain cluster ([C, n, ...] state).
+
+    ``q`` is queries per node per chain per tick (fixed per-chain QPS);
+    total injected load scales with C.
+    """
+    cluster = ClusterConfig(
+        chain=ChainConfig(n_nodes=n_nodes, num_keys=num_keys,
+                          num_versions=versions, protocol=proto),
+        n_chains=n_chains,
+    )
+    sim = ChainSim(cluster, inject_capacity=q, route_capacity=max(128, 8 * q),
                    reply_capacity=8 * ticks * n_nodes * q + 64)
     state = sim.init_state()
     wl = WorkloadConfig(ticks=ticks, queries_per_tick=q,
                         write_fraction=wf, entry_node=entry, seed=seed)
-    state = sim.run(state, make_schedule(cfg, wl), extra_ticks=4 * n_nodes)
-    return cfg, sim, state
+    state = sim.run(state, make_schedule(cluster, wl), extra_ticks=4 * n_nodes)
+    return cluster, sim, state
+
+
+def run_workload(proto: str, n_nodes: int, *, wf=0.0, entry=None, ticks=8,
+                 q=8, seed=0, num_keys=64, versions=6):
+    """Single-chain view of run_cluster_workload (C=1; same sizing logic)."""
+    cluster, sim, state = run_cluster_workload(
+        proto, 1, n_nodes, wf=wf, entry=entry, ticks=ticks, q=q, seed=seed,
+        num_keys=num_keys, versions=versions)
+    return cluster.chain, sim, state
 
 
 def measure_engine_us_per_query(proto: str = "netcraq", n_nodes: int = 4,
@@ -78,13 +97,14 @@ def measure_engine_us_per_query(proto: str = "netcraq", n_nodes: int = 4,
 
 
 def replies_stats(state):
-    r = state.replies
+    """Reply-log view for analysis - merges per-chain logs into one."""
+    r = state.replies.merged()
     n = int(r.cursor)
     return {
         "n": n,
-        "hops": np.asarray(r.hops[:n]),
-        "procs": np.asarray(r.procs[:n]),
-        "op": np.asarray(r.op[:n]),
+        "hops": np.asarray(r.hops),
+        "procs": np.asarray(r.procs),
+        "op": np.asarray(r.op),
     }
 
 

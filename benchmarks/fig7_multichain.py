@@ -1,0 +1,121 @@
+"""Fig 7 (this repo): multi-chain scaling - the paper's multi-node headline.
+
+The paper reports up to 9x higher throughput with multiple participating
+nodes: C virtual chains serve disjoint key partitions in parallel, so
+aggregate throughput scales with C while per-query cost stays flat (clean
+CRAQ reads are 2 packets / 1 pipeline pass regardless of C).
+
+Two sweeps over C in {1, 2, 4, 8}:
+
+* fixed per-chain QPS - every chain carries the single-chain load; the
+  aggregate reply count must scale ~C x (the simulator measures it
+  exactly), and per-reply packets/passes stay at the single-chain values.
+* fixed total QPS (stream-routed) - one global client stream is routed to
+  each key's owning chain via the partition map (``route_stream``); more
+  chains means each pipeline serves a 1/C slice, so the modeled
+  service-limited aggregate QPS scales with C.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import (BenchRow, replies_stats, run_cluster_workload,
+                               throughput_qps)
+from repro.core import (ChainConfig, ChainSim, ClusterConfig, WorkloadConfig,
+                        make_schedule, route_stream)
+from repro.core.types import Msg, OP_READ_REPLY
+
+
+def _fixed_per_chain(chains=(1, 2, 4, 8), proto="netcraq"):
+    rows, base = [], None
+    for C in chains:
+        cluster, sim, state = run_cluster_workload(proto, C, entry=None)
+        st = replies_stats(state)
+        m = state.metrics.asdict()
+        reads = st["op"] == OP_READ_REPLY
+        procs = float(st["procs"][reads].mean()) if reads.any() else 1.0
+        # KV passes vs free reply relays, as in fig3/fig6: reads spread
+        # uniformly, so a CR read visits mean-distance-to-tail + 1 pipelines
+        # ((n-1)/2 + 1); the rest of the measured ticks are IP reply relays.
+        exp_kv = (cluster.n_nodes - 1) / 2 + 1
+        kv_passes = min(procs, exp_kv)
+        relay = max(procs - kv_passes, 0.0)
+        # aggregate service-limited throughput: C independent pipelines
+        agg_qps = C * throughput_qps(cluster.chain, kv_passes, relay)
+        if base is None:
+            base = st["n"]
+        per_chain = state.metrics.per_chain()["replies"]
+        rows.append(BenchRow(
+            name=f"fig7/{proto}/per_chain_qps/C{C}",
+            us_per_call=1e6 / agg_qps,
+            derived=(f"replies={st['n']};scale={st['n'] / base:.2f}x;"
+                     f"per_chain={min(per_chain)}..{max(per_chain)};"
+                     f"pkts_per_reply={m['packets'] / max(st['n'], 1):.1f};"
+                     f"agg_qps={agg_qps:,.0f}"),
+        ))
+    return rows
+
+
+def _fixed_total(chains=(1, 2, 4, 8), proto="netcraq", total_per_tick=32,
+                 ticks=8, n_nodes=4, num_keys=64, seed=0):
+    """One global stream of ``total_per_tick`` read queries per tick, routed
+    by the partition map; lanes sized with headroom so nothing drops."""
+    rows = []
+    for C in chains:
+        cluster = ClusterConfig(
+            chain=ChainConfig(n_nodes=n_nodes, num_keys=num_keys,
+                              num_versions=6, protocol=proto),
+            n_chains=C,
+        )
+        rng = jax.random.PRNGKey(seed)
+        k_key = jax.random.split(rng, 1)[0]
+        T, Q = ticks, total_per_tick
+        gkeys = jax.random.randint(k_key, (T, Q), 0,
+                                   cluster.num_global_keys, jnp.int32)
+        base = Msg.empty(Q)
+        stream: Msg = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (T,) + x.shape), base
+        )
+        qid = jnp.arange(T * Q, dtype=jnp.int32).reshape(T, Q)
+        from repro.core.types import CLIENT_BASE, OP_READ
+        stream = stream._replace(
+            op=jnp.full((T, Q), OP_READ, jnp.int32),
+            key=gkeys,
+            src=CLIENT_BASE + qid % 1024,
+            client=CLIENT_BASE + qid % 1024,
+            qid=qid,
+            t_inject=jnp.broadcast_to(
+                jnp.arange(T, dtype=jnp.int32)[:, None], (T, Q)),
+        )
+        q_lane = max(2 * total_per_tick // max(C * n_nodes, 1), 4)
+        sched = route_stream(cluster, stream, q_lane)
+        sim = ChainSim(cluster, inject_capacity=q_lane,
+                       route_capacity=max(128, 8 * q_lane),
+                       reply_capacity=4 * T * Q + 64)
+        state = sim.run(sim.init_state(), sched, extra_ticks=4 * n_nodes)
+        st = replies_stats(state)
+        m = state.metrics.asdict()
+        # each chain's pipeline serves ~1/C of the stream
+        per_pipe_load = total_per_tick / C
+        rows.append(BenchRow(
+            name=f"fig7/{proto}/total_qps/C{C}",
+            us_per_call=0.0,
+            derived=(f"replies={st['n']}/{T * Q};"
+                     f"pkts_per_reply={m['packets'] / max(st['n'], 1):.1f};"
+                     f"load_per_chain={per_pipe_load:.1f}q/tick"),
+        ))
+    return rows
+
+
+def run(chains=(1, 2, 4, 8)):
+    rows = []
+    for proto in ("netcraq", "netchain"):
+        rows += _fixed_per_chain(chains, proto)
+    rows += _fixed_total(chains, "netcraq")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

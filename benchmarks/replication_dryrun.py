@@ -27,6 +27,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import get_config
+from repro.distributed.shard import shard_map
 from repro.roofline.analysis import ICI_BW, parse_collective_bytes
 from repro.serve import kv_cache as KV
 
@@ -59,7 +60,7 @@ def build(protocol: str, cfg, *, batch=32, page_tokens=1):
     mesh = jax.make_mesh((CHAIN, 4, 16), ("chain", "data", "model"))
     spec = P("chain")
     f = jax.jit(
-        jax.shard_map(
+        shard_map(
             step, mesh=mesh,
             in_specs=(spec, spec, spec),
             out_specs=(spec, spec, spec),

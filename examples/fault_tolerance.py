@@ -24,7 +24,7 @@ def main():
     wl = WorkloadConfig(ticks=4, queries_per_tick=4, write_fraction=0.3,
                         seed=1)
     state = sim.run(state, make_schedule(cfg, wl), extra_ticks=12)
-    print(f"steady state: {int(state.replies.cursor)} replies, "
+    print(f"steady state: {int(state.replies.cursor.sum())} replies, "
           f"pending={int(state.stores.pending.sum())} (all committed)")
 
     # 2. node 2 dies; detector notices; clients redirect
@@ -48,18 +48,19 @@ def main():
     sim3 = ChainSim(cfg3, inject_capacity=8, route_capacity=128)
     state3 = sim3.init_state()
     state3 = state3._replace(stores=jax.tree.map(
-        lambda x: x[jnp.asarray([0, 1, 3])], state.stores))
+        lambda x: x[:, jnp.asarray([0, 1, 3])], state.stores))
     wl3 = WorkloadConfig(ticks=3, queries_per_tick=4, write_fraction=0.2,
                          seed=2)
     state3 = sim3.run(state3, make_schedule(cfg3, wl3), extra_ticks=10)
-    print(f"degraded chain: {int(state3.replies.cursor)} replies served "
+    print(f"degraded chain: {int(state3.replies.cursor.sum())} replies served "
           f"with 3/4 nodes, pending={int(state3.stores.pending.sum())}")
 
     # 4. phase 2: recovery copy from the CRAQ-prescribed source
     membership, recovered = coord.recover_node(
         0, new_node_id=2, position=2, stores=state.stores)
     src = coord.recovery_log[-1]["from"]
-    same = bool(jnp.array_equal(recovered.values[2], state.stores.values[src]))
+    same = bool(jnp.array_equal(recovered.values[0, 2],
+                                state.stores.values[0, src]))
     print(f"\nphase 2: node 2 re-enters at position 2, KV pairs copied "
           f"from node {src} (writes frozen during copy). "
           f"copy exact: {same}. epoch now {membership.epoch}.")

@@ -50,20 +50,21 @@ def main():
     # write LEADER=7 via the head
     state = sim.tick(state, inject(sim, OP_WRITE, key=0, val=7, node=0, qid=1))
     state = drain(sim, state, 10)
-    print(f"\nwrite committed; packets so far: {int(state.metrics.packets)} "
+    print(f"\nwrite committed; packets so far: {int(state.metrics.packets.sum())} "
           f"(client leg + {cfg.n_nodes - 1} chain hops + ACK multicast + reply)")
 
     # read it back from EVERY node - each is a local 2-packet round trip
-    before = int(state.metrics.packets)
+    before = int(state.metrics.packets.sum())
     for node in range(4):
         state = sim.tick(state, inject(sim, OP_READ, 0, 0, node, 10 + node))
     state = drain(sim, state, 4)
-    reads = int(state.metrics.packets) - before
-    n = int(state.replies.cursor)
+    reads = int(state.metrics.packets.sum()) - before
+    replies = state.replies.merged()
+    n = int(replies.cursor)
     print(f"4 reads (one per node) cost {reads} packets total "
           f"({reads // 4} per read - distance-independent, paper Fig 3)")
-    vals = [int(state.replies.value0[i]) for i in range(n)
-            if int(state.replies.op[i]) == 4]
+    vals = [int(replies.value0[i]) for i in range(n)
+            if int(replies.op[i]) == 4]
     print(f"every node answered LEADER={set(vals)} locally")
 
     # the same reads on NetChain would cost 2+4+6+8 = 20 packets

@@ -12,6 +12,8 @@ Public surface:
 """
 from repro.core.types import (  # noqa: F401
     ChainConfig,
+    ClusterConfig,
+    as_cluster,
     Msg,
     Roles,
     OP_ACK,
@@ -31,4 +33,4 @@ from repro.core.store import Store, init_store  # noqa: F401
 from repro.core.chain import ChainDist, ChainSim, SimState  # noqa: F401
 from repro.core.coordinator import ChainMembership, Coordinator  # noqa: F401
 from repro.core.metrics import Metrics, ReplyLog  # noqa: F401
-from repro.core.workload import WorkloadConfig, make_schedule  # noqa: F401
+from repro.core.workload import WorkloadConfig, make_schedule, route_stream  # noqa: F401

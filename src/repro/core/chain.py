@@ -1,16 +1,22 @@
 """Chain execution engines.
 
-``ChainSim``  - tick-synchronous simulator: every chain node is a slice of a
-leading array axis on one device (vmap of the node step), message routing is
-an explicit fabric with exact packet/hop/byte accounting.  This is the
-engine behind the paper-figure benchmarks and the consistency tests.
+``ChainSim``  - tick-synchronous simulator over a *cluster* of C virtual
+chains: state carries a leading chain axis ``[C, n, ...]`` and the per-chain
+tick (node vmap + explicit routing fabric with exact packet/hop/byte
+accounting) is vmapped over the chain axis - one jit, C independent chains
+per tick.  Chains serve disjoint key partitions (``ClusterConfig``), so the
+fabric only ever delivers within a chain; a single-chain cluster reproduces
+the seed engine's counts bit-for-bit.  This is the engine behind the
+paper-figure benchmarks and the consistency tests.
 
 ``ChainDist`` - the production engine: one chain node per device along a
 named mesh axis under ``shard_map``.  Write propagation uses
 ``jax.lax.ppermute`` (one ICI hop per chain hop, exactly the paper's
 next-hop forwarding), dirty-read fetch and ACK multicast use a masked
-``all_gather`` (the ICI ring acting as the multicast tree).  The multi-pod
-dry-run lowers this engine on the production meshes.
+``all_gather`` (the ICI ring acting as the multicast tree).  With a second
+``group_axis`` on the mesh, C chains run side by side - the collectives are
+scoped to the position axis, so each chain group exchanges only within
+itself.  The multi-pod dry-run lowers this engine on the production meshes.
 
 Both engines share the per-node control logic in ``craq.py``/``netchain.py``.
 """
@@ -36,9 +42,12 @@ from repro.core.types import (
     OP_WRITE,
     TO_CLIENT,
     ChainConfig,
+    ClusterConfig,
     Msg,
     Roles,
+    as_cluster,
 )
+from repro.distributed.shard import shard_map
 
 NODE_STEPS: dict[str, Callable] = {
     "netcraq": craq.node_step,
@@ -47,11 +56,11 @@ NODE_STEPS: dict[str, Callable] = {
 
 
 class SimState(NamedTuple):
-    stores: Store        # leading [n] axis
-    inbox: Msg           # [n, C]
-    metrics: Metrics
-    replies: ReplyLog
-    t: jax.Array         # [] int32 tick counter
+    stores: Store        # leading [C, n] axes
+    inbox: Msg           # [C, n, cap]
+    metrics: Metrics     # [C] per-chain counters (Metrics.total() reduces)
+    replies: ReplyLog    # [C, R]
+    t: jax.Array         # [] int32 tick counter (shared; chains are in step)
 
 
 def _roles_for(n: int) -> Roles:
@@ -59,44 +68,67 @@ def _roles_for(n: int) -> Roles:
 
 
 class ChainSim:
-    """Single-device chain simulator with exact traffic accounting."""
+    """Cluster simulator with exact traffic accounting.
+
+    Accepts a ``ClusterConfig`` (C chains) or a bare ``ChainConfig``
+    (single chain).  All state is ``[C, n, ...]``; injection schedules are
+    ``[T, C, n, q]`` (a legacy ``[T, n, q]`` schedule is lifted to C=1).
+    """
 
     def __init__(
         self,
-        cfg: ChainConfig,
+        cfg: ChainConfig | ClusterConfig,
         inject_capacity: int = 64,
         route_capacity: int = 256,
         reply_capacity: int = 4096,
     ):
-        self.cfg = cfg
-        self.n = cfg.n_nodes
+        self.cluster = as_cluster(cfg)
+        self.cfg = self.cluster.chain
+        self.C = self.cluster.n_chains
+        self.n = self.cfg.n_nodes
         self.c_in = inject_capacity
         self.c_route = route_capacity
         self.capacity = inject_capacity + route_capacity
         self.reply_capacity = reply_capacity
-        self.node_step = NODE_STEPS[cfg.protocol]
+        self.node_step = NODE_STEPS[self.cfg.protocol]
 
     # -- state ------------------------------------------------------------
-    def init_state(self) -> SimState:
+    def _init_chain_state(self):
+        """State of ONE chain (no chain axis) - vmapped over C in init."""
         stores = jax.vmap(lambda _: store_lib.init_store(self.cfg))(
             jnp.arange(self.n)
         )
-        return SimState(
-            stores=stores,
+        return (
+            stores,
             # carry width is c_route: tick consumes [c_in + c_route] and
             # re-emits a routed inbox of width c_route (scan-stable shapes)
-            inbox=jax.vmap(lambda _: Msg.empty(self.c_route, self.cfg.value_words))(
+            jax.vmap(lambda _: Msg.empty(self.c_route, self.cfg.value_words))(
                 jnp.arange(self.n)
             ),
-            metrics=Metrics.zeros(),
-            replies=ReplyLog.empty(self.reply_capacity),
+            Metrics.zeros(),
+            ReplyLog.empty(self.reply_capacity),
+        )
+
+    def init_state(self) -> SimState:
+        stores, inbox, metrics, replies = jax.vmap(
+            lambda _: self._init_chain_state()
+        )(jnp.arange(self.C))
+        return SimState(
+            stores=stores,
+            inbox=inbox,
+            metrics=metrics,
+            replies=replies,
             t=jnp.zeros((), jnp.int32),
         )
 
-    # -- one tick ----------------------------------------------------------
-    @functools.partial(jax.jit, static_argnums=0)
-    def tick(self, state: SimState, injected: Msg) -> SimState:
-        """injected: [n, c_in] client queries addressed to their entry node."""
+    # -- one tick of ONE chain (vmapped over the chain axis) ---------------
+    def _chain_tick(self, stores, inbox, metrics, replies, injected, t):
+        """stores [n,...], inbox [n,c_route], injected [n,c_in], t [].
+
+        Returns (stores', inbox', metrics', replies').  The routing fabric
+        is local to the chain: unicast/multicast destinations are chain
+        positions, so nothing ever crosses into another chain's state.
+        """
         n, cfg = self.n, self.cfg
         roles = _roles_for(n)
 
@@ -109,14 +141,14 @@ class ChainSim:
             extra=injected.extra + inj_live.astype(jnp.int32)
         )
         n_injected = inj_live.sum()
-        inbox = jax.tree.map(
-            lambda a, b: jnp.concatenate([a, b], axis=1), injected, state.inbox
+        full_inbox = jax.tree.map(
+            lambda a, b: jnp.concatenate([a, b], axis=1), injected, inbox
         )
 
         # Process: vmapped match-action pipeline pass on every node.
         new_stores, outbox = jax.vmap(
             functools.partial(self.node_step, cfg)
-        )(state.stores, roles, inbox)
+        )(stores, roles, full_inbox)
 
         # ---------------- routing fabric ----------------
         flat: Msg = jax.tree.map(
@@ -173,59 +205,89 @@ class ChainSim:
 
         # ---------------- exits -> reply log ----------------
         exits = flat.mask(is_exit)
-        new_replies = state.replies.append(exits, state.t + 1)
+        new_replies = replies.append(exits, t + 1)
 
-        live_in = inbox.op != OP_NOP
+        live_in = full_inbox.op != OP_NOP
         new_metrics = Metrics(
-            packets=state.metrics.packets + packets,
-            msgs=state.metrics.msgs + msgs,
-            bytes=state.metrics.bytes + packets * msg_bytes,
-            kv_procs=state.metrics.kv_procs + live_in.sum(),
-            reads_in=state.metrics.reads_in
+            packets=metrics.packets + packets,
+            msgs=metrics.msgs + msgs,
+            bytes=metrics.bytes + packets * msg_bytes,
+            kv_procs=metrics.kv_procs + live_in.sum(),
+            reads_in=metrics.reads_in
             + jnp.sum(injected.op == OP_READ),
-            writes_in=state.metrics.writes_in
+            writes_in=metrics.writes_in
             + jnp.sum(injected.op == OP_WRITE),
-            acks=state.metrics.acks + jnp.sum(flat.op == OP_ACK),
-            replies=state.metrics.replies + exits.live().sum(),
-            dirty_appends=state.metrics.dirty_appends
-            + (new_stores.pending.sum() - state.stores.pending.sum()).clip(0),
-            fwd_reads=state.metrics.fwd_reads
+            acks=metrics.acks + jnp.sum(flat.op == OP_ACK),
+            replies=metrics.replies + exits.live().sum(),
+            dirty_appends=metrics.dirty_appends
+            + (new_stores.pending.sum() - stores.pending.sum()).clip(0),
+            fwd_reads=metrics.fwd_reads
             + jnp.sum(is_unicast & (flat.op == OP_READ)),
-            drops=state.metrics.drops + dropped.sum(),
-            relay_procs=state.metrics.relay_procs
-            + jnp.sum(live_in & (inbox.op == OP_READ_REPLY)),
+            drops=metrics.drops + dropped.sum(),
+            relay_procs=metrics.relay_procs
+            + jnp.sum(live_in & (full_inbox.op == OP_READ_REPLY)),
         )
 
+        return new_stores, routed, new_metrics, new_replies
+
+    def _lift(self, injected: Msg) -> Msg:
+        """Accept legacy single-chain [n, q] injections when C == 1."""
+        if injected.op.ndim == 2:
+            assert self.C == 1, (
+                f"injection lacks the chain axis but cluster has C={self.C}"
+            )
+            return jax.tree.map(lambda x: x[None], injected)
+        return injected
+
+    # -- one tick of the whole cluster -------------------------------------
+    @functools.partial(jax.jit, static_argnums=0)
+    def tick(self, state: SimState, injected: Msg) -> SimState:
+        """injected: [C, n, c_in] client queries addressed to their entry
+        node within their key's owning chain (see workload.make_schedule)."""
+        injected = self._lift(injected)
+        stores, inbox, metrics, replies = jax.vmap(
+            self._chain_tick, in_axes=(0, 0, 0, 0, 0, None)
+        )(state.stores, state.inbox, state.metrics, state.replies,
+          injected, state.t)
         return SimState(
-            stores=new_stores,
-            inbox=routed,
-            metrics=new_metrics,
-            replies=new_replies,
+            stores=stores,
+            inbox=inbox,
+            metrics=metrics,
+            replies=replies,
             t=state.t + 1,
         )
 
     # -- run a schedule -----------------------------------------------------
     def run(self, state: SimState, schedule: Msg, extra_ticks: int = 16) -> SimState:
-        """schedule: [T, n, c_in] injection per tick; then drain."""
-        T = schedule.op.shape[0]
+        """schedule: [T, C, n, c_in] (or legacy [T, n, c_in]) injection per
+        tick; then drain."""
+        if schedule.op.ndim == 3:
+            assert self.C == 1, (
+                f"schedule lacks the chain axis but cluster has C={self.C}"
+            )
+            schedule = jax.tree.map(lambda x: x[:, None], schedule)
 
         def body(st, inj):
             return self.tick(st, inj), None
 
         state, _ = jax.lax.scan(body, state, schedule)
-        drain = jax.vmap(lambda _: Msg.empty(self.c_in, self.cfg.value_words))(
-            jnp.arange(self.n)
-        )
+        drain = jax.vmap(
+            lambda _: jax.vmap(
+                lambda __: Msg.empty(self.c_in, self.cfg.value_words)
+            )(jnp.arange(self.n))
+        )(jnp.arange(self.C))
         for _ in range(extra_ticks):
             state = self.tick(state, drain)
         return state
 
 
 # ---------------------------------------------------------------------------
-# Distributed engine (shard_map over a mesh axis)
+# Distributed engine (shard_map over mesh axes)
 # ---------------------------------------------------------------------------
 class ChainDist:
-    """One chain node per device along ``axis`` of ``mesh``.
+    """One chain node per device along ``axis`` of ``mesh``; optionally C
+    chains side by side along ``group_axis`` (the cluster layout
+    ``(chain_group, chain_pos)``).
 
     The step function is written for use under ``shard_map``; per-node code
     is identical to the simulator's.  Exchange primitives:
@@ -235,14 +297,41 @@ class ChainDist:
     * a masked ``all_gather`` realizes both the dirty-read fetch (tail pulls
       queries addressed to it) and the ACK multicast (everyone sees the
       tail's ACKs) in one collective - the TPU analogue of the P4 PRE.
+
+    Both collectives name only the position ``axis``, so when the mesh has
+    a ``group_axis`` they are automatically scoped per chain group: chains
+    exchange nothing with each other, matching the disjoint key partition.
     """
 
-    def __init__(self, cfg: ChainConfig, mesh, axis: str = "chain"):
-        self.cfg = cfg
+    def __init__(
+        self,
+        cfg: ChainConfig | ClusterConfig,
+        mesh,
+        axis: str = "chain",
+        group_axis: str | None = None,
+    ):
+        self.cluster = as_cluster(cfg)
+        self.cfg = self.cluster.chain
         self.mesh = mesh
         self.axis = axis
-        self.n = cfg.n_nodes
-        self.node_step = NODE_STEPS[cfg.protocol]
+        self.group_axis = group_axis
+        self.n = self.cfg.n_nodes
+        self.C = self.cluster.n_chains
+        if self.C > 1:
+            assert group_axis is not None, (
+                "multi-chain ChainDist needs a group_axis on the mesh"
+            )
+        mesh_shape = dict(mesh.shape)
+        assert mesh_shape[axis] == self.n, (
+            f"mesh axis {axis!r} has {mesh_shape[axis]} devices but the "
+            f"chain has {self.n} nodes"
+        )
+        if group_axis is not None:
+            assert mesh_shape[group_axis] == self.C, (
+                f"mesh axis {group_axis!r} has {mesh_shape[group_axis]} "
+                f"groups but the cluster has {self.C} chains"
+            )
+        self.node_step = NODE_STEPS[self.cfg.protocol]
 
     @staticmethod
     def _compact(msg: Msg, cap: int) -> Msg:
@@ -251,28 +340,40 @@ class ChainDist:
         return jax.tree.map(lambda x: x[order][:cap], msg)
 
     def init_state(self):
-        """Replicated store per chain node: [n, ...] sharded on axis 0."""
+        """Per-node replicated store: [n, ...] (or [C, n, ...]) sharded on
+        the leading mesh axes."""
         stores = jax.vmap(lambda _: store_lib.init_store(self.cfg))(jnp.arange(self.n))
-        return stores
+        if self.group_axis is None:
+            return stores
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (self.C,) + x.shape), stores
+        )
+
+    def _specs(self):
+        if self.group_axis is None:
+            return P(self.axis)
+        return P(self.group_axis, self.axis)
 
     def make_step(self, batch_per_node: int):
         cfg, axis, n = self.cfg, self.axis, self.n
+        grouped = self.group_axis is not None
         node_step = self.node_step
 
         def step(stores: Store, inbox: Msg):
-            """shard_map body: [1, ...] local shards; one chain tick.
-
-            Returns (stores', replies_local, fwd_stats).
-            """
+            """shard_map body: [1, ...] (or [1, 1, ...]) local shards; one
+            chain tick.  Returns (stores', inbox', replies_local)."""
             my_pos = jax.lax.axis_index(axis).astype(jnp.int32)
             roles = Roles.for_chain(n, my_pos)
-            local_store = jax.tree.map(lambda x: x[0], stores)
-            local_in = jax.tree.map(lambda x: x[0], inbox)
+            unshard = (lambda x: x[0, 0]) if grouped else (lambda x: x[0])
+            local_store = jax.tree.map(unshard, stores)
+            local_in = jax.tree.map(unshard, inbox)
             local_in = craq.stamp_entry(local_in, my_pos)
 
             new_store, outbox = node_step(cfg, local_store, roles, local_in)
 
             # --- next-hop traffic: ppermute one step toward the tail ------
+            # (named axis = chain position, so each chain group exchanges
+            # only within itself)
             to_next = outbox.mask(outbox.dst == my_pos + 1)
             perm = [(i, i + 1) for i in range(n - 1)]
             from_prev = jax.tree.map(
@@ -298,17 +399,18 @@ class ChainDist:
             next_inbox = self._compact(
                 Msg.concat([from_prev, from_fabric]), batch_per_node
             )
-            add1 = lambda x: x[None]
+            reshard = (lambda x: x[None, None]) if grouped else (lambda x: x[None])
             return (
-                jax.tree.map(add1, new_store),
-                jax.tree.map(add1, next_inbox),
-                jax.tree.map(add1, replies),
+                jax.tree.map(reshard, new_store),
+                jax.tree.map(reshard, next_inbox),
+                jax.tree.map(reshard, replies),
             )
 
-        spec_store = Store(*([P(axis)] * len(Store._fields)))
-        msg_spec = Msg(*([P(axis)] * len(Msg._fields)))
+        spec = self._specs()
+        spec_store = Store(*([spec] * len(Store._fields)))
+        msg_spec = Msg(*([spec] * len(Msg._fields)))
         return jax.jit(
-            jax.shard_map(
+            shard_map(
                 step,
                 mesh=self.mesh,
                 in_specs=(spec_store, msg_spec),

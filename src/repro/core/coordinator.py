@@ -23,7 +23,7 @@ import numpy as np
 
 from repro.core import store as store_lib
 from repro.core.store import Store
-from repro.core.types import ChainConfig
+from repro.core.types import ChainConfig, ClusterConfig, as_cluster
 
 
 @dataclasses.dataclass
@@ -75,18 +75,28 @@ class Coordinator:
     hash keys to chains); ``key_to_chain`` is the consistent assignment.
     """
 
-    def __init__(self, cfg: ChainConfig, n_chains: int = 1):
-        self.cfg = cfg
+    def __init__(self, cfg: ChainConfig | ClusterConfig, n_chains: int | None = None):
+        if isinstance(cfg, ClusterConfig):
+            assert n_chains is None or n_chains == cfg.n_chains
+            self.cluster = cfg
+        else:
+            self.cluster = ClusterConfig(chain=cfg, n_chains=n_chains or 1)
+        self.cfg = self.cluster.chain
         self.chains = [
-            ChainMembership(node_ids=list(range(cfg.n_nodes)))
-            for _ in range(n_chains)
+            ChainMembership(node_ids=list(range(self.cfg.n_nodes)))
+            for _ in range(self.cluster.n_chains)
         ]
         self.failover = FailoverPolicy()
         self._recovery_log: list[dict] = []
 
     # -- key partitioning ---------------------------------------------------
+    # The ClusterConfig partition map is the source of truth; the data plane
+    # (workload router, kv_engine cluster kernels) uses the same map.
     def key_to_chain(self, key: int) -> int:
-        return key % len(self.chains)
+        return int(self.cluster.key_to_chain(key))
+
+    def local_key(self, key: int) -> int:
+        return int(self.cluster.local_key(key))
 
     # -- failure recovery (two phases, paper §III.C) -------------------------
     def fail_node(self, chain_idx: int, node_id: int) -> ChainMembership:
@@ -127,8 +137,11 @@ class Coordinator:
         copy, then splice the replacement into the forwarding tables and the
         multicast group (paper §III.C).
 
-        ``stores`` is the stacked [n_physical, ...] store pytree; the copy
-        is a host-level operation (the CP owns it).
+        ``stores`` is the stacked [n_physical, ...] store pytree of one
+        chain, or the running cluster's [C, n_physical, ...] pytree - in
+        the latter case only ``chain_idx``'s slice is rewritten (the other
+        chains keep serving untouched).  The copy is a host-level operation
+        (the CP owns it).
         """
         m = self.chains[chain_idx]
         m.writes_frozen = True
@@ -138,7 +151,18 @@ class Coordinator:
                 if source_store_index is not None
                 else self.recovery_source(chain_idx, position)
             )
-            copied = jax.tree.map(lambda x: x.at[new_node_id].set(x[src]), stores)
+            # A cluster pytree carries the chain axis ahead of the node
+            # axis: values [C, n, K, V, W] vs a single chain's [n, K, V, W].
+            chain_stacked = stores.values.ndim == 5
+            if chain_stacked:
+                copied = jax.tree.map(
+                    lambda x: x.at[chain_idx, new_node_id].set(x[chain_idx, src]),
+                    stores,
+                )
+            else:
+                copied = jax.tree.map(
+                    lambda x: x.at[new_node_id].set(x[src]), stores
+                )
             m.node_ids = m.node_ids[:position] + [new_node_id] + m.node_ids[position:]
             m.epoch += 1
             self._recovery_log.append(

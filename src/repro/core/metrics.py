@@ -41,11 +41,25 @@ class Metrics(NamedTuple):
 
     @staticmethod
     def zeros() -> "Metrics":
+        """Scalar counters for one chain (the engine vmaps these over the
+        chain axis, yielding [C] leaves)."""
         z = jnp.zeros((), jnp.int32)
         return Metrics(*([z] * 12))
 
+    def total(self) -> "Metrics":
+        """Reduce per-chain [C] counters to cluster-wide scalars."""
+        return Metrics(*[jnp.sum(v) for v in self])
+
     def asdict(self) -> dict:
-        return {k: int(v) for k, v in self._asdict().items()}
+        """Cluster totals (per-chain leaves are summed)."""
+        return {k: int(v) for k, v in self.total()._asdict().items()}
+
+    def per_chain(self) -> dict:
+        """Per-chain counters as host lists (scalars become length-1)."""
+        return {
+            k: [int(x) for x in jnp.atleast_1d(v)]
+            for k, v in self._asdict().items()
+        }
 
 
 class ReplyLog(NamedTuple):
@@ -67,6 +81,39 @@ class ReplyLog(NamedTuple):
         neg = jnp.full((capacity,), -1, jnp.int32)
         z = jnp.zeros((capacity,), jnp.int32)
         return ReplyLog(neg, z, z, z, z, z, z, z, z, jnp.zeros((), jnp.int32))
+
+    @property
+    def chain_stacked(self) -> bool:
+        """True when the log carries a leading per-chain axis [C, R]."""
+        return self.qid.ndim == 2
+
+    def merged(self) -> "ReplyLog":
+        """Flatten a per-chain [C, R] log into one [sum cursor] log.
+
+        Host-side (numpy) - this is the analysis/benchmark view; entries
+        are concatenated in chain order, each chain's live prefix only.
+        A flat single-chain log is returned truncated to its cursor, so
+        callers can treat any engine's log uniformly.
+        """
+        import numpy as np
+
+        if not self.chain_stacked:
+            n = int(self.cursor)
+            flat = ReplyLog(
+                *[np.asarray(f)[:n] for f in self[:-1]],
+                cursor=np.int32(n),
+            )
+            return flat
+        cur = np.asarray(self.cursor)
+        C = cur.shape[0]
+
+        def cat(field):
+            field = np.asarray(field)
+            return np.concatenate(
+                [field[c, : cur[c]] for c in range(C)], axis=0
+            )
+
+        return ReplyLog(*[cat(f) for f in self[:-1]], cursor=np.int32(cur.sum()))
 
     def append(self, exits, t_done) -> "ReplyLog":
         """Scatter exiting replies (masked Msg-like fields) into the log."""

@@ -156,6 +156,66 @@ class ChainConfig:
         return 4 * self.value_words
 
 
+@dataclasses.dataclass(frozen=True)
+class ClusterConfig:
+    """Static configuration of a multi-chain cluster.
+
+    ``n_chains`` *virtual chains* partition a global key space of
+    ``n_chains * chain.num_keys`` keys (NetChain §II.A / the paper's
+    multi-node scaling scenario): chain ``c`` owns every global key with
+    ``key % n_chains == c`` and stores it at register index
+    ``key // n_chains``.  Chains are fully independent in the data plane -
+    disjoint key ranges, disjoint stores, disjoint routing fabrics - which
+    is exactly what makes the throughput scale with ``n_chains``.
+
+    The partition map here is the single source of truth: the control plane
+    (``Coordinator``), the workload router and the tests all delegate to it.
+    """
+
+    chain: ChainConfig = dataclasses.field(default_factory=ChainConfig)
+    n_chains: int = 1
+
+    def __post_init__(self):
+        assert self.n_chains >= 1, "cluster needs at least one chain"
+
+    # -- key partition map (global key space <-> per-chain registers) ------
+    @property
+    def num_global_keys(self) -> int:
+        return self.n_chains * self.chain.num_keys
+
+    def key_to_chain(self, key):
+        """Owning chain of a global key (array- and int-friendly)."""
+        return key % self.n_chains
+
+    def local_key(self, key):
+        """Register index of a global key within its owning chain."""
+        return key // self.n_chains
+
+    def global_key(self, local, chain):
+        """Inverse of (key_to_chain, local_key)."""
+        return local * self.n_chains + chain
+
+    # -- delegated wire-format properties ----------------------------------
+    @property
+    def n_nodes(self) -> int:
+        return self.chain.n_nodes
+
+    @property
+    def header_bytes(self) -> int:
+        return self.chain.header_bytes
+
+    @property
+    def payload_bytes(self) -> int:
+        return self.chain.payload_bytes
+
+
+def as_cluster(cfg) -> "ClusterConfig":
+    """Normalize: a bare ChainConfig is a single-chain cluster."""
+    if isinstance(cfg, ClusterConfig):
+        return cfg
+    return ClusterConfig(chain=cfg, n_chains=1)
+
+
 class Roles(NamedTuple):
     """Per-node role metadata, installed by the control plane (not parsed
     from packets - the paper's key design difference vs NetChain)."""

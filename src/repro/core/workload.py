@@ -3,7 +3,16 @@
 The paper evaluates read-mostly workloads (Google F1 380:1, Facebook TAO
 500:1 read:write) plus sweeps: read-only queries at varying distance from
 the tail (Fig 3), rising QPS (Fig 4), write percentage 0..100 step 25
-(Fig 5), chain lengths 4..8 (Fig 6).
+(Fig 5), chain lengths 4..8 (Fig 6), and multi-chain scaling (Fig 7 here:
+C virtual chains serving disjoint key partitions in parallel).
+
+Multi-chain routing: every client query carries a *global* key; the
+cluster's partition map (``ClusterConfig.key_to_chain`` - the same map the
+``Coordinator`` serves to clients) decides the owning chain, and the query
+is injected into that chain with the key rewritten to the chain-local
+register index (``ClusterConfig.local_key``).  Writes enter at the owning
+chain's head; reads spread over the owning chain's nodes (or target
+``entry_node`` within the chain).
 """
 from __future__ import annotations
 
@@ -19,14 +28,16 @@ from repro.core.types import (
     OP_READ,
     OP_WRITE,
     ChainConfig,
+    ClusterConfig,
     Msg,
+    as_cluster,
 )
 
 
 @dataclasses.dataclass(frozen=True)
 class WorkloadConfig:
     ticks: int = 32
-    queries_per_tick: int = 32      # per entry node
+    queries_per_tick: int = 32      # per entry node (per chain)
     write_fraction: float = 0.0
     entry_node: int | None = None   # None = spread uniformly over nodes
     key_skew: str = "uniform"       # "uniform" | "zipf"
@@ -46,22 +57,37 @@ def _sample_keys(key, shape, num_keys: int, cfg: WorkloadConfig):
     return jnp.searchsorted(cdf, u).astype(jnp.int32).clip(0, num_keys - 1)
 
 
-def make_schedule(chain_cfg: ChainConfig, wl: WorkloadConfig) -> Msg:
-    """Build a [T, n, q] injection schedule of client queries.
+def make_schedule(cfg: ChainConfig | ClusterConfig, wl: WorkloadConfig) -> Msg:
+    """Build an injection schedule of client queries.
 
-    Writes always enter at the head (paper: 'Write queries originate from
-    the head'); reads enter at ``entry_node`` (or spread uniformly).
+    * ``ClusterConfig`` -> ``[T, C, n, q]``: each lane (c, node, slot)
+      carries a query for a key *owned by chain c* (the lane's local key
+      ``k`` is the partition-map inverse of global key ``k * C + c``), so
+      routing-by-partition holds by construction and every chain sees
+      exactly ``queries_per_tick`` queries per node per tick.
+    * ``ChainConfig``   -> legacy ``[T, n, q]`` single-chain schedule
+      (identical draws: the C=1 cluster schedule with the chain axis
+      squeezed out).
+
+    Writes always enter at the owning chain's head (paper: 'Write queries
+    originate from the head'); reads enter at ``entry_node`` (or spread
+    uniformly over the chain's nodes).
     """
-    T, n, q = wl.ticks, chain_cfg.n_nodes, wl.queries_per_tick
+    squeeze = not isinstance(cfg, ClusterConfig)
+    cluster = as_cluster(cfg)
+    chain_cfg = cluster.chain
+    T, C, n, q = wl.ticks, cluster.n_chains, chain_cfg.n_nodes, wl.queries_per_tick
     rng = jax.random.PRNGKey(wl.seed)
     k_key, k_op, k_val = jax.random.split(rng, 3)
 
-    shape = (T, n, q)
+    shape = (T, C, n, q)
+    # Chain-local keys; the implied global key is local * C + chain, i.e.
+    # exactly the keys the partition map assigns to this chain.
     keys = _sample_keys(k_key, shape, chain_cfg.num_keys, wl)
     is_write = jax.random.uniform(k_op, shape) < wl.write_fraction
     vals = jax.random.randint(k_val, shape, 1, 1 << 20, jnp.int32)
 
-    node_idx = jnp.arange(n, dtype=jnp.int32)[None, :, None]
+    node_idx = jnp.arange(n, dtype=jnp.int32)[None, None, :, None]
     if wl.entry_node is None:
         active_reads = ~is_write
     else:
@@ -76,14 +102,16 @@ def make_schedule(chain_cfg: ChainConfig, wl: WorkloadConfig) -> Msg:
     value = jnp.zeros(shape + (chain_cfg.value_words,), jnp.int32)
     value = value.at[..., 0].set(jnp.where(is_write & active, vals, 0))
 
-    tick_idx = jnp.arange(T, dtype=jnp.int32)[:, None, None]
+    # Query ids unique across the whole cluster.
+    tick_idx = jnp.arange(T, dtype=jnp.int32)[:, None, None, None]
+    chain_idx = jnp.arange(C, dtype=jnp.int32)[None, :, None, None]
     qid = (
-        tick_idx * (n * q)
+        (tick_idx * C + chain_idx) * (n * q)
         + node_idx * q
-        + jnp.arange(q, dtype=jnp.int32)[None, None, :]
+        + jnp.arange(q, dtype=jnp.int32)[None, None, None, :]
     )
     z = jnp.zeros(shape, jnp.int32)
-    return Msg(
+    sched = Msg(
         op=op,
         key=jnp.where(active, keys, 0),
         value=value,
@@ -96,3 +124,75 @@ def make_schedule(chain_cfg: ChainConfig, wl: WorkloadConfig) -> Msg:
         t_inject=tick_idx * jnp.ones_like(op),
         extra=z,
     )
+    if squeeze:
+        sched = jax.tree.map(lambda x: x[:, 0], sched)
+    return sched
+
+
+def route_stream(cluster: ClusterConfig, stream: Msg, queries_per_node: int) -> Msg:
+    """Pack a flat client stream into per-chain injection lanes.
+
+    ``stream``: ``[T, Q]`` queries whose ``key`` field holds *global* keys.
+    Each query is routed to its key's owning chain via the cluster's
+    partition map, its key rewritten to the chain-local register index, and
+    the chain's queries spread round-robin over the chain's nodes (writes
+    pinned to the head).  Output: ``[T, C, n, queries_per_node]``; queries
+    beyond a lane's capacity are dropped (count them by comparing live
+    slots before/after if exactness matters - the benchmarks size lanes
+    with headroom).
+    """
+    T, Q = stream.op.shape
+    C, n, q = cluster.n_chains, cluster.n_nodes, queries_per_node
+    live = stream.op != OP_NOP
+    # Keys outside the global key space have no owning register anywhere;
+    # park them (downstream store indexing would silently clamp-alias).
+    live = live & (stream.key >= 0) & (stream.key < cluster.num_global_keys)
+    owner = jnp.where(live, cluster.key_to_chain(stream.key), C)  # C = parked
+    local = cluster.local_key(stream.key)
+    stream = stream._replace(key=jnp.where(live, local, 0))
+
+    def pack_tick(msgs: Msg, owner_row: jax.Array) -> Msg:
+        # Stable sort by owning chain (parked NOPs sort last as chain C).
+        order = jnp.argsort(owner_row, stable=True)
+        m: Msg = jax.tree.map(lambda x: x[order], msgs)
+        own = owner_row[order]
+        is_w = m.op == OP_WRITE
+        is_r = m.op == OP_READ
+        # Per-chain ranks among writes / among reads: global cumsum minus
+        # the cumsum at the chain's segment start.
+        cw = jnp.cumsum(is_w.astype(jnp.int32))
+        cr = jnp.cumsum(is_r.astype(jnp.int32))
+        starts = jnp.searchsorted(own, jnp.arange(C + 1))      # [C+1]
+        pre_w = jnp.concatenate([jnp.zeros(1, jnp.int32), cw])[starts]
+        pre_r = jnp.concatenate([jnp.zeros(1, jnp.int32), cr])[starts]
+        oc = jnp.clip(own, 0, C - 1)
+        w_rank = cw - 1 - pre_w[oc]
+        r_rank = cr - 1 - pre_r[oc]
+        n_w = pre_w[oc + 1] - pre_w[oc]      # writes bound for this chain
+        # Collision-free lanes: writes fill the head's slots from the top,
+        # reads round-robin over the chain's nodes from the bottom; reads
+        # on the head stop where the write region begins.
+        node = jnp.where(is_w, 0, r_rank % n)
+        slot = jnp.where(is_w, q - 1 - w_rank, r_rank // n)
+        node0_cap = jnp.maximum(q - n_w, 0)
+        ok_w = is_w & (own < C) & (w_rank < q)
+        ok_r = is_r & (own < C) & (
+            slot < jnp.where(node == 0, node0_cap, q)
+        )
+        ok = ok_w | ok_r
+        flat_idx = jnp.where(ok, own * (n * q) + node * q + slot, C * n * q)
+
+        lanes = Msg.empty(C * n * q, cluster.chain.value_words)
+        packed = Msg(*[
+            e.at[flat_idx].set(v, mode="drop") for e, v in zip(lanes, m)
+        ])
+        lane_node = (jnp.arange(C * n * q, dtype=jnp.int32) // q) % n
+        packed = packed._replace(
+            dst=jnp.where(packed.op != OP_NOP, lane_node, NOWHERE),
+            qid=jnp.where(packed.op != OP_NOP, packed.qid, -1),
+        )
+        return jax.tree.map(
+            lambda x: x.reshape((C, n, q) + x.shape[1:]), packed
+        )
+
+    return jax.vmap(pack_tick)(stream, owner)

@@ -1,0 +1,15 @@
+"""``shard_map`` compatibility shim.
+
+``jax.shard_map`` graduated from ``jax.experimental.shard_map`` only in
+recent releases; the pinned toolchain still ships it under experimental.
+Every caller (core/chain.py, benchmarks, dist tests) imports from here so
+the repo runs on both sides of the migration.
+"""
+from __future__ import annotations
+
+import jax
+
+try:  # jax >= 0.6: top-level export
+    shard_map = jax.shard_map  # type: ignore[attr-defined]
+except AttributeError:  # pinned 0.4.x: experimental namespace
+    from jax.experimental.shard_map import shard_map  # noqa: F401

@@ -10,15 +10,20 @@ VMEM.
 
 Two kernels:
 
-* ``read_engine``  - the latency-critical read path the paper optimizes:
-  for each query key, fetch the clean value (cell 0), the latest version,
-  and the pending counter, so the caller can resolve
+* ``cluster_read_engine``  - the latency-critical read path the paper
+  optimizes: for each query key, fetch the clean value (cell 0), the
+  latest version, and the pending counter, so the caller can resolve
   local-reply / tail-reply / forward without touching HBM again.
-  Grid: (key_tiles, query_tiles); the key axis is the reduction axis.
-* ``write_engine`` - applies a batch of sequenced writes: appends dirty
-  versions at ``pending + 1 + within-batch-rank`` (serialization
-  semantics), drops window overflows.  Grid: (key_tiles,); each key tile
-  scans the whole (small) write batch with masked scatter-adds.
+  Grid: (chains, key_tiles, query_tiles); the key axis is the reduction
+  axis and every virtual chain's store is served from one launch.
+* ``cluster_write_engine`` - applies per-chain batches of sequenced
+  writes: appends dirty versions at ``pending + 1 + within-batch-rank``
+  (serialization semantics), drops window overflows.  Grid:
+  (chains, key_tiles); each key tile scans its chain's (small) write
+  batch with masked scatter-adds.
+
+``read_engine``/``write_engine`` are the single-chain views: the C=1
+slice of the cluster engines (one arithmetic path to maintain).
 
 Integer exactness: values are int32 payloads; the masked reductions use
 integer multiply-adds on the VPU (a 0/1 mask times the payload), which is
@@ -47,48 +52,25 @@ DEFAULT_TB = 256   # queries per tile
 # ---------------------------------------------------------------------------
 # READ engine
 # ---------------------------------------------------------------------------
-def _read_kernel(
-    values_ref,   # [TK, V, W] int32
-    seqs_ref,     # [TK, V]    int32
-    pending_ref,  # [TK]       int32
-    keys_ref,     # [TB]       int32
-    clean_val_ref,   # [TB, W] int32 out
-    clean_seq_ref,   # [TB]    int32 out
-    latest_val_ref,  # [TB, W] int32 out
-    latest_seq_ref,  # [TB]    int32 out
-    pending_out_ref, # [TB]    int32 out
-    *,
-    tk: int,
-):
-    kt = pl.program_id(0)  # key-tile index (reduction)
+def _read_tile(values, seqs, pending, keys, kt, *, tk: int):
+    """One (key-tile x query-tile) partial lookup.  Arrays, not refs, so the
+    single-chain and cluster kernels share the exact same arithmetic.
 
-    @pl.when(kt == 0)
-    def _init():
-        clean_val_ref[...] = jnp.zeros_like(clean_val_ref)
-        clean_seq_ref[...] = jnp.zeros_like(clean_seq_ref)
-        latest_val_ref[...] = jnp.zeros_like(latest_val_ref)
-        latest_seq_ref[...] = jnp.zeros_like(latest_seq_ref)
-        pending_out_ref[...] = jnp.zeros_like(pending_out_ref)
-
-    keys = keys_ref[...]                       # [TB]
+    Returns the 5 partial sums to accumulate into the output refs.
+    """
     base = kt * tk
     local = keys - base                        # key id within this tile
     kidx = jax.lax.broadcasted_iota(jnp.int32, (local.shape[0], tk), 1)
     onehot = (kidx == local[:, None]).astype(jnp.int32)  # [TB, TK]
 
-    values = values_ref[...]                   # [TK, V, W]
-    seqs = seqs_ref[...]                       # [TK, V]
-    pending = pending_ref[...]                 # [TK]
-
     # clean = cell 0
-    clean_val_ref[...] += jnp.einsum(
+    clean_val = jnp.einsum(
         "bk,kw->bw", onehot, values[:, 0, :], preferred_element_type=jnp.int32
     )
-    clean_seq_ref[...] += jnp.einsum(
+    clean_seq = jnp.einsum(
         "bk,k->b", onehot, seqs[:, 0], preferred_element_type=jnp.int32
     )
     pend_b = jnp.einsum("bk,k->b", onehot, pending, preferred_element_type=jnp.int32)
-    pending_out_ref[...] += pend_b
 
     # latest = cell[pending] (dirty head, or cell 0 when clean)
     V = values.shape[1]
@@ -101,12 +83,48 @@ def _read_kernel(
     latest_s = jnp.einsum(
         "kv,kv->k", slot_oh, seqs, preferred_element_type=jnp.int32
     )
-    latest_val_ref[...] += jnp.einsum(
+    latest_val = jnp.einsum(
         "bk,kw->bw", onehot, latest_v, preferred_element_type=jnp.int32
     )
-    latest_seq_ref[...] += jnp.einsum(
+    latest_seq = jnp.einsum(
         "bk,k->b", onehot, latest_s, preferred_element_type=jnp.int32
     )
+    return clean_val, clean_seq, latest_val, latest_seq, pend_b
+
+
+def _read_kernel_cluster(
+    values_ref,   # [1, TK, V, W] int32 (chain-sliced block)
+    seqs_ref,     # [1, TK, V]    int32
+    pending_ref,  # [1, TK]       int32
+    keys_ref,     # [1, TB]       int32
+    clean_val_ref,   # [1, TB, W] int32 out
+    clean_seq_ref,   # [1, TB]    int32 out
+    latest_val_ref,  # [1, TB, W] int32 out
+    latest_seq_ref,  # [1, TB]    int32 out
+    pending_out_ref, # [1, TB]    int32 out
+    *,
+    tk: int,
+):
+    """Cluster read lookup: grid (C, key_tiles, query_tiles) - one kernel
+    launch serves every chain's store from VMEM, one chain per grid row."""
+    kt = pl.program_id(1)  # key-tile index (reduction; chain is grid dim 0)
+
+    @pl.when(kt == 0)
+    def _init():
+        clean_val_ref[...] = jnp.zeros_like(clean_val_ref)
+        clean_seq_ref[...] = jnp.zeros_like(clean_seq_ref)
+        latest_val_ref[...] = jnp.zeros_like(latest_val_ref)
+        latest_seq_ref[...] = jnp.zeros_like(latest_seq_ref)
+        pending_out_ref[...] = jnp.zeros_like(pending_out_ref)
+
+    cv, cs, lv, ls, pb = _read_tile(
+        values_ref[0], seqs_ref[0], pending_ref[0], keys_ref[0], kt, tk=tk
+    )
+    clean_val_ref[0] += cv
+    clean_seq_ref[0] += cs
+    latest_val_ref[0] += lv
+    latest_seq_ref[0] += ls
+    pending_out_ref[0] += pb
 
 
 def read_engine(
@@ -120,32 +138,62 @@ def read_engine(
     interpret: bool = True,
 ):
     """Batched read lookup. Returns (clean_val, clean_seq, latest_val,
-    latest_seq, pending_of_key). Shapes: [B,W],[B],[B,W],[B],[B]."""
-    K, V, W = values.shape
-    B = keys.shape[0]
+    latest_seq, pending_of_key). Shapes: [B,W],[B],[B,W],[B],[B].
+
+    A single chain is the C=1 slice of the cluster engine (one kernel,
+    one arithmetic path to maintain).
+    """
+    outs = cluster_read_engine(
+        values[None], seqs[None], pending[None], keys[None],
+        tk=tk, tb=tb, interpret=interpret,
+    )
+    return tuple(o[0] for o in outs)
+
+
+def cluster_read_engine(
+    values: jax.Array,   # [C, K, V, W]
+    seqs: jax.Array,     # [C, K, V]
+    pending: jax.Array,  # [C, K]
+    keys: jax.Array,     # [C, B] chain-local register indices
+    *,
+    tk: int = DEFAULT_TK,
+    tb: int = DEFAULT_TB,
+    interpret: bool = True,
+):
+    """Batched read lookup across all C chains in ONE kernel launch.
+
+    Grid (C, key_tiles, query_tiles): the chain axis is the outer grid
+    dimension, so each chain's store tile streams through VMEM exactly as
+    in the single-chain engine and chains never mix.  Returns per-chain
+    (clean_val [C,B,W], clean_seq [C,B], latest_val [C,B,W],
+    latest_seq [C,B], pending_of_key [C,B]).
+    """
+    C, K, V, W = values.shape
+    B = keys.shape[1]
     tk = min(tk, K)
     tb = min(tb, B)
     assert K % tk == 0 and B % tb == 0, (K, tk, B, tb)
+    assert keys.shape[0] == C
 
-    grid = (K // tk, B // tb)
-    kernel = functools.partial(_read_kernel, tk=tk)
+    grid = (C, K // tk, B // tb)
+    kernel = functools.partial(_read_kernel_cluster, tk=tk)
     out_shape = (
-        jax.ShapeDtypeStruct((B, W), jnp.int32),
-        jax.ShapeDtypeStruct((B,), jnp.int32),
-        jax.ShapeDtypeStruct((B, W), jnp.int32),
-        jax.ShapeDtypeStruct((B,), jnp.int32),
-        jax.ShapeDtypeStruct((B,), jnp.int32),
+        jax.ShapeDtypeStruct((C, B, W), jnp.int32),
+        jax.ShapeDtypeStruct((C, B), jnp.int32),
+        jax.ShapeDtypeStruct((C, B, W), jnp.int32),
+        jax.ShapeDtypeStruct((C, B), jnp.int32),
+        jax.ShapeDtypeStruct((C, B), jnp.int32),
     )
-    bspec_b = lambda: pl.BlockSpec((tb,), lambda kt, bt: (bt,))
-    bspec_bw = lambda: pl.BlockSpec((tb, W), lambda kt, bt: (bt, 0))
+    bspec_b = lambda: pl.BlockSpec((1, tb), lambda c, kt, bt: (c, bt))
+    bspec_bw = lambda: pl.BlockSpec((1, tb, W), lambda c, kt, bt: (c, bt, 0))
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((tk, V, W), lambda kt, bt: (kt, 0, 0)),
-            pl.BlockSpec((tk, V), lambda kt, bt: (kt, 0)),
-            pl.BlockSpec((tk,), lambda kt, bt: (kt,)),
-            pl.BlockSpec((tb,), lambda kt, bt: (bt,)),
+            pl.BlockSpec((1, tk, V, W), lambda c, kt, bt: (c, kt, 0, 0)),
+            pl.BlockSpec((1, tk, V), lambda c, kt, bt: (c, kt, 0)),
+            pl.BlockSpec((1, tk), lambda c, kt, bt: (c, kt)),
+            pl.BlockSpec((1, tb), lambda c, kt, bt: (c, bt)),
         ],
         out_specs=(bspec_bw(), bspec_b(), bspec_bw(), bspec_b(), bspec_b()),
         out_shape=out_shape,
@@ -156,44 +204,25 @@ def read_engine(
 # ---------------------------------------------------------------------------
 # WRITE engine
 # ---------------------------------------------------------------------------
-def _write_kernel(
-    rank_ref,     # [B]  int32 precomputed within-batch rank (same key)
-    keys_ref,     # [B]  int32
-    wvals_ref,    # [B, W] int32
-    wseqs_ref,    # [B]  int32
-    active_ref,   # [B]  int32 0/1
-    values_in_ref,   # [TK, V, W] int32 (aliased with values_ref)
-    seqs_in_ref,     # [TK, V] int32    (aliased with seqs_ref)
-    pending_in_ref,  # [TK] int32       (aliased with pending_ref)
-    values_ref,   # [TK, V, W] int32 out
-    seqs_ref,     # [TK, V] int32    out
-    pending_ref,  # [TK] int32       out
-    accepted_ref, # [B] int32 out (sum over key tiles -> 0/1)
-    *,
-    tk: int,
-    num_versions: int,
+def _write_tile(
+    rank, keys, wvals, wseqs, active, values_in, seqs_in, pending, kt,
+    *, tk: int, num_versions: int,
 ):
-    kt = pl.program_id(0)
+    """Apply the write batch to one key tile (shared arithmetic for the
+    single-chain and cluster kernels).
 
-    @pl.when(kt == 0)
-    def _init():
-        accepted_ref[...] = jnp.zeros_like(accepted_ref)
-
-    keys = keys_ref[...]
-    active = active_ref[...]
-    rank = rank_ref[...]
+    Returns (values', seqs', pending', ok[B] 0/1 accepted-in-this-tile).
+    """
     base = kt * tk
     local = keys - base
     B = keys.shape[0]
     kidx = jax.lax.broadcasted_iota(jnp.int32, (B, tk), 1)
     onehot = ((kidx == local[:, None]) & (active[:, None] > 0)).astype(jnp.int32)
 
-    pending = pending_in_ref[...]                   # [TK]
     pend_b = jnp.einsum("bk,k->b", onehot, pending, preferred_element_type=jnp.int32)
     slot = pend_b + 1 + rank                        # serialized append slot
     in_tile = onehot.sum(axis=1) > 0
     ok = in_tile & (slot <= num_versions - 1) & (active > 0)
-    accepted_ref[...] += ok.astype(jnp.int32)
 
     V = num_versions
     slot_oh = (
@@ -207,20 +236,55 @@ def _write_kernel(
         preferred_element_type=jnp.int32,
     )                                               # [TK, V] 0/1
     new_v = jnp.einsum(
-        "bk,bv,bw->kvw", onehot, slot_oh, wvals_ref[...],
+        "bk,bv,bw->kvw", onehot, slot_oh, wvals,
         preferred_element_type=jnp.int32,
     )
     new_s = jnp.einsum(
-        "bk,bv,b->kv", onehot, slot_oh, wseqs_ref[...],
+        "bk,bv,b->kv", onehot, slot_oh, wseqs,
         preferred_element_type=jnp.int32,
     )
-    values_ref[...] = (
-        values_in_ref[...] * (1 - upd_mask[:, :, None]) + new_v
-    )
-    seqs_ref[...] = seqs_in_ref[...] * (1 - upd_mask) + new_s
-    pending_ref[...] = pending + jnp.einsum(
+    out_values = values_in * (1 - upd_mask[:, :, None]) + new_v
+    out_seqs = seqs_in * (1 - upd_mask) + new_s
+    out_pending = pending + jnp.einsum(
         "bk,b->k", onehot, ok.astype(jnp.int32), preferred_element_type=jnp.int32
     )
+    return out_values, out_seqs, out_pending, ok.astype(jnp.int32)
+
+
+def _write_kernel_cluster(
+    rank_ref,     # [1, B] (chain-sliced blocks throughout)
+    keys_ref,     # [1, B]
+    wvals_ref,    # [1, B, W]
+    wseqs_ref,    # [1, B]
+    active_ref,   # [1, B]
+    values_in_ref,   # [1, TK, V, W] (aliased with values_ref)
+    seqs_in_ref,     # [1, TK, V]    (aliased with seqs_ref)
+    pending_in_ref,  # [1, TK]       (aliased with pending_ref)
+    values_ref,   # [1, TK, V, W] out
+    seqs_ref,     # [1, TK, V]    out
+    pending_ref,  # [1, TK]       out
+    accepted_ref, # [1, B]        out
+    *,
+    tk: int,
+    num_versions: int,
+):
+    """Cluster write engine: grid (C, key_tiles); every chain's write batch
+    is applied to its own store in one launch."""
+    kt = pl.program_id(1)
+
+    @pl.when(kt == 0)
+    def _init():
+        accepted_ref[...] = jnp.zeros_like(accepted_ref)
+
+    v, s, p, ok = _write_tile(
+        rank_ref[0], keys_ref[0], wvals_ref[0], wseqs_ref[0],
+        active_ref[0], values_in_ref[0], seqs_in_ref[0],
+        pending_in_ref[0], kt, tk=tk, num_versions=num_versions,
+    )
+    values_ref[0] = v
+    seqs_ref[0] = s
+    pending_ref[0] = p
+    accepted_ref[0] += ok
 
 
 def write_engine(
@@ -240,39 +304,68 @@ def write_engine(
 
     Returns (values', seqs', pending', accepted[B]).  ``rank`` is the
     within-batch same-key rank (computed by ops.py - O(B^2) bitmatrix or
-    sort-based, outside the kernel).
+    sort-based, outside the kernel).  A single chain is the C=1 slice of
+    the cluster engine.
     """
-    K, V, W = values.shape
-    B = keys.shape[0]
+    outs = cluster_write_engine(
+        values[None], seqs[None], pending[None], keys[None], wvals[None],
+        wseqs[None], active[None], rank[None], tk=tk, interpret=interpret,
+    )
+    return tuple(o[0] for o in outs)
+
+
+def cluster_write_engine(
+    values: jax.Array,   # [C, K, V, W]
+    seqs: jax.Array,     # [C, K, V]
+    pending: jax.Array,  # [C, K]
+    keys: jax.Array,     # [C, B] chain-local register indices
+    wvals: jax.Array,    # [C, B, W]
+    wseqs: jax.Array,    # [C, B]
+    active: jax.Array,   # [C, B] 0/1
+    rank: jax.Array,     # [C, B] per-chain within-batch same-key rank
+    *,
+    tk: int = DEFAULT_TK,
+    interpret: bool = True,
+):
+    """Append sequenced write batches for all C chains in ONE kernel launch.
+
+    Grid (C, key_tiles); chain c's batch only ever touches chain c's store
+    tiles (the blocks are chain-sliced), preserving the disjoint-partition
+    invariant at the kernel level.  Returns
+    (values', seqs', pending', accepted [C, B]).
+    """
+    C, K, V, W = values.shape
+    B = keys.shape[1]
     tk = min(tk, K)
     assert K % tk == 0
+    assert keys.shape[0] == C
 
-    kernel = functools.partial(_write_kernel, tk=tk, num_versions=V)
+    kernel = functools.partial(_write_kernel_cluster, tk=tk, num_versions=V)
     out_shape = (
-        jax.ShapeDtypeStruct((K, V, W), jnp.int32),
-        jax.ShapeDtypeStruct((K, V), jnp.int32),
-        jax.ShapeDtypeStruct((K,), jnp.int32),
-        jax.ShapeDtypeStruct((B,), jnp.int32),
+        jax.ShapeDtypeStruct((C, K, V, W), jnp.int32),
+        jax.ShapeDtypeStruct((C, K, V), jnp.int32),
+        jax.ShapeDtypeStruct((C, K), jnp.int32),
+        jax.ShapeDtypeStruct((C, B), jnp.int32),
     )
-    full_b = lambda: pl.BlockSpec((B,), lambda kt: (0,))
+    full_b = lambda: pl.BlockSpec((1, B), lambda c, kt: (c, 0))
     return pl.pallas_call(
         kernel,
-        grid=(K // tk,),
+        grid=(C, K // tk),
         in_specs=[
             full_b(),
             full_b(),
-            pl.BlockSpec((B, W), lambda kt: (0, 0)),
+            pl.BlockSpec((1, B, W), lambda c, kt: (c, 0, 0)),
             full_b(),
             full_b(),
-            pl.BlockSpec((tk, V, W), lambda kt: (kt, 0, 0)),
-            pl.BlockSpec((tk, V), lambda kt: (kt, 0)),
-            pl.BlockSpec((tk,), lambda kt: (kt,)),
+            pl.BlockSpec((1, tk, V, W), lambda c, kt: (c, kt, 0, 0)),
+            pl.BlockSpec((1, tk, V), lambda c, kt: (c, kt, 0)),
+            pl.BlockSpec((1, tk), lambda c, kt: (c, kt)),
         ],
         out_specs=(
-            pl.BlockSpec((tk, V, W), lambda kt: (kt, 0, 0)),
-            pl.BlockSpec((tk, V), lambda kt: (kt, 0)),
-            pl.BlockSpec((tk,), lambda kt: (kt,)),
-            pl.BlockSpec((B,), lambda kt: (0,)),
+            pl.BlockSpec((1, tk, V, W), lambda c, kt: (c, kt, 0, 0)),
+            pl.BlockSpec((1, tk, V), lambda c, kt: (c, kt, 0)),
+            pl.BlockSpec((1, tk), lambda c, kt: (c, kt)),
+            pl.BlockSpec((1, B), lambda c, kt: (c, 0)),
         ),
         out_shape=out_shape,
         input_output_aliases={5: 0, 6: 1, 7: 2},

@@ -24,14 +24,50 @@ def craq_read_batch(store: Store, keys: jax.Array, *, is_tail: bool = False,
 
     decision: 0 = answered locally (clean), 1 = answered by tail (dirty),
     2 = must forward to tail (dirty at a non-tail node).
+
+    A single chain is the C=1 slice of the cluster path (one decision
+    logic to maintain, mirroring kernel.py's wrappers).
     """
-    cv, cs, lv, ls, pend = _k.read_engine(
+    outs = cluster_read_batch(
+        jax.tree.map(lambda x: x[None], store), keys[None],
+        is_tail=is_tail, interpret=interpret,
+    )
+    return tuple(o[0] for o in outs)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def craq_write_batch(store: Store, keys, wvals, wseqs, active, *,
+                     interpret: bool = True):
+    """Append a sequenced write batch (dirty versions). Returns
+    (store', accepted[B]).  C=1 slice of the cluster path."""
+    new_store, accepted = cluster_write_batch(
+        jax.tree.map(lambda x: x[None], store), keys[None], wvals[None],
+        wseqs[None], active[None], interpret=interpret,
+    )
+    return jax.tree.map(lambda x: x[0], new_store), accepted[0]
+
+
+# ---------------------------------------------------------------------------
+# Cluster variants: one kernel launch serving all C chains' stores.
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("is_tail", "interpret"))
+def cluster_read_batch(store: Store, keys: jax.Array, *, is_tail: bool = False,
+                       interpret: bool = True):
+    """NetCRAQ read decision for per-chain batches.
+
+    ``store`` leaves carry a leading chain axis ([C, K, V, W], ...);
+    ``keys`` is [C, B] of chain-local register indices (the workload router
+    already applied the partition map).  Returns (reply_val [C,B,W],
+    reply_seq [C,B], decision [C,B]) with the same decision codes as
+    ``craq_read_batch``.
+    """
+    cv, cs, lv, ls, pend = _k.cluster_read_engine(
         store.values, store.seqs, store.pending, keys, interpret=interpret
     )
     clean = pend == 0
     if is_tail:
         decision = jnp.where(clean, 0, 1)
-        reply_val = jnp.where(clean[:, None], cv, lv)
+        reply_val = jnp.where(clean[..., None], cv, lv)
         reply_seq = jnp.where(clean, cs, ls)
     else:
         decision = jnp.where(clean, 0, 2)
@@ -41,12 +77,12 @@ def craq_read_batch(store: Store, keys: jax.Array, *, is_tail: bool = False,
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def craq_write_batch(store: Store, keys, wvals, wseqs, active, *,
-                     interpret: bool = True):
-    """Append a sequenced write batch (dirty versions). Returns
-    (store', accepted[B])."""
-    rank = batch_rank(keys, active.astype(bool))
-    values, seqs, pending, accepted = _k.write_engine(
+def cluster_write_batch(store: Store, keys, wvals, wseqs, active, *,
+                        interpret: bool = True):
+    """Append per-chain sequenced write batches ([C, B] lanes) in one
+    launch. Returns (store', accepted [C, B])."""
+    rank = jax.vmap(batch_rank)(keys, active.astype(bool))
+    values, seqs, pending, accepted = _k.cluster_write_engine(
         store.values,
         store.seqs,
         store.pending,

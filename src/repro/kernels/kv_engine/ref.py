@@ -57,3 +57,20 @@ def write_engine_ref(values, seqs, pending, keys, wvals, wseqs, active, rank):
         jnp.asarray(pending),
         jnp.asarray(np.array(accepted, np.int32)),
     )
+
+
+def cluster_read_engine_ref(values, seqs, pending, keys):
+    """Per-chain oracle: [C,K,V,W],[C,K,V],[C,K] stores + [C,B] keys."""
+    return jax.vmap(read_engine_ref)(values, seqs, pending, keys)
+
+
+def cluster_write_engine_ref(values, seqs, pending, keys, wvals, wseqs,
+                             active, rank):
+    """Sequential per-chain oracle (python loop over chains)."""
+    C = values.shape[0]
+    outs = [
+        write_engine_ref(values[c], seqs[c], pending[c], keys[c], wvals[c],
+                         wseqs[c], active[c], rank[c])
+        for c in range(C)
+    ]
+    return tuple(jnp.stack([o[i] for o in outs]) for i in range(4))

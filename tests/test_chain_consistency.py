@@ -19,6 +19,11 @@ and chain lengths - the serialization point being the tick boundary
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the hypothesis dev dependency"
+)
 from hypothesis import given, settings, strategies as st
 
 from repro.core import ChainConfig, ChainSim, WorkloadConfig, make_schedule
@@ -39,7 +44,7 @@ def _run(proto, n_nodes, wf, ticks, q, seed, num_keys):
 
 
 def _reply_records(state):
-    r = state.replies
+    r = state.replies.merged()
     n = int(r.cursor)
     return {
         "qid": np.asarray(r.qid[:n]),
@@ -138,8 +143,8 @@ def test_store_invariants_after_drain(seed, wf):
                              num_keys=4)
     pend = np.asarray(state.stores.pending)
     assert pend.sum() == 0, "dirty versions survived the ACK wave"
-    cell0 = np.asarray(state.stores.values[:, :, 0, 0])  # [n, K]
-    seqs0 = np.asarray(state.stores.seqs[:, :, 0])
+    cell0 = np.asarray(state.stores.values[0, :, :, 0, 0])  # [n, K]
+    seqs0 = np.asarray(state.stores.seqs[0, :, :, 0])
     for node in range(4):
         np.testing.assert_array_equal(
             cell0[node], cell0[-1],

@@ -47,11 +47,58 @@ print("DIST_OK")
 
 
 @pytest.mark.slow
+def test_chain_dist_multichain_groups():
+    """Two chains side by side on a (cgroup, chain) mesh: collectives stay
+    scoped to each chain, writes/reads never leak across groups."""
+    out = run_with_devices("""
+import jax, jax.numpy as jnp
+from repro.core import ChainConfig, ClusterConfig, ChainDist, CLIENT_BASE
+from repro.core.types import Msg, OP_READ, OP_WRITE
+
+mesh = jax.make_mesh((2, 4), ("cgroup", "chain"))
+cfg = ChainConfig(n_nodes=4, num_keys=16, num_versions=4, protocol="netcraq")
+dist = ChainDist(ClusterConfig(chain=cfg, n_chains=2), mesh,
+                 axis="chain", group_axis="cgroup")
+stores = dist.init_state()
+B = 8
+step = dist.make_step(B)
+
+def inject(op, key, val, node, chain):
+    m = Msg.empty(B)
+    m = jax.tree.map(lambda x: jnp.tile(x[None, None], (2, 4) + (1,)*x.ndim), m)
+    return m._replace(
+        op=m.op.at[chain, node, 0].set(op),
+        key=m.key.at[chain, node, 0].set(key),
+        value=m.value.at[chain, node, 0, 0].set(val),
+        src=m.src.at[chain, node, 0].set(CLIENT_BASE+7),
+        client=m.client.at[chain, node, 0].set(CLIENT_BASE+7),
+        qid=m.qid.at[chain, node, 0].set(42),
+        dst=m.dst.at[chain, node, 0].set(node))
+
+inbox = inject(OP_WRITE, 5, 123, 0, 1)
+for _ in range(8):
+    stores, inbox, replies = step(stores, inbox)
+assert stores.values[1, :, 5, 0, 0].tolist() == [123]*4, stores.values[1, :, 5, 0, 0]
+assert stores.values[0, :, 5, 0, 0].tolist() == [0]*4   # chain 0 untouched
+assert int(stores.pending.sum()) == 0
+
+inbox = inject(OP_READ, 5, 0, 2, 1)
+stores, inbox, replies = step(stores, inbox)
+r = jax.device_get(replies)
+live = r.op != 0
+assert live.sum() == 1 and r.value[live][0, 0] == 123, r.value[live]
+print("GROUPS_OK")
+""")
+    assert "GROUPS_OK" in out
+
+
+@pytest.mark.slow
 def test_replicated_kv_cache_protocols():
     out = run_with_devices("""
 import jax, jax.numpy as jnp, functools
 from jax.sharding import PartitionSpec as P
 from repro.serve import kv_cache as KV
+from repro.distributed.shard import shard_map
 
 n = 4
 mesh = jax.make_mesh((n,), ("chain",))
@@ -68,7 +115,7 @@ def cr_body(page, seq):
 kv = jnp.arange(n*8, dtype=jnp.float32).reshape(n, 8)   # distinct per node
 seqs = jnp.arange(n, dtype=jnp.int32) + 10
 
-craq = jax.jit(jax.shard_map(craq_body, mesh=mesh,
+craq = jax.jit(shard_map(craq_body, mesh=mesh,
     in_specs=(P("chain"), P("chain")), out_specs=(P("chain"), P("chain"), P("chain"))))
 own, replica, ack = craq(kv, seqs)
 # node i>0 stores node i-1's page as the replica copy
@@ -77,7 +124,7 @@ assert jnp.allclose(replica[0], kv[0])
 # tail's seq broadcast to everyone
 assert ack.tolist() == [13]*n, ack
 
-cr = jax.jit(jax.shard_map(cr_body, mesh=mesh,
+cr = jax.jit(shard_map(cr_body, mesh=mesh,
     in_specs=(P("chain"), P("chain")), out_specs=(P("chain"), P("chain"), P("chain"))))
 fetched, committed, ack2 = cr(kv, seqs)
 # CR read: every node receives the TAIL's page

@@ -24,8 +24,9 @@ def test_phase2_recovery_copies_from_predecessor():
     sim = ChainSim(cfg)
     state = sim.init_state()
     # give node 1 distinct store content, then fail node 2 and re-add it
+    # (state is the cluster layout [C=1, n, ...]; node axis is second)
     stores = jax.tree.map(
-        lambda x: x.at[1].set(x[1] + (7 if x.dtype == jnp.int32 else 0)),
+        lambda x: x.at[:, 1].set(x[:, 1] + (7 if x.dtype == jnp.int32 else 0)),
         state.stores,
     )
     co.fail_node(0, 2)
@@ -35,7 +36,7 @@ def test_phase2_recovery_copies_from_predecessor():
     assert not m.writes_frozen  # freeze released after copy
     # CRAQ rule: copy from predecessor (position 2 -> node_ids[1] == 1)
     np.testing.assert_array_equal(
-        np.asarray(copied.values[2]), np.asarray(stores.values[1])
+        np.asarray(copied.values[0, 2]), np.asarray(stores.values[0, 1])
     )
     events = [e["event"] for e in co.recovery_log]
     assert events == ["fail", "recover"]
@@ -74,12 +75,12 @@ def test_consistency_preserved_across_recovery():
                         seed=3)
     state = sim.run(state, make_schedule(cfg, wl), extra_ticks=12)
     assert int(state.stores.pending.sum()) == 0
-    committed = np.asarray(state.stores.values[-1, :, 0, 0])  # tail's view
+    committed = np.asarray(state.stores.values[0, -1, :, 0, 0])  # tail's view
 
     co.fail_node(0, 1)
     _, recovered = co.recover_node(0, new_node_id=1, position=1,
                                    stores=state.stores)
     np.testing.assert_array_equal(
-        np.asarray(recovered.values[1, :, 0, 0]), committed,
+        np.asarray(recovered.values[0, 1, :, 0, 0]), committed,
         err_msg="recovered node lost committed writes",
     )

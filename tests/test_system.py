@@ -35,11 +35,12 @@ def test_netcraq_clean_read_cost_is_2_packets_anywhere():
     packets and 1 pipeline pass per read, at ANY distance from the tail."""
     for entry in range(4):
         st = run_sim("netcraq", entry=entry)
-        n = int(st.replies.cursor)
+        r = st.replies.merged()
+        n = int(r.cursor)
         m = st.metrics.asdict()
         assert n == 16
         assert m["packets"] == 2 * n
-        assert set(np.unique(np.asarray(st.replies.hops[:n]))) == {2}
+        assert set(np.unique(np.asarray(r.hops))) == {2}
         assert m["drops"] == 0
 
 
@@ -48,13 +49,13 @@ def test_netchain_read_cost_grows_with_distance():
     d from the tail - 2n for head-directed reads."""
     for n_nodes in (4, 6, 8):
         st = run_sim("netchain", n_nodes=n_nodes, entry=0)
-        n = int(st.replies.cursor)
+        n = int(st.replies.cursor.sum())
         m = st.metrics.asdict()
         assert n == 16
         assert m["packets"] == 2 * n_nodes * n  # the paper's 2n packets
     # tail-directed reads cost 2 packets as in CRAQ
     st = run_sim("netchain", n_nodes=4, entry=3)
-    assert st.metrics.asdict()["packets"] == 2 * int(st.replies.cursor)
+    assert st.metrics.asdict()["packets"] == 2 * int(st.replies.cursor.sum())
 
 
 def test_netcraq_write_path_and_ack_multicast():
@@ -62,7 +63,7 @@ def test_netcraq_write_path_and_ack_multicast():
     (sum of link distances from tail) + client reply (1)."""
     n_nodes = 4
     st = run_sim("netcraq", n_nodes=n_nodes, wf=1.0, entry=None, ticks=2, q=2)
-    n = int(st.replies.cursor)
+    n = int(st.replies.cursor.sum())
     m = st.metrics.asdict()
     assert n == 4  # every write acknowledged to the client
     mcast_links = sum(abs((n_nodes - 1) - i) for i in range(n_nodes - 1))
@@ -100,7 +101,7 @@ def test_write_then_read_returns_value():
     for _ in range(4):
         st = sim.tick(st, jax.tree.map(
             lambda x: jnp.tile(x[None], (4,) + (1,) * x.ndim), Msg.empty(8)))
-    r = st.replies
+    r = st.replies.merged()
     n = int(r.cursor)
     recs = {int(r.qid[i]): (int(r.op[i]), int(r.value0[i])) for i in range(n)}
     assert recs[1][0] == OP_WRITE_REPLY and recs[1][1] == 777
@@ -111,7 +112,7 @@ def test_mixed_workload_no_loss():
     st = run_sim("netcraq", wf=0.3, entry=None, ticks=6, q=4, seed=9)
     m = st.metrics.asdict()
     assert m["drops"] == 0
-    assert int(st.replies.cursor) == m["reads_in"] + m["writes_in"]
+    assert int(st.replies.cursor.sum()) == m["reads_in"] + m["writes_in"]
 
 
 def test_header_bytes_match_paper():
@@ -135,6 +136,6 @@ def test_netcraq_throughput_independent_of_chain_length():
         for n_nodes in (4, 6, 8):
             st = run_sim(proto, n_nodes=n_nodes, entry=0)
             m = st.metrics.asdict()
-            ppr[proto].append(m["packets"] / int(st.replies.cursor))
+            ppr[proto].append(m["packets"] / int(st.replies.cursor.sum()))
     assert ppr["netcraq"] == [2.0, 2.0, 2.0]
     assert ppr["netchain"] == [8.0, 12.0, 16.0]
