@@ -89,7 +89,8 @@ def _fixed_total(chains=(1, 2, 4, 8), proto="netcraq", total_per_tick=32,
                 jnp.arange(T, dtype=jnp.int32)[:, None], (T, Q)),
         )
         q_lane = max(2 * total_per_tick // max(C * n_nodes, 1), 4)
-        sched = route_stream(cluster, stream, q_lane)
+        routed = route_stream(cluster, stream, q_lane)
+        sched, n_dropped = routed.lanes, int(routed.dropped)
         sim = ChainSim(cluster, inject_capacity=q_lane,
                        route_capacity=max(128, 8 * q_lane),
                        reply_capacity=4 * T * Q + 64)
@@ -102,6 +103,7 @@ def _fixed_total(chains=(1, 2, 4, 8), proto="netcraq", total_per_tick=32,
             name=f"fig7/{proto}/total_qps/C{C}",
             us_per_call=0.0,
             derived=(f"replies={st['n']}/{T * Q};"
+                     f"routing_drops={n_dropped};"
                      f"pkts_per_reply={m['packets'] / max(st['n'], 1):.1f};"
                      f"load_per_chain={per_pipe_load:.1f}q/tick"),
         ))

@@ -8,7 +8,7 @@ benchmarks/common.py and EXPERIMENTS.md §Benchmarks).
 from __future__ import annotations
 
 from benchmarks import fig3_read_qps, fig4_latency, fig5_mixed, \
-    fig6_scalability, fig7_multichain
+    fig6_scalability, fig7_multichain, fig_failover
 from benchmarks.common import BenchRow, measure_engine_us_per_query
 
 
@@ -26,6 +26,7 @@ def main() -> None:
     rows += fig5_mixed.run()
     rows += fig6_scalability.run()
     rows += fig7_multichain.run()
+    rows += fig_failover.run()
     print("name,us_per_call,derived")
     for r in rows:
         print(r.csv())

@@ -21,6 +21,7 @@ from repro.core.types import (  # noqa: F401
     OP_READ,
     OP_READ_REPLY,
     OP_WRITE,
+    OP_WRITE_NACK,
     OP_WRITE_REPLY,
     CLIENT_BASE,
     MULTICAST,
@@ -30,7 +31,13 @@ from repro.core.types import (  # noqa: F401
     netchain_header_bytes,
 )
 from repro.core.store import Store, init_store  # noqa: F401
-from repro.core.chain import ChainDist, ChainSim, SimState  # noqa: F401
-from repro.core.coordinator import ChainMembership, Coordinator  # noqa: F401
+from repro.core.chain import ChainDist, ChainSim, SimState, full_roles_table  # noqa: F401
+from repro.core.coordinator import ChainMembership, Coordinator, FailoverPolicy  # noqa: F401
+from repro.core.failure import FailureDetector, HedgedReadPolicy  # noqa: F401
 from repro.core.metrics import Metrics, ReplyLog  # noqa: F401
-from repro.core.workload import WorkloadConfig, make_schedule, route_stream  # noqa: F401
+from repro.core.workload import (  # noqa: F401
+    RoutedStream,
+    WorkloadConfig,
+    make_schedule,
+    route_stream,
+)

@@ -19,6 +19,30 @@ scoped to the position axis, so each chain group exchanges only within
 itself.  The multi-pod dry-run lowers this engine on the production meshes.
 
 Both engines share the per-node control logic in ``craq.py``/``netchain.py``.
+
+Live-membership contract
+------------------------
+The data plane reads its forwarding state from a per-chain ``Roles`` table
+(``SimState.roles``, ``[C, n]`` leaves; ``ChainDist`` takes the same table
+as a step argument).  The table is *owned by the control plane*: only the
+``Coordinator`` (via ``fail_node``/``begin_recovery``/``complete_recovery``
+followed by ``install_roles``) may rewrite it, and only **between ticks** -
+the engines never mutate it, a tick observes one consistent snapshot, and
+the paper's CP/DP split is preserved (role edits are tiny metadata writes,
+never on the per-query path).  Because an edit keeps every leaf's shape and
+dtype, ``fail_node``/``recover_node`` on a running state trigger **no
+recompilation and no state reset**: the chain keeps serving while
+membership changes (paper §III.C two-phase recovery).
+
+Semantics under a partial-health table: a dead node neither receives nor
+emits - injection into its lanes and in-flight unicast addressed to it
+are dropped and counted in ``Metrics.drops``; multicast copies for it are
+simply not generated (the CP pruned the multicast group, so they are not
+lost traffic and not counted);
+forwarding follows ``next_pos``/``prev_pos`` along the *live* chain; hop
+accounting uses live-chain positions (``chain_pos``), so a spliced-out
+node is not a link traversal; while ``frozen`` is set, client writes are
+NACKed at the entry node (``OP_WRITE_NACK``, counted in ``write_nacks``).
 """
 from __future__ import annotations
 
@@ -40,6 +64,7 @@ from repro.core.types import (
     OP_NOP,
     OP_READ,
     OP_WRITE,
+    OP_WRITE_NACK,
     TO_CLIENT,
     ChainConfig,
     ClusterConfig,
@@ -60,11 +85,17 @@ class SimState(NamedTuple):
     inbox: Msg           # [C, n, cap]
     metrics: Metrics     # [C] per-chain counters (Metrics.total() reduces)
     replies: ReplyLog    # [C, R]
+    roles: Roles         # [C, n] live membership/role table (CP-owned; see
+                         #     the module docstring's contract)
     t: jax.Array         # [] int32 tick counter (shared; chains are in step)
 
 
-def _roles_for(n: int) -> Roles:
-    return jax.vmap(lambda i: Roles.for_chain(n, i))(jnp.arange(n, dtype=jnp.int32))
+def full_roles_table(n_nodes: int, n_chains: int) -> Roles:
+    """[C, n] role table with every physical slot live (initial health)."""
+    one = Roles.from_membership(n_nodes, range(n_nodes))
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (n_chains,) + x.shape), one
+    )
 
 
 class ChainSim:
@@ -118,24 +149,43 @@ class ChainSim:
             inbox=inbox,
             metrics=metrics,
             replies=replies,
+            roles=full_roles_table(self.n, self.C),
             t=jnp.zeros((), jnp.int32),
         )
 
     # -- one tick of ONE chain (vmapped over the chain axis) ---------------
-    def _chain_tick(self, stores, inbox, metrics, replies, injected, t):
-        """stores [n,...], inbox [n,c_route], injected [n,c_in], t [].
+    def _chain_tick(self, stores, inbox, metrics, replies, injected, roles, t):
+        """stores [n,...], inbox [n,c_route], injected [n,c_in],
+        roles [n]-leaf Roles table, t [].
 
         Returns (stores', inbox', metrics', replies').  The routing fabric
         is local to the chain: unicast/multicast destinations are chain
         positions, so nothing ever crosses into another chain's state.
+        Membership is read from ``roles`` - dead slots are masked out of
+        injection, processing, delivery and hop accounting.
         """
         n, cfg = self.n, self.cfg
-        roles = _roles_for(n)
+        alive = roles.alive          # [n] bool
+        chain_pos = roles.chain_pos  # [n] int32 live-chain coordinate
 
         # Stamp entry position on client queries, merge into inboxes.
         # The client->entry-node leg is one link traversal (counted here;
-        # `extra` carries it into the query's hop total).
+        # `extra` carries it into the query's hop total).  Queries injected
+        # into a dead node's lane are black-holed (the client's redirect is
+        # a host-side FailoverPolicy decision, not the fabric's) - they are
+        # dropped before any packet accounting, as are in-flight messages
+        # still parked at a node that died between ticks.
         injected = jax.vmap(craq.stamp_entry)(injected, jnp.arange(n, dtype=jnp.int32))
+        dead_in = (
+            ((injected.op != OP_NOP) & ~alive[:, None]).sum()
+            + ((inbox.op != OP_NOP) & ~alive[:, None]).sum()
+        )
+        injected = jax.vmap(Msg.mask)(
+            injected, jnp.broadcast_to(alive[:, None], injected.op.shape)
+        )
+        inbox = jax.vmap(Msg.mask)(
+            inbox, jnp.broadcast_to(alive[:, None], inbox.op.shape)
+        )
         inj_live = injected.op != OP_NOP
         injected = injected._replace(
             extra=injected.extra + inj_live.astype(jnp.int32)
@@ -149,6 +199,11 @@ class ChainSim:
         new_stores, outbox = jax.vmap(
             functools.partial(self.node_step, cfg)
         )(stores, roles, full_inbox)
+        # A dead node emits nothing (its inbox is already empty; this pins
+        # the invariant even if a node_step ever emitted unsolicited).
+        outbox = jax.vmap(Msg.mask)(
+            outbox, jnp.broadcast_to(alive[:, None], outbox.op.shape)
+        )
 
         # ---------------- routing fabric ----------------
         flat: Msg = jax.tree.map(
@@ -157,19 +212,33 @@ class ChainSim:
         src_pos = flat.src
         live = flat.op != OP_NOP
 
+        dst_alive = alive[jnp.clip(flat.dst, 0, n - 1)]
+        in_range = (flat.dst >= 0) & (flat.dst < n)
         is_mcast = live & (flat.dst == MULTICAST)
         is_exit = live & (flat.dst == TO_CLIENT)
-        is_unicast = live & (flat.dst >= 0) & (flat.dst < n)
-
-        # per-destination delivery masks [n, M]
-        node_ids = jnp.arange(n, dtype=jnp.int32)[:, None]
-        deliver = (is_unicast & (flat.dst[None, :] == node_ids)) | (
-            is_mcast[None, :] & (src_pos[None, :] != node_ids)
+        is_unicast = live & in_range & dst_alive
+        # undeliverable: unicast addressed to a node that died in flight,
+        # or orphaned entirely (dst == NOWHERE: e.g. a CR reply retracing
+        # past a dead entry node runs off the head) - both are lost traffic
+        # and must show up in the drop accounting
+        dead_letters = (live & in_range & ~dst_alive) | (
+            live & ~in_range & ~is_mcast & ~is_exit
         )
 
-        # link-traversal accounting
-        uni_hops = jnp.abs(flat.dst - src_pos)
-        mcast_hops = jnp.abs(node_ids - src_pos[None, :])  # [n, M]
+        # per-destination delivery masks [n, M]; multicast (the PRE) fans
+        # out only to the chain's *live* members (the CP pruned the group)
+        node_ids = jnp.arange(n, dtype=jnp.int32)[:, None]
+        deliver = (
+            (is_unicast & (flat.dst[None, :] == node_ids))
+            | (is_mcast[None, :] & (src_pos[None, :] != node_ids))
+        ) & alive[:, None]
+
+        # link-traversal accounting in live-chain coordinates: a message
+        # travels |chain_pos[dst] - chain_pos[src]| live hops - a failed
+        # node is spliced out of the forwarding path, not traversed.
+        pos_of = lambda i: chain_pos[jnp.clip(i, 0, n - 1)]
+        uni_hops = jnp.abs(pos_of(flat.dst) - pos_of(flat.src))
+        mcast_hops = jnp.abs(chain_pos[:, None] - pos_of(flat.src)[None, :])  # [n, M]
         packets = (
             jnp.sum(jnp.where(is_unicast, uni_hops, 0))
             + jnp.sum(jnp.where(deliver & is_mcast[None, :], mcast_hops, 0))
@@ -205,6 +274,7 @@ class ChainSim:
 
         # ---------------- exits -> reply log ----------------
         exits = flat.mask(is_exit)
+        is_nack = exits.op == OP_WRITE_NACK
         new_replies = replies.append(exits, t + 1)
 
         live_in = full_inbox.op != OP_NOP
@@ -218,14 +288,15 @@ class ChainSim:
             writes_in=metrics.writes_in
             + jnp.sum(injected.op == OP_WRITE),
             acks=metrics.acks + jnp.sum(flat.op == OP_ACK),
-            replies=metrics.replies + exits.live().sum(),
+            replies=metrics.replies + (exits.live() & ~is_nack).sum(),
             dirty_appends=metrics.dirty_appends
             + (new_stores.pending.sum() - stores.pending.sum()).clip(0),
             fwd_reads=metrics.fwd_reads
             + jnp.sum(is_unicast & (flat.op == OP_READ)),
-            drops=metrics.drops + dropped.sum(),
+            drops=metrics.drops + dropped.sum() + dead_in + dead_letters.sum(),
             relay_procs=metrics.relay_procs
             + jnp.sum(live_in & (full_inbox.op == OP_READ_REPLY)),
+            write_nacks=metrics.write_nacks + is_nack.sum(),
         )
 
         return new_stores, routed, new_metrics, new_replies
@@ -243,17 +314,21 @@ class ChainSim:
     @functools.partial(jax.jit, static_argnums=0)
     def tick(self, state: SimState, injected: Msg) -> SimState:
         """injected: [C, n, c_in] client queries addressed to their entry
-        node within their key's owning chain (see workload.make_schedule)."""
+        node within their key's owning chain (see workload.make_schedule).
+
+        Membership is read from ``state.roles`` (a traced leaf): the CP may
+        swap the table between ticks without triggering a recompile."""
         injected = self._lift(injected)
         stores, inbox, metrics, replies = jax.vmap(
-            self._chain_tick, in_axes=(0, 0, 0, 0, 0, None)
+            self._chain_tick, in_axes=(0, 0, 0, 0, 0, 0, None)
         )(state.stores, state.inbox, state.metrics, state.replies,
-          injected, state.t)
+          injected, state.roles, state.t)
         return SimState(
             stores=stores,
             inbox=inbox,
             metrics=metrics,
             replies=replies,
+            roles=state.roles,
             t=state.t + 1,
         )
 
@@ -349,6 +424,14 @@ class ChainDist:
             lambda x: jnp.broadcast_to(x[None], (self.C,) + x.shape), stores
         )
 
+    def full_roles(self) -> Roles:
+        """All-slots-live role table shaped for this engine: [n] leaves
+        (ungrouped) or [C, n] (grouped).  Feed ``Coordinator.roles_table()``
+        instead to run under edited membership - same shapes, no re-jit."""
+        if self.group_axis is None:
+            return Roles.from_membership(self.n, range(self.n))
+        return full_roles_table(self.n, self.C)
+
     def _specs(self):
         if self.group_axis is None:
             return P(self.axis)
@@ -359,21 +442,33 @@ class ChainDist:
         grouped = self.group_axis is not None
         node_step = self.node_step
 
-        def step(stores: Store, inbox: Msg):
+        def step(stores: Store, inbox: Msg, roles: Roles):
             """shard_map body: [1, ...] (or [1, 1, ...]) local shards; one
-            chain tick.  Returns (stores', inbox', replies_local)."""
-            my_pos = jax.lax.axis_index(axis).astype(jnp.int32)
-            roles = Roles.for_chain(n, my_pos)
+            chain tick under the CP-installed live role table (a traced
+            argument - membership edits re-run, never re-compile).
+            Returns (stores', inbox', replies_local)."""
             unshard = (lambda x: x[0, 0]) if grouped else (lambda x: x[0])
+            my_roles: Roles = jax.tree.map(unshard, roles)
+            my_pos = my_roles.my_pos
             local_store = jax.tree.map(unshard, stores)
             local_in = jax.tree.map(unshard, inbox)
+            # a dead device receives nothing and processes nothing
+            local_in = local_in.mask(
+                jnp.broadcast_to(my_roles.alive, local_in.op.shape)
+            )
             local_in = craq.stamp_entry(local_in, my_pos)
 
-            new_store, outbox = node_step(cfg, local_store, roles, local_in)
+            new_store, outbox = node_step(cfg, local_store, my_roles, local_in)
+            # ... and emits nothing
+            outbox = outbox.mask(
+                jnp.broadcast_to(my_roles.alive, outbox.op.shape)
+            )
 
             # --- next-hop traffic: ppermute one step toward the tail ------
             # (named axis = chain position, so each chain group exchanges
-            # only within itself)
+            # only within itself).  Only traffic for the *physical* ring
+            # neighbour rides the ppermute; forwarding that skips a dead
+            # device (dst == next_pos != my_pos+1) rides the fabric below.
             to_next = outbox.mask(outbox.dst == my_pos + 1)
             perm = [(i, i + 1) for i in range(n - 1)]
             from_prev = jax.tree.map(
@@ -391,7 +486,7 @@ class ChainDist:
             take = (
                 (all_fab.dst == my_pos)
                 | ((all_fab.dst == MULTICAST) & (all_fab.src != my_pos))
-            )
+            ) & my_roles.alive
             from_fabric = all_fab.mask(take)
 
             replies = self._compact(outbox.mask(outbox.dst == TO_CLIENT), batch_per_node)
@@ -409,11 +504,12 @@ class ChainDist:
         spec = self._specs()
         spec_store = Store(*([spec] * len(Store._fields)))
         msg_spec = Msg(*([spec] * len(Msg._fields)))
+        roles_spec = Roles(*([spec] * len(Roles._fields)))
         return jax.jit(
             shard_map(
                 step,
                 mesh=self.mesh,
-                in_specs=(spec_store, msg_spec),
+                in_specs=(spec_store, msg_spec, roles_spec),
                 out_specs=(spec_store, msg_spec, msg_spec),
             )
         )

@@ -22,8 +22,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import store as store_lib
+from repro.core.failure import FailureDetector
 from repro.core.store import Store
-from repro.core.types import ChainConfig, ClusterConfig, as_cluster
+from repro.core.types import ChainConfig, ClusterConfig, Roles, as_cluster
 
 
 @dataclasses.dataclass
@@ -63,9 +64,25 @@ class FailoverPolicy:
 
     timeout_ticks: int = 8
 
-    def redirect(self, membership: ChainMembership, dead: int) -> int:
+    def redirect(
+        self, membership: ChainMembership, dead: int,
+        client: int = 0, key: int = 0,
+    ) -> int:
+        """Pick the live node a client re-targets after ``dead`` times out.
+
+        Under CRAQ *any* live node serves clean reads, so redirection must
+        spread over the whole live set - sending everyone to ``live[0]``
+        would turn one node's failure into a head hot-spot.  The choice is
+        a deterministic hash of (client, key) so a given client re-targets
+        stably (no flapping) while the population load-balances.
+        """
         live = [i for i in membership.node_ids if i != dead]
-        return live[0]
+        # Mix the two words and fold high bits down: a plain linear
+        # combination leaks divisibility (e.g. a multiplier divisible by 3
+        # pins every client to one node of a 3-node live set).
+        h = (client * 2654435761 + key * 2246822519 + 0x9E3779B9) & 0xFFFFFFFF
+        h ^= h >> 16
+        return live[h % len(live)]
 
 
 class Coordinator:
@@ -87,6 +104,13 @@ class Coordinator:
             for _ in range(self.cluster.n_chains)
         ]
         self.failover = FailoverPolicy()
+        # One responsiveness tracker per chain; fail/recover keep its
+        # tracked set in sync with membership (a spliced-in replacement -
+        # possibly with a fresh id - must be watchable immediately).
+        self.detectors = [
+            FailureDetector(n_nodes=self.cfg.n_nodes)
+            for _ in range(self.cluster.n_chains)
+        ]
         self._recovery_log: list[dict] = []
 
     # -- key partitioning ---------------------------------------------------
@@ -98,18 +122,43 @@ class Coordinator:
     def local_key(self, key: int) -> int:
         return int(self.cluster.local_key(key))
 
+    # -- data-plane role table (the DP's forwarding state) -------------------
+    def roles_table(self) -> Roles:
+        """[C, n] live role table reflecting current membership.
+
+        This is the CP's *publication* step: the returned pytree has the
+        same leaf shapes/dtypes regardless of membership, so installing it
+        on a running engine never recompiles the jitted data path.
+        """
+        tables = [
+            Roles.from_membership(
+                self.cfg.n_nodes, m.node_ids, frozen=m.writes_frozen
+            )
+            for m in self.chains
+        ]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *tables)
+
+    def install_roles(self, state):
+        """Publish current membership into a running ``SimState`` (a pure
+        role-table edit between ticks; see chain.py's live-membership
+        contract)."""
+        return state._replace(roles=self.roles_table())
+
+
     # -- failure recovery (two phases, paper §III.C) -------------------------
     def fail_node(self, chain_idx: int, node_id: int) -> ChainMembership:
         """Phase 1: drop the node from forwarding tables + multicast group.
 
         Clients are redirected immediately (FailoverPolicy); the chain keeps
-        serving with n-1 nodes.
+        serving with n-1 nodes.  Call ``install_roles(state)`` afterwards to
+        publish the new table to a running engine.
         """
         m = self.chains[chain_idx]
         assert node_id in m.node_ids, f"node {node_id} not in chain {chain_idx}"
         assert m.length > 2, "cannot drop below head+tail"
         m.node_ids = [i for i in m.node_ids if i != node_id]
         m.epoch += 1
+        self.detectors[chain_idx].untrack(node_id)
         self._recovery_log.append(
             {"event": "fail", "chain": chain_idx, "node": node_id, "epoch": m.epoch,
              "t": time.time()}
@@ -125,7 +174,18 @@ class Coordinator:
             return m.node_ids[0]
         return m.node_ids[min(position, m.length) - 1]
 
-    def recover_node(
+    def begin_recovery(self, chain_idx: int) -> ChainMembership:
+        """Open the phase-2 copy window: freeze the chain's writes.
+
+        ``install_roles(state)`` after this publishes the frozen flag, so
+        the running data plane NACKs client writes (``OP_WRITE_NACK``)
+        while the CP copies KV pairs.  Reads keep serving throughout.
+        """
+        m = self.chains[chain_idx]
+        m.writes_frozen = True
+        return m
+
+    def complete_recovery(
         self,
         chain_idx: int,
         new_node_id: int,
@@ -133,9 +193,9 @@ class Coordinator:
         stores: Store,
         source_store_index: Optional[int] = None,
     ) -> tuple[ChainMembership, Store]:
-        """Phase 2: copy KV pairs from a live node, freeze writes during the
-        copy, then splice the replacement into the forwarding tables and the
-        multicast group (paper §III.C).
+        """Close the copy window: copy KV pairs from the live source onto
+        the replacement, splice it into the forwarding tables and the
+        multicast group, and unfreeze writes (paper §III.C).
 
         ``stores`` is the stacked [n_physical, ...] store pytree of one
         chain, or the running cluster's [C, n_physical, ...] pytree - in
@@ -144,7 +204,6 @@ class Coordinator:
         (the CP owns it).
         """
         m = self.chains[chain_idx]
-        m.writes_frozen = True
         try:
             src = (
                 source_store_index
@@ -154,6 +213,12 @@ class Coordinator:
             # A cluster pytree carries the chain axis ahead of the node
             # axis: values [C, n, K, V, W] vs a single chain's [n, K, V, W].
             chain_stacked = stores.values.ndim == 5
+            n_slots = stores.values.shape[1 if chain_stacked else 0]
+            assert 0 <= new_node_id < n_slots, (
+                f"replacement id {new_node_id} has no physical store slot "
+                f"(0..{n_slots - 1}); an out-of-range scatter would silently "
+                f"drop the copy"
+            )
             if chain_stacked:
                 copied = jax.tree.map(
                     lambda x: x.at[chain_idx, new_node_id].set(x[chain_idx, src]),
@@ -165,6 +230,7 @@ class Coordinator:
                 )
             m.node_ids = m.node_ids[:position] + [new_node_id] + m.node_ids[position:]
             m.epoch += 1
+            self.detectors[chain_idx].track(new_node_id)
             self._recovery_log.append(
                 {"event": "recover", "chain": chain_idx, "node": new_node_id,
                  "from": src, "epoch": m.epoch, "t": time.time()}
@@ -172,6 +238,26 @@ class Coordinator:
         finally:
             m.writes_frozen = False
         return m, copied
+
+    def recover_node(
+        self,
+        chain_idx: int,
+        new_node_id: int,
+        position: int,
+        stores: Store,
+        source_store_index: Optional[int] = None,
+    ) -> tuple[ChainMembership, Store]:
+        """Phase 2 in one shot: ``begin_recovery`` + ``complete_recovery``.
+
+        A live cluster should use the two-step form with an
+        ``install_roles`` between them, so the freeze window is observable
+        to in-flight traffic; the one-shot form suits host-level surgery
+        where no ticks elapse during the copy.
+        """
+        self.begin_recovery(chain_idx)
+        return self.complete_recovery(
+            chain_idx, new_node_id, position, stores, source_store_index
+        )
 
     # -- coordination-service API (the KVS as ZooKeeper replacement) --------
     @staticmethod

@@ -8,8 +8,10 @@ batch equivalent of the match-action control logic:
              dirty & tail:       reply the latest dirty version
              dirty & not tail:   forward to the tail
     WRITE -> append dirty version (drop if the window overflows);
-             forward toward the tail;
-             at the tail: commit clean, multicast ACK, reply to client
+             forward toward the tail (next live hop from the role table);
+             at the tail: commit clean, multicast ACK, reply to client;
+             while the chain's writes are frozen (recovery copy window)
+             client writes are NACKed at the entry node instead
     ACK   -> commit: install clean value, compact versions <= acked seq
 
 Batch serialization order within one step: READs observe the state at step
@@ -30,6 +32,7 @@ from repro.core.types import (
     OP_READ,
     OP_READ_REPLY,
     OP_WRITE,
+    OP_WRITE_NACK,
     OP_WRITE_REPLY,
     TO_CLIENT,
     CLIENT_BASE,
@@ -50,6 +53,12 @@ def node_step(cfg: ChainConfig, store: Store, roles: Roles, inbox: Msg):
     is_write = inbox.op == OP_WRITE
     is_ack = inbox.op == OP_ACK
     is_tail = roles.is_tail
+
+    # Write freeze (recovery phase 2 copy window): client writes entering
+    # the chain are NACKed; in-flight writes (already sequenced) drain
+    # normally so the pre-freeze prefix commits before the CP copies.
+    nacked = is_write & (inbox.seq < 0) & roles.frozen
+    is_write = is_write & ~nacked
 
     # ---------------- READ path (observes pre-step state) ----------------
     clean = store_lib.is_clean(store, inbox.key)
@@ -98,14 +107,12 @@ def node_step(cfg: ChainConfig, store: Store, roles: Roles, inbox: Msg):
 
     # Forward accepted writes toward the tail (next hop in the chain).
     fwd_write = accepted
-    fwd = is_read * 0  # placate linters; real mask built below
-    del fwd
     fwd_mask = fwd_read | fwd_write
     fwd_dst = jnp.where(
         fwd_read,
         roles.tail_pos,                       # dirty reads go straight to tail
-        roles.my_pos + 1,                     # writes propagate hop by hop
-    )
+        roles.next_pos,                       # writes propagate along the
+    )                                         # live chain (skips dead slots)
     forwards = Msg(
         op=jnp.where(fwd_read, OP_READ, OP_WRITE),
         key=inbox.key,
@@ -135,19 +142,23 @@ def node_step(cfg: ChainConfig, store: Store, roles: Roles, inbox: Msg):
         t_inject=inbox.t_inject,
         extra=inbox.extra,
     ).mask(ack_mask)
+    # Write replies share a section with freeze NACKs (disjoint masks: a
+    # NACKed write never reaches the tail-commit path).
+    wr_mask = ack_mask | nacked
     wreplies = Msg(
-        op=jnp.where(ack_mask, OP_WRITE_REPLY, 0),
+        op=jnp.where(nacked, OP_WRITE_NACK,
+                     jnp.where(ack_mask, OP_WRITE_REPLY, 0)),
         key=inbox.key,
         value=inbox.value,
-        seq=wseq,
+        seq=jnp.where(nacked, -1, wseq),
         src=jnp.full((B,), roles.my_pos, jnp.int32),
-        dst=jnp.where(ack_mask, TO_CLIENT, NOWHERE),
+        dst=jnp.where(wr_mask, TO_CLIENT, NOWHERE),
         client=inbox.client,
         entry=inbox.entry,
         qid=inbox.qid,
         t_inject=inbox.t_inject,
         extra=inbox.extra,
-    ).mask(ack_mask)
+    ).mask(wr_mask)
 
     outbox = Msg.concat([replies, forwards, acks, wreplies])
     return new_store, outbox

@@ -42,6 +42,16 @@ class FailureDetector:
     def heard_from(self, node_id: int) -> None:
         self._last_seen[node_id] = self._now
 
+    def track(self, node_id: int) -> None:
+        """Start watching a node (a replacement spliced in by recovery may
+        carry a fresh id never seen before); it gets a full timeout grace."""
+        self._last_seen[node_id] = self._now
+
+    def untrack(self, node_id: int) -> None:
+        """Stop watching a node the CP removed - it must neither linger in
+        ``suspected()`` nor KeyError later probes."""
+        self._last_seen.pop(node_id, None)
+
     def calibrate(self, avg_response_ticks: float, slack: float = 4.0) -> None:
         self.timeout_ticks = max(1, int(avg_response_ticks * slack))
 
@@ -53,7 +63,8 @@ class FailureDetector:
         ]
 
     def is_alive(self, node_id: int) -> bool:
-        return self._now - self._last_seen[node_id] <= self.timeout_ticks
+        last = self._last_seen.get(node_id)
+        return last is not None and self._now - last <= self.timeout_ticks
 
 
 @dataclasses.dataclass
@@ -68,6 +79,10 @@ class HedgedReadPolicy:
     fanout: int = 2
 
     def targets(self, entry: int, membership) -> list[int]:
+        """``entry`` is a chain *position*; distance is measured between
+        positions within the live membership (after a failure reorders
+        ``node_ids``, node ids and positions diverge - sorting by id
+        distance would hedge onto far-away replicas)."""
         nodes = list(membership.node_ids)
-        ordered = sorted(nodes, key=lambda i: (abs(i - entry), i))
-        return ordered[: self.fanout]
+        order = sorted(range(len(nodes)), key=lambda p: (abs(p - entry), p))
+        return [nodes[p] for p in order[: self.fanout]]

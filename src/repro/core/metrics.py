@@ -35,16 +35,19 @@ class Metrics(NamedTuple):
     replies: jax.Array
     dirty_appends: jax.Array  # dirty commits (paper Fig.5, right axis)
     fwd_reads: jax.Array      # reads that had to be forwarded (dirty, CRAQ)
-    drops: jax.Array          # inbox-capacity or out-of-window drops
+    drops: jax.Array          # inbox-capacity drops, out-of-window drops,
+                              # and traffic black-holed by dead nodes
     relay_procs: jax.Array    # reply-relay passes (CR retrace; IP-forwarded,
                               # not KVS pipeline work)
+    write_nacks: jax.Array    # client writes rejected while writes_frozen
+                              # (recovery copy window; excluded from replies)
 
     @staticmethod
     def zeros() -> "Metrics":
         """Scalar counters for one chain (the engine vmaps these over the
         chain axis, yielding [C] leaves)."""
         z = jnp.zeros((), jnp.int32)
-        return Metrics(*([z] * 12))
+        return Metrics(*([z] * 13))
 
     def total(self) -> "Metrics":
         """Reduce per-chain [C] counters to cluster-wide scalars."""

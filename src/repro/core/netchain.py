@@ -25,6 +25,7 @@ from repro.core.types import (
     OP_READ,
     OP_READ_REPLY,
     OP_WRITE,
+    OP_WRITE_NACK,
     OP_WRITE_REPLY,
     TO_CLIENT,
     ChainConfig,
@@ -47,13 +48,18 @@ def node_step(cfg: ChainConfig, store: Store, roles: Roles, inbox: Msg):
     is_reply = inbox.op == OP_READ_REPLY
     is_tail = roles.is_tail
 
+    # Write freeze (recovery copy window): client writes NACK at the entry.
+    nacked = is_write & (inbox.seq < 0) & roles.frozen
+    is_write = is_write & ~nacked
+
     # ---------------- READ: only the tail replies ----------------
     v0, s0 = store_lib.read_clean(store, inbox.key)
     tail_answers = is_read & is_tail
     fwd_read = is_read & ~is_tail
     # Reply retraces the chain: next stop is one hop back toward the entry
-    # node (or the client if the read entered at the tail itself).
-    back_dst = jnp.where(inbox.entry == roles.my_pos, TO_CLIENT, roles.my_pos - 1)
+    # node (or the client if the read entered at the tail itself).  The
+    # retrace follows the live chain (prev_pos skips spliced-out nodes).
+    back_dst = jnp.where(inbox.entry == roles.my_pos, TO_CLIENT, roles.prev_pos)
     replies = Msg(
         op=jnp.where(tail_answers, OP_READ_REPLY, 0),
         key=inbox.key,
@@ -69,7 +75,7 @@ def node_step(cfg: ChainConfig, store: Store, roles: Roles, inbox: Msg):
     ).mask(tail_answers)
 
     # ---------------- READ_REPLY relay back toward the entry node --------
-    relay_dst = jnp.where(inbox.entry == roles.my_pos, TO_CLIENT, roles.my_pos - 1)
+    relay_dst = jnp.where(inbox.entry == roles.my_pos, TO_CLIENT, roles.prev_pos)
     relays = Msg(
         op=jnp.where(is_reply, OP_READ_REPLY, 0),
         key=inbox.key,
@@ -99,7 +105,7 @@ def node_step(cfg: ChainConfig, store: Store, roles: Roles, inbox: Msg):
         value=inbox.value,
         seq=wseq,
         src=jnp.full((B,), roles.my_pos, jnp.int32),
-        dst=jnp.where(fwd_write, roles.my_pos + 1, NOWHERE),
+        dst=jnp.where(fwd_write, roles.next_pos, NOWHERE),
         client=inbox.client,
         entry=inbox.entry,
         qid=inbox.qid,
@@ -110,24 +116,27 @@ def node_step(cfg: ChainConfig, store: Store, roles: Roles, inbox: Msg):
     forwards = forwards._replace(
         op=jnp.where(fwd_read, OP_READ, forwards.op),
         seq=jnp.where(fwd_read, inbox.seq, forwards.seq),
-        dst=jnp.where(fwd_read, roles.my_pos + 1, forwards.dst),
+        dst=jnp.where(fwd_read, roles.next_pos, forwards.dst),
     )
 
-    # Tail acknowledges the write straight to the client (CR semantics).
+    # Tail acknowledges the write straight to the client (CR semantics);
+    # freeze NACKs share the section (disjoint masks).
     wack = is_write & is_tail
+    wr_mask = wack | nacked
     wreplies = Msg(
-        op=jnp.where(wack, OP_WRITE_REPLY, 0),
+        op=jnp.where(nacked, OP_WRITE_NACK,
+                     jnp.where(wack, OP_WRITE_REPLY, 0)),
         key=inbox.key,
         value=inbox.value,
-        seq=wseq,
+        seq=jnp.where(nacked, -1, wseq),
         src=jnp.full((B,), roles.my_pos, jnp.int32),
-        dst=jnp.where(wack, TO_CLIENT, NOWHERE),
+        dst=jnp.where(wr_mask, TO_CLIENT, NOWHERE),
         client=inbox.client,
         entry=inbox.entry,
         qid=inbox.qid,
         t_inject=inbox.t_inject,
         extra=inbox.extra,
-    ).mask(wack)
+    ).mask(wr_mask)
 
     outbox = Msg.concat([replies, forwards, relays, wreplies])
     return new_store, outbox

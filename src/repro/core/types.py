@@ -29,6 +29,10 @@ OP_WRITE = 2
 OP_ACK = 3
 OP_READ_REPLY = 4
 OP_WRITE_REPLY = 5
+# Write rejected at the entry node because the chain's writes are frozen
+# (recovery phase 2 copy window, paper §III.C).  The client is expected to
+# retry after the splice; the reply carries seq == -1.
+OP_WRITE_NACK = 6
 
 OP_NAMES = {
     OP_NOP: "NOP",
@@ -37,6 +41,7 @@ OP_NAMES = {
     OP_ACK: "ACK",
     OP_READ_REPLY: "READ_REPLY",
     OP_WRITE_REPLY: "WRITE_REPLY",
+    OP_WRITE_NACK: "WRITE_NACK",
 }
 
 # Value payload width: 128-bit VALUE field == 4 x 32-bit words (paper default).
@@ -106,20 +111,26 @@ class Msg(NamedTuple):
         )
 
     def mask(self, keep: jax.Array) -> "Msg":
-        """Blank out slots where ``keep`` is False (turn them into NOPs)."""
+        """Blank out slots where ``keep`` is False (turn them into NOPs).
+
+        Fields are pinned to strong int32: node-step sections built from
+        python-int constants are otherwise weakly typed, and a weak->strong
+        flip across a tick boundary costs a spurious recompile.
+        """
         keep = keep.astype(bool)
+        i32 = lambda x: jnp.asarray(x, jnp.int32)
         return Msg(
-            op=jnp.where(keep, self.op, OP_NOP),
-            key=jnp.where(keep, self.key, 0),
-            value=jnp.where(keep[:, None], self.value, 0),
-            seq=jnp.where(keep, self.seq, -1),
-            src=jnp.where(keep, self.src, 0),
-            dst=jnp.where(keep, self.dst, NOWHERE),
-            client=jnp.where(keep, self.client, 0),
-            entry=jnp.where(keep, self.entry, 0),
-            qid=jnp.where(keep, self.qid, -1),
-            t_inject=jnp.where(keep, self.t_inject, 0),
-            extra=jnp.where(keep, self.extra, 0),
+            op=i32(jnp.where(keep, self.op, OP_NOP)),
+            key=i32(jnp.where(keep, self.key, 0)),
+            value=i32(jnp.where(keep[:, None], self.value, 0)),
+            seq=i32(jnp.where(keep, self.seq, -1)),
+            src=i32(jnp.where(keep, self.src, 0)),
+            dst=i32(jnp.where(keep, self.dst, NOWHERE)),
+            client=i32(jnp.where(keep, self.client, 0)),
+            entry=i32(jnp.where(keep, self.entry, 0)),
+            qid=i32(jnp.where(keep, self.qid, -1)),
+            t_inject=i32(jnp.where(keep, self.t_inject, 0)),
+            extra=i32(jnp.where(keep, self.extra, 0)),
         )
 
     def live(self) -> jax.Array:
@@ -218,12 +229,29 @@ def as_cluster(cfg) -> "ClusterConfig":
 
 class Roles(NamedTuple):
     """Per-node role metadata, installed by the control plane (not parsed
-    from packets - the paper's key design difference vs NetChain)."""
+    from packets - the paper's key design difference vs NetChain).
 
-    my_pos: jax.Array     # [] int32 position of this node in the chain
-    head_pos: jax.Array   # [] int32
-    tail_pos: jax.Array   # [] int32
+    All positions are *physical slot ids* (the fixed indices messages are
+    addressed with); ``chain_pos`` is the node's position within the *live*
+    chain, which is what link-traversal accounting uses (a spliced-out node
+    is not a hop).  ``fail_node``/``recover_node`` republish this table on
+    the running state - same shapes and dtypes, so the jitted data path is
+    never recompiled by a membership change.
+    """
+
+    my_pos: jax.Array     # [] int32 physical slot id of this node
+    head_pos: jax.Array   # [] int32 physical id of the live head
+    tail_pos: jax.Array   # [] int32 physical id of the live tail
     n_nodes: jax.Array    # [] int32 current live chain length
+    next_pos: jax.Array   # [] int32 physical id of the live successor
+                          #    (NOWHERE at the tail / on dead nodes)
+    prev_pos: jax.Array   # [] int32 physical id of the live predecessor
+                          #    (NOWHERE at the head / on dead nodes)
+    chain_pos: jax.Array  # [] int32 position in the live chain (NOWHERE if
+                          #    dead) - the hop-accounting coordinate
+    alive: jax.Array      # [] bool - dead nodes neither receive nor emit
+    frozen: jax.Array     # [] bool - chain-wide write freeze (recovery
+                          #    phase 2 copy window): client writes NACK
 
     @property
     def is_tail(self) -> jax.Array:
@@ -234,12 +262,43 @@ class Roles(NamedTuple):
         return self.my_pos == self.head_pos
 
     @staticmethod
-    def for_chain(n_nodes: int, my_pos) -> "Roles":
+    def from_membership(
+        n_physical: int, node_ids, frozen: bool = False
+    ) -> "Roles":
+        """Role table of one chain with [n_physical] leaves.
+
+        ``node_ids`` is the CP's ordered live membership (head .. tail);
+        physical slots not listed are dead.  All ids must fit the physical
+        slot range - the data plane has no storage for fresh ids beyond it.
+        """
+        node_ids = [int(i) for i in node_ids]
+        assert len(node_ids) >= 2, "chain needs at least head and tail"
+        assert all(0 <= i < n_physical for i in node_ids), (
+            f"node ids {node_ids} outside physical slot range 0..{n_physical - 1}"
+        )
+        assert len(set(node_ids)) == len(node_ids), "duplicate node ids"
+        alive = [False] * n_physical
+        chain_pos = [NOWHERE] * n_physical
+        nxt = [NOWHERE] * n_physical
+        prv = [NOWHERE] * n_physical
+        for pos, nid in enumerate(node_ids):
+            alive[nid] = True
+            chain_pos[nid] = pos
+            if pos + 1 < len(node_ids):
+                nxt[nid] = node_ids[pos + 1]
+            if pos > 0:
+                prv[nid] = node_ids[pos - 1]
+        full = lambda v: jnp.full((n_physical,), v, jnp.int32)
         return Roles(
-            my_pos=jnp.asarray(my_pos, jnp.int32),
-            head_pos=jnp.asarray(0, jnp.int32),
-            tail_pos=jnp.asarray(n_nodes - 1, jnp.int32),
-            n_nodes=jnp.asarray(n_nodes, jnp.int32),
+            my_pos=jnp.arange(n_physical, dtype=jnp.int32),
+            head_pos=full(node_ids[0]),
+            tail_pos=full(node_ids[-1]),
+            n_nodes=full(len(node_ids)),
+            next_pos=jnp.asarray(nxt, jnp.int32),
+            prev_pos=jnp.asarray(prv, jnp.int32),
+            chain_pos=jnp.asarray(chain_pos, jnp.int32),
+            alive=jnp.asarray(alive, bool),
+            frozen=jnp.full((n_physical,), bool(frozen)),
         )
 
 

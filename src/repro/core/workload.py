@@ -17,6 +17,7 @@ chain's head; reads spread over the owning chain's nodes (or target
 from __future__ import annotations
 
 import dataclasses
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -129,29 +130,45 @@ def make_schedule(cfg: ChainConfig | ClusterConfig, wl: WorkloadConfig) -> Msg:
     return sched
 
 
-def route_stream(cluster: ClusterConfig, stream: Msg, queries_per_node: int) -> Msg:
+class RoutedStream(NamedTuple):
+    """``route_stream``'s result: the packed lanes plus exact loss counts,
+    so benchmarks report offered vs served load instead of silently
+    overstating throughput."""
+
+    lanes: Msg            # [T, C, n, queries_per_node]
+    dropped: jax.Array    # [] int32 total queries not packed
+    out_of_range: jax.Array  # [] int32 subset of ``dropped`` whose key has
+                             #    no owning register (outside the key space)
+
+
+def route_stream(
+    cluster: ClusterConfig, stream: Msg, queries_per_node: int
+) -> RoutedStream:
     """Pack a flat client stream into per-chain injection lanes.
 
     ``stream``: ``[T, Q]`` queries whose ``key`` field holds *global* keys.
     Each query is routed to its key's owning chain via the cluster's
     partition map, its key rewritten to the chain-local register index, and
     the chain's queries spread round-robin over the chain's nodes (writes
-    pinned to the head).  Output: ``[T, C, n, queries_per_node]``; queries
-    beyond a lane's capacity are dropped (count them by comparing live
-    slots before/after if exactness matters - the benchmarks size lanes
-    with headroom).
+    pinned to the head).  Returns a ``RoutedStream``: lanes shaped
+    ``[T, C, n, queries_per_node]`` plus the count of queries that could
+    not be packed - keys outside the global key space and lane-capacity
+    overflow (the benchmarks size lanes with headroom, but the count makes
+    any loss explicit).
     """
     T, Q = stream.op.shape
     C, n, q = cluster.n_chains, cluster.n_nodes, queries_per_node
-    live = stream.op != OP_NOP
+    offered = stream.op != OP_NOP
     # Keys outside the global key space have no owning register anywhere;
     # park them (downstream store indexing would silently clamp-alias).
-    live = live & (stream.key >= 0) & (stream.key < cluster.num_global_keys)
+    in_range = (stream.key >= 0) & (stream.key < cluster.num_global_keys)
+    live = offered & in_range
+    n_out_of_range = jnp.sum(offered & ~in_range)
     owner = jnp.where(live, cluster.key_to_chain(stream.key), C)  # C = parked
     local = cluster.local_key(stream.key)
     stream = stream._replace(key=jnp.where(live, local, 0))
 
-    def pack_tick(msgs: Msg, owner_row: jax.Array) -> Msg:
+    def pack_tick(msgs: Msg, owner_row: jax.Array):
         # Stable sort by owning chain (parked NOPs sort last as chain C).
         order = jnp.argsort(owner_row, stable=True)
         m: Msg = jax.tree.map(lambda x: x[order], msgs)
@@ -191,8 +208,14 @@ def route_stream(cluster: ClusterConfig, stream: Msg, queries_per_node: int) -> 
             dst=jnp.where(packed.op != OP_NOP, lane_node, NOWHERE),
             qid=jnp.where(packed.op != OP_NOP, packed.qid, -1),
         )
+        dropped_t = jnp.sum(m.op != OP_NOP) - jnp.sum(ok)
         return jax.tree.map(
             lambda x: x.reshape((C, n, q) + x.shape[1:]), packed
-        )
+        ), dropped_t
 
-    return jax.vmap(pack_tick)(stream, owner)
+    lanes, dropped_per_tick = jax.vmap(pack_tick)(stream, owner)
+    return RoutedStream(
+        lanes=lanes,
+        dropped=dropped_per_tick.sum().astype(jnp.int32),
+        out_of_range=n_out_of_range.astype(jnp.int32),
+    )

@@ -17,6 +17,7 @@ mesh = jax.make_mesh((4,), ("chain",))
 cfg = ChainConfig(n_nodes=4, num_keys=16, num_versions=4, protocol="netcraq")
 dist = ChainDist(cfg, mesh, axis="chain")
 stores = dist.init_state()
+roles = dist.full_roles()
 B = 8
 step = dist.make_step(B)
 
@@ -32,18 +33,67 @@ def inject(op, key, val, node):
 
 inbox = inject(OP_WRITE, 3, 99, 0)
 for _ in range(8):
-    stores, inbox, replies = step(stores, inbox)
+    stores, inbox, replies = step(stores, inbox, roles)
 assert stores.values[:, 3, 0, 0].tolist() == [99]*4, stores.values[:, 3, 0, 0]
 assert stores.pending[:, 3].tolist() == [0]*4
 
 inbox = inject(OP_READ, 3, 0, 2)
-stores, inbox, replies = step(stores, inbox)
+stores, inbox, replies = step(stores, inbox, roles)
 r = jax.device_get(replies)
 live = r.op != 0
 assert live.sum() == 1 and r.value[live][0, 0] == 99, r.value[live]
 print("DIST_OK")
 """)
     assert "DIST_OK" in out
+
+
+@pytest.mark.slow
+def test_chain_dist_serves_with_dead_node():
+    """make_step consumes the CP's live role table: with node 1 spliced out
+    the write path runs head 0 -> 2 -> tail 3 (the skip rides the fabric
+    collective), the dead device neither stores nor ACKs, and reads keep
+    serving - all without re-making the step function."""
+    out = run_with_devices("""
+import jax, jax.numpy as jnp
+from repro.core import ChainConfig, ChainDist, Coordinator, CLIENT_BASE
+from repro.core.types import Msg, OP_READ, OP_WRITE
+
+mesh = jax.make_mesh((4,), ("chain",))
+cfg = ChainConfig(n_nodes=4, num_keys=16, num_versions=4, protocol="netcraq")
+dist = ChainDist(cfg, mesh, axis="chain")
+stores = dist.init_state()
+B = 8
+step = dist.make_step(B)
+
+def inject(op, key, val, node):
+    m = Msg.empty(B)
+    m = jax.tree.map(lambda x: jnp.tile(x[None], (4,) + (1,)*x.ndim), m)
+    return m._replace(
+        op=m.op.at[node, 0].set(op), key=m.key.at[node, 0].set(key),
+        value=m.value.at[node, 0, 0].set(val),
+        src=m.src.at[node, 0].set(CLIENT_BASE+7),
+        client=m.client.at[node, 0].set(CLIENT_BASE+7),
+        qid=m.qid.at[node, 0].set(42), dst=m.dst.at[node, 0].set(node))
+
+co = Coordinator(cfg)
+co.fail_node(0, 1)
+roles = jax.tree.map(lambda x: x[0], co.roles_table())  # [n] leaves
+
+inbox = inject(OP_WRITE, 3, 99, 0)
+for _ in range(8):
+    stores, inbox, replies = step(stores, inbox, roles)
+assert stores.values[:, 3, 0, 0].tolist() == [99, 0, 99, 99], \\
+    stores.values[:, 3, 0, 0]
+assert stores.pending[:, 3].tolist() == [0]*4
+
+inbox = inject(OP_READ, 3, 0, 2)
+stores, inbox, replies = step(stores, inbox, roles)
+r = jax.device_get(replies)
+live = r.op != 0
+assert live.sum() == 1 and r.value[live][0, 0] == 99, r.value[live]
+print("DEAD_NODE_OK")
+""")
+    assert "DEAD_NODE_OK" in out
 
 
 @pytest.mark.slow
@@ -60,6 +110,7 @@ cfg = ChainConfig(n_nodes=4, num_keys=16, num_versions=4, protocol="netcraq")
 dist = ChainDist(ClusterConfig(chain=cfg, n_chains=2), mesh,
                  axis="chain", group_axis="cgroup")
 stores = dist.init_state()
+roles = dist.full_roles()
 B = 8
 step = dist.make_step(B)
 
@@ -77,13 +128,13 @@ def inject(op, key, val, node, chain):
 
 inbox = inject(OP_WRITE, 5, 123, 0, 1)
 for _ in range(8):
-    stores, inbox, replies = step(stores, inbox)
+    stores, inbox, replies = step(stores, inbox, roles)
 assert stores.values[1, :, 5, 0, 0].tolist() == [123]*4, stores.values[1, :, 5, 0, 0]
 assert stores.values[0, :, 5, 0, 0].tolist() == [0]*4   # chain 0 untouched
 assert int(stores.pending.sum()) == 0
 
 inbox = inject(OP_READ, 5, 0, 2, 1)
-stores, inbox, replies = step(stores, inbox)
+stores, inbox, replies = step(stores, inbox, roles)
 r = jax.device_get(replies)
 live = r.op != 0
 assert live.sum() == 1 and r.value[live][0, 0] == 123, r.value[live]

@@ -42,6 +42,80 @@ def test_phase2_recovery_copies_from_predecessor():
     assert events == ["fail", "recover"]
 
 
+def test_redirect_spreads_over_live_nodes():
+    """Phase-1 redirection must not concentrate on one node: over many
+    (client, key) pairs every live node receives some redirected traffic
+    (regression: redirect used to always return live[0], turning a failure
+    into a head hot-spot)."""
+    cfg = ChainConfig(n_nodes=4, num_keys=16)
+    co = Coordinator(cfg)
+    m = co.fail_node(0, 2)
+    hits = {i: 0 for i in m.node_ids}
+    for client in range(32):
+        for key in range(16):
+            t = co.failover.redirect(m, dead=2, client=client, key=key)
+            assert t in m.node_ids and t != 2
+            hits[t] += 1
+    assert all(v > 0 for v in hits.values()), f"point mass: {hits}"
+    # a SINGLE client's keys must spread too (regression: a multiplier
+    # divisible by 3 made the key irrelevant for a 3-node live set,
+    # pinning each client to one node)
+    one_client = {co.failover.redirect(m, dead=2, client=0, key=k)
+                  for k in range(64)}
+    assert one_client == set(m.node_ids), one_client
+    # deterministic: the same (client, key) re-targets stably
+    assert (co.failover.redirect(m, dead=2, client=5, key=9)
+            == co.failover.redirect(m, dead=2, client=5, key=9))
+
+
+def test_detector_tracks_spliced_in_fresh_id():
+    """A replacement spliced in by recovery may carry an id the detector
+    never saw; track/untrack keep the watched set in sync with membership
+    (regression: is_alive used to KeyError on unknown ids and a fresh node
+    was never suspected)."""
+    det = FailureDetector(n_nodes=3, timeout_ticks=2)
+    assert not det.is_alive(99)  # unknown id: not alive, no KeyError
+    det.untrack(1)
+    det.untrack(1)  # idempotent
+    for _ in range(5):
+        det.tick()
+    assert 1 not in det.suspected()  # untracked nodes never suspected
+
+    det.track(7)  # fresh id spliced in by recovery
+    assert det.is_alive(7)
+    for _ in range(3):
+        det.tick()
+    assert 7 in det.suspected()  # ...and IS watchable from then on
+
+
+def test_coordinator_syncs_detector_with_membership():
+    """fail_node untracks; complete_recovery tracks the replacement."""
+    cfg = ChainConfig(n_nodes=4, num_keys=16)
+    co = Coordinator(cfg)
+    sim = ChainSim(cfg)
+    state = sim.init_state()
+    co.fail_node(0, 2)
+    assert not co.detectors[0].is_alive(2)
+    assert 2 not in co.detectors[0]._last_seen
+    co.recover_node(0, new_node_id=2, position=2, stores=state.stores)
+    assert co.detectors[0].is_alive(2)
+
+
+def test_recover_rejects_id_without_store_slot():
+    """A replacement id with no physical store slot must fail loudly at
+    the copy (regression: the out-of-bounds scatter silently dropped the
+    copy and the bad membership only exploded later in roles_table)."""
+    cfg = ChainConfig(n_nodes=4, num_keys=16)
+    co = Coordinator(cfg)
+    sim = ChainSim(cfg)
+    state = sim.init_state()
+    co.fail_node(0, 2)
+    with pytest.raises(AssertionError, match="physical store slot"):
+        co.recover_node(0, new_node_id=7, position=2, stores=state.stores)
+    assert not co.chains[0].writes_frozen  # freeze released on failure
+    assert co.chains[0].node_ids == [0, 1, 3]  # membership not corrupted
+
+
 def test_failure_detector_timeout_and_calibration():
     det = FailureDetector(n_nodes=3, timeout_ticks=2)
     for _ in range(3):
@@ -60,6 +134,25 @@ def test_hedged_reads_prefer_near_replicas():
     pol = HedgedReadPolicy(fanout=2)
     targets = pol.targets(entry=1, membership=co.chains[0])
     assert len(targets) == 2 and 1 in targets
+
+
+def test_hedged_reads_use_positions_not_ids():
+    """``entry`` is a chain position; after recovery reorders node_ids the
+    fanout must follow positional distance (regression: sorting by id
+    distance hedged onto far-away replicas)."""
+    cfg = ChainConfig(n_nodes=4, num_keys=16)
+    co = Coordinator(cfg)
+    # fail node 1, splice it back at the TAIL: chain order is [0, 2, 3, 1]
+    co.fail_node(0, 1)
+    m, _ = co.recover_node(0, new_node_id=1, position=3,
+                           stores=ChainSim(cfg).init_state().stores)
+    assert m.node_ids == [0, 2, 3, 1]
+    pol = HedgedReadPolicy(fanout=2)
+    # entry position 0 -> nearest positions are 0 and 1 -> nodes 0 and 2
+    assert pol.targets(entry=0, membership=m) == [0, 2]
+    # entry position 3 (node 1, the spliced-in tail) -> nodes 1 and 3;
+    # id-distance sorting would instead pick nodes 0 and 2
+    assert pol.targets(entry=3, membership=m) == [1, 3]
 
 
 def test_consistency_preserved_across_recovery():

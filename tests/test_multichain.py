@@ -110,8 +110,9 @@ def test_route_stream_routes_by_partition_map():
     qid = jnp.arange(T * Q, dtype=jnp.int32).reshape(T, Q)
     stream = stream._replace(op=ops, key=gkeys, qid=qid,
                              src=jnp.full((T, Q), CLIENT_BASE, jnp.int32))
-    sched = route_stream(cl, stream, queries_per_node=Q)  # ample headroom
-    s = jax.tree.map(np.asarray, sched)
+    routed = route_stream(cl, stream, queries_per_node=Q)  # ample headroom
+    assert int(routed.dropped) == 0 and int(routed.out_of_range) == 0
+    s = jax.tree.map(np.asarray, routed.lanes)
     assert s.op.shape == (T, 4, cl.n_nodes, Q)
 
     live_in = np.asarray(ops) != OP_NOP
@@ -134,6 +135,37 @@ def test_route_stream_routes_by_partition_map():
     nodes = np.broadcast_to(
         np.arange(cl.n_nodes)[None, None, :, None], s.op.shape)
     assert (nodes[w] == 0).all()
+
+
+def test_route_stream_counts_dropped_queries():
+    """Out-of-range keys and lane overflow are reported, not silently
+    dropped (regression: benchmark throughput was overstated by comparing
+    replies to an offered load that never got packed)."""
+    cl = _cluster(C=2, num_keys=8)  # 16 global keys
+    T, Q = 2, 12
+    base = Msg.empty(Q)
+    stream = jax.tree.map(lambda x: jnp.broadcast_to(x[None], (T,) + x.shape), base)
+    keys = jnp.zeros((T, Q), jnp.int32)
+    # 3 queries with keys outside the global key space
+    keys = keys.at[0, 0].set(99).at[0, 1].set(-1).at[1, 0].set(16)
+    stream = stream._replace(
+        op=jnp.full((T, Q), OP_READ, jnp.int32),
+        key=keys,
+        qid=jnp.arange(T * Q, dtype=jnp.int32).reshape(T, Q),
+        src=jnp.full((T, Q), CLIENT_BASE, jnp.int32),
+    )
+    routed = route_stream(cl, stream, queries_per_node=Q)
+    assert int(routed.out_of_range) == 3
+    assert int(routed.dropped) == 3  # ample lanes: only the bad keys drop
+    packed = np.asarray(routed.lanes.op) != OP_NOP
+    assert packed.sum() == T * Q - 3
+
+    # starve the lanes: key 0 all lands in one lane of chain 0 -> capacity
+    # drops must be counted too
+    tight = route_stream(cl, stream, queries_per_node=2)
+    live_packed = (np.asarray(tight.lanes.op) != OP_NOP).sum()
+    assert int(tight.dropped) == T * Q - live_packed
+    assert int(tight.dropped) > int(tight.out_of_range)
 
 
 # ---------------------------------------------------------------------------
