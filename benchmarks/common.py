@@ -129,6 +129,42 @@ class BenchRow:
     name: str
     us_per_call: float
     derived: str
+    # structured values for the machine-readable BENCH_<name>.json records
+    # (throughput, latency, packets-per-reply, ... - whatever the figure
+    # measures); the CSV keeps only the human-readable `derived` string.
+    data: dict = dataclasses.field(default_factory=dict)
 
     def csv(self) -> str:
         return f"{self.name},{self.us_per_call:.3f},{self.derived}"
+
+
+def write_bench_json(name: str, rows: list["BenchRow"],
+                     out_dir: str = ".") -> str:
+    """Persist one benchmark's rows as ``BENCH_<name>.json`` so the perf
+    trajectory is recorded run over run (nightly CI uploads these as
+    artifacts).  Returns the path written."""
+    import json
+    import os
+    import platform
+    import time
+
+    import jax as _jax
+
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    payload = {
+        "benchmark": name,
+        "generated_at": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "host": {
+            "platform": platform.platform(),
+            "jax": _jax.__version__,
+            "backend": _jax.default_backend(),
+        },
+        "model_constants": {
+            "t_op_us": T_OP_US, "t_byte_us": T_BYTE_US, "t_hop_us": T_HOP_US,
+        },
+        "rows": [dataclasses.asdict(r) for r in rows],
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path

@@ -12,7 +12,12 @@ recompile, no state reset), so the cluster keeps serving throughout:
 * phase 1 (client redirection): after ``FailureDetector.timeout_ticks``
   unanswered ticks the clients re-target live nodes via
   ``FailoverPolicy.redirect`` - throughput recovers to ~baseline on n-1
-  nodes (CRAQ: any live node serves clean reads).
+  nodes (CRAQ: any live node serves clean reads).  Two detection modes:
+  ``heartbeat`` (emulated liveness pings, the original benchmark) and
+  ``reply_timeout`` (clients derive liveness from their own queries - the
+  ReplyLog's t_inject/t_done sides via ``note_sent``/``note_reply`` - and
+  redirect when a node sits on a query past the timeout while answering
+  nothing else; no out-of-band signal at all).
 * phase 2 (CP recovery): ``begin_recovery`` freezes writes (client writes
   NACK during the copy window), the CP copies KV pairs from the CRAQ
   source, ``complete_recovery`` splices the replacement back in and
@@ -67,7 +72,9 @@ def _redirect(inj: Msg, chain: int, dead: int, target: int, q: int,
 def run(C: int = 4, n_nodes: int = 4, q: int = 8, ticks: int = 48,
         fail_tick: int = 12, freeze_tick: int = 28, recover_tick: int = 32,
         fail_chain: int = 0, fail_node: int = 1, timeout_ticks: int = 3,
-        write_fraction: float = 0.1, seed: int = 0) -> list[BenchRow]:
+        write_fraction: float = 0.1, seed: int = 0,
+        detection: str = "heartbeat") -> list[BenchRow]:
+    assert detection in ("heartbeat", "reply_timeout")
     cluster = ClusterConfig(
         chain=ChainConfig(n_nodes=n_nodes, num_keys=64, num_versions=6),
         n_chains=C,
@@ -90,6 +97,7 @@ def run(C: int = 4, n_nodes: int = 4, q: int = 8, ticks: int = 48,
         dead_pos = co.chains[fail_chain].position_of(fail_node)
         per_tick = []
         prev = np.zeros(C, np.int64)
+        prev_cursor = 0
         redirecting = False
         for t in range(ticks):
             inj = jax.tree.map(lambda x: x[t], sched)
@@ -102,7 +110,8 @@ def run(C: int = 4, n_nodes: int = 4, q: int = 8, ticks: int = 48,
                     state = co.install_roles(state)
                 if t == recover_tick:
                     m, stores = co.complete_recovery(
-                        fail_chain, fail_node, dead_pos, state.stores)
+                        fail_chain, fail_node, dead_pos, state.stores,
+                        locks=state.locks)
                     state = co.install_roles(state._replace(stores=stores))
                     redirecting = False  # clients see the node respond again
                 if redirecting and t < recover_tick:
@@ -111,14 +120,34 @@ def run(C: int = 4, n_nodes: int = 4, q: int = 8, ticks: int = 48,
                         client=fail_node, key=t)
                     inj = _redirect(inj, fail_chain, fail_node, target, q,
                                     cluster.chain.value_words)
-                # clients' responsiveness tracking: every serving node
-                # answers this tick; a dead one stays silent
                 det.tick()
-                for i in co.chains[fail_chain].node_ids:
-                    det.heard_from(i)
-                if fail_tick <= t < recover_tick and det.suspected():
+                if detection == "heartbeat":
+                    # emulated liveness pings: every serving node answers
+                    # this tick; a dead one stays silent
+                    for i in co.chains[fail_chain].node_ids:
+                        det.heard_from(i)
+                    tripped = det.suspected()
+                else:
+                    # clients track their OWN queries (ReplyLog t_inject
+                    # side): note what this tick's injection targets...
+                    lane_op = np.asarray(inj.op[fail_chain])
+                    lane_qid = np.asarray(inj.qid[fail_chain])
+                    for node in range(n_nodes):
+                        live_q = lane_qid[node][lane_op[node] != OP_NOP]
+                        for qq in live_q:
+                            det.note_sent(node, int(qq))
+                    tripped = det.overdue()
+                if fail_tick <= t < recover_tick and tripped:
                     redirecting = True
             state = sim.tick(state, inj)
+            if disturb and detection == "reply_timeout":
+                # ...and observe replies landing (the t_done side)
+                cur_c = int(np.asarray(state.replies.cursor)[fail_chain])
+                new_qids = np.asarray(
+                    state.replies.qid)[fail_chain, prev_cursor:cur_c]
+                for qq in new_qids:
+                    det.note_reply(int(qq))
+                prev_cursor = cur_c
             cur = np.asarray(
                 jax.device_get(state.metrics.replies), np.int64)
             per_tick.append(cur - prev)
@@ -181,16 +210,17 @@ def run(C: int = 4, n_nodes: int = 4, q: int = 8, ticks: int = 48,
         np.testing.assert_array_equal(tput_fail[:, c], tput_base[:, c])
 
     m = state_fail.metrics.asdict()
+    tag = "" if detection == "heartbeat" else f"[{detection}]"
     rows = [
         BenchRow(
-            name="failover/throughput",
+            name=f"failover{tag}/throughput",
             us_per_call=0.0,
             derived=(f"baseline={baseline:.1f}rps;dip={dip:.1f};"
                      f"degraded={degraded:.1f};recovered={recovered:.1f};"
                      f"recovered_frac={recovered / recovered_ref:.2f}"),
         ),
         BenchRow(
-            name="failover/continuity",
+            name=f"failover{tag}/continuity",
             us_per_call=0.0,
             derived=(f"recompiles={recompiles};"
                      f"siblings_bit_identical={len(siblings)}/{C - 1};"
@@ -201,5 +231,5 @@ def run(C: int = 4, n_nodes: int = 4, q: int = 8, ticks: int = 48,
 
 
 if __name__ == "__main__":
-    for r in run():
+    for r in run() + run(detection="reply_timeout"):
         print(r.csv())

@@ -1,0 +1,159 @@
+"""Cross-chain transaction sweep - the coordination-service use case.
+
+Sweeps keys-per-txn in {1, 2, 4, 8} x cross-chain fraction in {0, 0.5, 1}
+over a C=4 cluster and reports commit throughput, abort rate and packets
+per committed sub-write.  Three properties are asserted (the acceptance
+criteria for the transaction subsystem):
+
+* **no 2PC tax when coordination is local**: with cross-chain fraction 0
+  every transaction takes the planner's direct path, and packets per
+  committed sub-write equals the plain-write baseline *exactly* - the
+  paper's traffic-reduction argument applied to multi-key operations whose
+  keys co-reside;
+* **atomic cross-chain commits**: after every config the final stores
+  equal the host-side serial reference executor replaying the committed
+  subset in observed precedence order (unique per-(txn, key) values make a
+  partial application visible), and cross-chain configs actually commit
+  2PC transactions (no vacuous pass);
+* **zero recompiles**: the whole sweep re-runs one jitted executable -
+  txn opcodes ride the same branch-free tick as reads/writes.
+"""
+from __future__ import annotations
+
+from benchmarks.common import BenchRow
+from repro.core import (ChainConfig, ChainSim, ClusterConfig, Txn, TxnDriver,
+                        TxnPlanner, TxnWorkloadConfig, committed_view,
+                        locks_all_free, make_txn_workload, reference_execute,
+                        serial_order)
+def _drain(sim, state, ticks):
+    empty = sim.empty_injection()
+    for _ in range(ticks):
+        state = sim.tick(state, empty)
+    return state
+
+
+def _run_config(sim, cluster, txns, waves):
+    """Run ``txns`` in ``waves`` equal batches on a fresh state; returns
+    (results, metrics dict, ticks consumed)."""
+    state = sim.init_state()
+    drv = TxnDriver(sim, TxnPlanner(cluster))
+    per_wave = (len(txns) + waves - 1) // waves
+    results = []
+    for w in range(waves):
+        wave = txns[w * per_wave:(w + 1) * per_wave]
+        if wave:
+            state, res = drv.run(state, wave)
+            results += res
+    state = _drain(sim, state, 4 * sim.n)
+    assert locks_all_free(state.locks), "a transaction leaked a lock"
+    assert int(state.stores.pending.sum()) == 0
+
+    # serial-reference atomicity check: replay the committed subset in
+    # observed write-precedence order; every register must match.
+    by_id = {t.txn_id: t for t in txns}
+    committed_ids = {r.txn_id for r in results if r.committed}
+    order = serial_order(results)
+    tail = [t for t in sorted(committed_ids) if t not in set(order)]
+    expected = reference_execute([by_id[t] for t in order + tail])
+    view = committed_view(cluster, state)
+    for gk in range(cluster.num_global_keys):
+        assert view[gk] == expected.get(gk, 0), (
+            f"non-atomic outcome at key {gk}: store={view[gk]} "
+            f"reference={expected.get(gk, 0)}"
+        )
+    return results, state.metrics.asdict(), int(state.t)
+
+
+def run(C: int = 4, n_nodes: int = 4, num_keys: int = 64, versions: int = 8,
+        q: int = 24, txns_per_wave: int = 6, waves: int = 4,
+        seed: int = 0) -> list[BenchRow]:
+    cluster = ClusterConfig(
+        chain=ChainConfig(n_nodes=n_nodes, num_keys=num_keys,
+                          num_versions=versions),
+        n_chains=C,
+    )
+    sim = ChainSim(cluster, inject_capacity=q, route_capacity=max(256, 8 * q),
+                   reply_capacity=8192)
+    n_txns = waves * txns_per_wave
+    rows: list[BenchRow] = []
+
+    # ---- plain-write baseline (also the jit warmup): 1-key direct txns
+    # are plain writes by construction, giving the reference packet cost.
+    base_txns = [Txn(txn_id=1000 + i, writes=((i * C % (C * num_keys),
+                                               70000 + i),))
+                 for i in range(n_txns)]
+    base_res, base_m, _ = _run_config(sim, cluster, base_txns, waves)
+    assert all(r.committed and r.mode == "direct" for r in base_res)
+    ppr_write = base_m["packets"] / base_m["replies"]
+    rows.append(BenchRow(
+        name="txn/write_baseline",
+        us_per_call=0.0,
+        derived=f"packets_per_write={ppr_write:.2f}",
+        data={"packets_per_write": ppr_write},
+    ))
+    warm = ChainSim.tick._cache_size()
+
+    for kpt in (1, 2, 4, 8):
+        for cross in (0.0, 0.5, 1.0):
+            txns = make_txn_workload(cluster, TxnWorkloadConfig(
+                n_txns=n_txns, keys_per_txn=kpt, cross_chain_fraction=cross,
+                seed=seed + kpt * 10 + int(cross * 2),
+                txn_id_base=1,
+            ))
+            results, m, ticks = _run_config(sim, cluster, txns, waves)
+            commits = sum(r.committed for r in results)
+            aborts = len(results) - commits
+            n_2pc = sum(r.committed and r.mode == "2pc" for r in results)
+            committed_writes = sum(
+                len(r.write_seqs) for r in results if r.committed)
+            ppr = m["packets"] / max(committed_writes, 1)
+            tput = commits / ticks
+            abort_rate = aborts / len(results)
+            name = f"txn/k{kpt}_cross{cross:g}"
+            rows.append(BenchRow(
+                name=name,
+                us_per_call=0.0,
+                derived=(f"commit_tput={tput:.3f}txn/tick;"
+                         f"abort_rate={abort_rate:.2f};"
+                         f"pkts_per_committed_write={ppr:.2f};"
+                         f"2pc_commits={n_2pc}"),
+                data={"keys_per_txn": kpt, "cross_chain_fraction": cross,
+                      "commits": commits, "aborts": aborts,
+                      "committed_2pc": n_2pc, "ticks": ticks,
+                      "commit_throughput_per_tick": tput,
+                      "abort_rate": abort_rate,
+                      "packets_per_committed_write": ppr,
+                      "lock_conflicts": m["lock_conflicts"],
+                      "txn_commits": m["txn_commits"],
+                      "txn_aborts": m["txn_aborts"]},
+            ))
+            if cross == 0.0:
+                # single-chain transactions must cost exactly plain writes:
+                # no prepare round, no extra packets, nothing 2PC at all
+                assert aborts == 0 and commits == len(results)
+                assert m["txn_commits"] == 0 and m["lock_conflicts"] == 0
+                # exact rational equality: packets/write == baseline ratio
+                assert (m["packets"] * base_m["replies"]
+                        == base_m["packets"] * committed_writes), (
+                    f"k={kpt}: local txns cost {ppr} pkts/write vs "
+                    f"plain {ppr_write}"
+                )
+            if cross == 1.0 and kpt > 1:
+                assert n_2pc > 0, "cross-chain config committed nothing"
+
+    recompiles = ChainSim.tick._cache_size() - warm
+    assert recompiles == 0, (
+        f"the transaction sweep recompiled the data path {recompiles}x"
+    )
+    rows.append(BenchRow(
+        name="txn/continuity",
+        us_per_call=0.0,
+        derived=f"recompiles={recompiles};configs=12",
+        data={"recompiles": recompiles, "configs": 12},
+    ))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

@@ -7,7 +7,9 @@ Public surface:
   netchain   - NetChain/Chain-Replication baseline
   chain      - ChainSim (exact-accounting simulator) / ChainDist (shard_map)
   coordinator- control plane: roles, membership, two-phase failure recovery
-  workload   - paper-evaluation workload generators
+  txn        - cross-chain multi-key transactions (in-network 2PC over the
+               partition map: lock table, planner, driver, reference oracle)
+  workload   - paper-evaluation workload generators (incl. transactional)
   metrics    - packet/hop/byte accounting and reply latency log
 """
 from repro.core.types import (  # noqa: F401
@@ -17,9 +19,15 @@ from repro.core.types import (  # noqa: F401
     Msg,
     Roles,
     OP_ACK,
+    OP_ABORT,
+    OP_COMMIT,
     OP_NOP,
+    OP_PREPARE,
+    OP_PREPARE_ACK,
+    OP_PREPARE_NACK,
     OP_READ,
     OP_READ_REPLY,
+    OP_TXN_REPLY,
     OP_WRITE,
     OP_WRITE_NACK,
     OP_WRITE_REPLY,
@@ -28,6 +36,7 @@ from repro.core.types import (  # noqa: F401
     NOWHERE,
     TO_CLIENT,
     NETCRAQ_HEADER_BYTES,
+    is_txn_op,
     netchain_header_bytes,
 )
 from repro.core.store import Store, init_store  # noqa: F401
@@ -35,9 +44,22 @@ from repro.core.chain import ChainDist, ChainSim, SimState, full_roles_table  # 
 from repro.core.coordinator import ChainMembership, Coordinator, FailoverPolicy  # noqa: F401
 from repro.core.failure import FailureDetector, HedgedReadPolicy  # noqa: F401
 from repro.core.metrics import Metrics, ReplyLog  # noqa: F401
+from repro.core.txn import (  # noqa: F401
+    LockTable,
+    Txn,
+    TxnDriver,
+    TxnPlanner,
+    TxnResult,
+    committed_view,
+    locks_all_free,
+    reference_execute,
+    serial_order,
+)
 from repro.core.workload import (  # noqa: F401
     RoutedStream,
+    TxnWorkloadConfig,
     WorkloadConfig,
     make_schedule,
+    make_txn_workload,
     route_stream,
 )

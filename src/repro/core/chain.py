@@ -43,6 +43,26 @@ forwarding follows ``next_pos``/``prev_pos`` along the *live* chain; hop
 accounting uses live-chain positions (``chain_pos``), so a spliced-out
 node is not a link traversal; while ``frozen`` is set, client writes are
 NACKed at the entry node (``OP_WRITE_NACK``, counted in ``write_nacks``).
+
+Lock-table rules (the transaction extension of the same contract)
+-----------------------------------------------------------------
+``SimState.locks`` is a per-chain ``LockTable`` ([C, K] leaves).  Unlike
+the role table it is **data-plane-owned**: only the head's transaction
+stage (``txn.head_txn_stage``, running inside the jitted tick) may write
+it - a PREPARE acquires, COMMIT/ABORT release, nothing else touches it.
+The CP never edits lock words directly; its one interaction is the freeze
+flag: while ``frozen`` is set the stage NACKs every new PREPARE (frozen
+writes must NACK prepares too - otherwise a lock granted during the copy
+window would admit a commit write behind the CP's back), while COMMIT/
+ABORT of *already-held* locks still proceed, since they only complete
+transactions admitted before the freeze.  Consequently recovery must
+treat the lock table like in-flight writes: after ``begin_recovery`` the
+CP waits until the chain's locks drain (``txn.locks_all_free`` - bounded,
+because no new lock can be granted) before copying KV pairs, and the
+recovery copy path copies *stores only* - lock words never move between
+nodes because they live per chain, not per node.  In-flight PREPAREs at
+the moment of a freeze are therefore either granted before the freeze
+(their txn completes normally) or NACKed by it; there is no third state.
 """
 from __future__ import annotations
 
@@ -54,15 +74,20 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core import craq, netchain, store as store_lib
+from repro.core import txn as txn_lib
 from repro.core.metrics import Metrics, ReplyLog
 from repro.core.store import Store
+from repro.core.txn import LockTable
 from repro.core.types import (
     MULTICAST,
     OP_READ_REPLY,
     NOWHERE,
     OP_ACK,
     OP_NOP,
+    OP_PREPARE_ACK,
+    OP_PREPARE_NACK,
     OP_READ,
+    OP_TXN_REPLY,
     OP_WRITE,
     OP_WRITE_NACK,
     TO_CLIENT,
@@ -83,6 +108,8 @@ NODE_STEPS: dict[str, Callable] = {
 class SimState(NamedTuple):
     stores: Store        # leading [C, n] axes
     inbox: Msg           # [C, n, cap]
+    locks: LockTable     # [C, K] per-chain lock/intent registers (DP-owned;
+                         #     see the lock-table rules in the docstring)
     metrics: Metrics     # [C] per-chain counters (Metrics.total() reduces)
     replies: ReplyLog    # [C, R]
     roles: Roles         # [C, n] live membership/role table (CP-owned; see
@@ -147,22 +174,38 @@ class ChainSim:
         return SimState(
             stores=stores,
             inbox=inbox,
+            locks=jax.vmap(lambda _: txn_lib.init_locks(self.cfg))(
+                jnp.arange(self.C)
+            ),
             metrics=metrics,
             replies=replies,
             roles=full_roles_table(self.n, self.C),
             t=jnp.zeros((), jnp.int32),
         )
 
-    # -- one tick of ONE chain (vmapped over the chain axis) ---------------
-    def _chain_tick(self, stores, inbox, metrics, replies, injected, roles, t):
-        """stores [n,...], inbox [n,c_route], injected [n,c_in],
-        roles [n]-leaf Roles table, t [].
+    def empty_injection(self) -> Msg:
+        """All-NOP [C, n, c_in] injection with this engine's value width -
+        the canonical drain tick (and the template for spare-lane edits)."""
+        return jax.tree.map(
+            lambda x: jnp.tile(
+                x[None, None], (self.C, self.n) + (1,) * x.ndim
+            ),
+            Msg.empty(self.c_in, self.cfg.value_words),
+        )
 
-        Returns (stores', inbox', metrics', replies').  The routing fabric
-        is local to the chain: unicast/multicast destinations are chain
-        positions, so nothing ever crosses into another chain's state.
-        Membership is read from ``roles`` - dead slots are masked out of
-        injection, processing, delivery and hop accounting.
+    # -- one tick of ONE chain (vmapped over the chain axis) ---------------
+    def _chain_tick(self, stores, inbox, locks, metrics, replies, injected,
+                    roles, t):
+        """stores [n,...], inbox [n,c_route], locks [K]-leaf LockTable,
+        injected [n,c_in], roles [n]-leaf Roles table, t [].
+
+        Returns (stores', inbox', locks', metrics', replies').  The routing
+        fabric is local to the chain: unicast/multicast destinations are
+        chain positions, so nothing ever crosses into another chain's
+        state.  Membership is read from ``roles`` - dead slots are masked
+        out of injection, processing, delivery and hop accounting.  Client
+        transaction ops are resolved by the head's lock stage before the
+        node step sees the batch (see txn.head_txn_stage).
         """
         n, cfg = self.n, self.cfg
         alive = roles.alive          # [n] bool
@@ -194,11 +237,26 @@ class ChainSim:
         full_inbox = jax.tree.map(
             lambda a, b: jnp.concatenate([a, b], axis=1), injected, inbox
         )
+        # Pipeline passes are counted on arrival (pre-stage): a PREPARE
+        # resolved by the lock stage is one match-action pass like any
+        # other query.
+        live_in = full_inbox.op != OP_NOP
+
+        # Transaction stage at the live head: PREPARE/ABORT are consumed
+        # (lock edits + ACK/NACK replies), validated COMMITs pass through
+        # to the node step as write-like ops.
+        new_locks, full_inbox, txn_out, txn_counts = txn_lib.head_txn_stage(
+            locks, roles, stores, full_inbox
+        )
 
         # Process: vmapped match-action pipeline pass on every node.
         new_stores, outbox = jax.vmap(
             functools.partial(self.node_step, cfg)
         )(stores, roles, full_inbox)
+        # The lock stage's replies join the node outboxes on the fabric.
+        outbox = jax.tree.map(
+            lambda a, b: jnp.concatenate([a, b], axis=1), outbox, txn_out
+        )
         # A dead node emits nothing (its inbox is already empty; this pins
         # the invariant even if a node_step ever emitted unsolicited).
         outbox = jax.vmap(Msg.mask)(
@@ -275,9 +333,17 @@ class ChainSim:
         # ---------------- exits -> reply log ----------------
         exits = flat.mask(is_exit)
         is_nack = exits.op == OP_WRITE_NACK
+        # 2PC control exits (phase-1 ACKs, prepare NACKs, abort acks) are
+        # logged for the planner but excluded from the `replies` throughput
+        # counter: only completed client operations count, and a committed
+        # transaction's completion is its tail OP_TXN_REPLY (seq >= 0).
+        is_ctrl = (
+            (exits.op == OP_PREPARE_ACK)
+            | (exits.op == OP_PREPARE_NACK)
+            | ((exits.op == OP_TXN_REPLY) & (exits.seq < 0))
+        )
         new_replies = replies.append(exits, t + 1)
 
-        live_in = full_inbox.op != OP_NOP
         new_metrics = Metrics(
             packets=metrics.packets + packets,
             msgs=metrics.msgs + msgs,
@@ -288,7 +354,8 @@ class ChainSim:
             writes_in=metrics.writes_in
             + jnp.sum(injected.op == OP_WRITE),
             acks=metrics.acks + jnp.sum(flat.op == OP_ACK),
-            replies=metrics.replies + (exits.live() & ~is_nack).sum(),
+            replies=metrics.replies
+            + (exits.live() & ~is_nack & ~is_ctrl).sum(),
             dirty_appends=metrics.dirty_appends
             + (new_stores.pending.sum() - stores.pending.sum()).clip(0),
             fwd_reads=metrics.fwd_reads
@@ -297,9 +364,12 @@ class ChainSim:
             relay_procs=metrics.relay_procs
             + jnp.sum(live_in & (full_inbox.op == OP_READ_REPLY)),
             write_nacks=metrics.write_nacks + is_nack.sum(),
+            txn_commits=metrics.txn_commits + txn_counts[0],
+            txn_aborts=metrics.txn_aborts + txn_counts[1],
+            lock_conflicts=metrics.lock_conflicts + txn_counts[2],
         )
 
-        return new_stores, routed, new_metrics, new_replies
+        return new_stores, routed, new_locks, new_metrics, new_replies
 
     def _lift(self, injected: Msg) -> Msg:
         """Accept legacy single-chain [n, q] injections when C == 1."""
@@ -319,13 +389,14 @@ class ChainSim:
         Membership is read from ``state.roles`` (a traced leaf): the CP may
         swap the table between ticks without triggering a recompile."""
         injected = self._lift(injected)
-        stores, inbox, metrics, replies = jax.vmap(
-            self._chain_tick, in_axes=(0, 0, 0, 0, 0, 0, None)
-        )(state.stores, state.inbox, state.metrics, state.replies,
-          injected, state.roles, state.t)
+        stores, inbox, locks, metrics, replies = jax.vmap(
+            self._chain_tick, in_axes=(0, 0, 0, 0, 0, 0, 0, None)
+        )(state.stores, state.inbox, state.locks, state.metrics,
+          state.replies, injected, state.roles, state.t)
         return SimState(
             stores=stores,
             inbox=inbox,
+            locks=locks,
             metrics=metrics,
             replies=replies,
             roles=state.roles,
@@ -376,6 +447,12 @@ class ChainDist:
     Both collectives name only the position ``axis``, so when the mesh has
     a ``group_axis`` they are automatically scoped per chain group: chains
     exchange nothing with each other, matching the disjoint key partition.
+
+    ``ChainDist`` does not carry a lock table yet: cross-chain transactions
+    (core/txn.py) are a ``ChainSim`` subsystem until the dry-run grows a
+    per-chain lock shard (client txn opcodes reaching this engine are
+    processed write-like without admission control - route transactional
+    traffic through the simulator engine for now).
     """
 
     def __init__(

@@ -112,6 +112,7 @@ class Coordinator:
             for _ in range(self.cluster.n_chains)
         ]
         self._recovery_log: list[dict] = []
+        self._txn_planner = None
 
     # -- key partitioning ---------------------------------------------------
     # The ClusterConfig partition map is the source of truth; the data plane
@@ -121,6 +122,33 @@ class Coordinator:
 
     def local_key(self, key: int) -> int:
         return int(self.cluster.local_key(key))
+
+    # -- cross-chain transactions (in-network 2PC, core/txn.py) --------------
+    @property
+    def txn_planner(self):
+        """The coordinator's multi-key transaction planner: splits txns
+        into per-chain sub-ops over the same partition map and drives the
+        two phases (single-chain txns bypass 2PC entirely)."""
+        if self._txn_planner is None:
+            from repro.core.txn import TxnPlanner
+
+            self._txn_planner = TxnPlanner(self.cluster)
+        return self._txn_planner
+
+    @staticmethod
+    def locks_drained(state, chain_idx: Optional[int] = None) -> bool:
+        """True when no transaction holds a lock (on ``chain_idx`` or
+        anywhere).  Recovery rule: after ``begin_recovery`` the CP must
+        wait for this before copying KV pairs - new PREPAREs NACK while
+        frozen, so the table drains in bounded time (see the lock-table
+        rules in core/chain.py; ``complete_recovery`` asserts it when
+        handed the lock table)."""
+        from repro.core.txn import locks_all_free
+
+        locks = state.locks
+        if chain_idx is not None:
+            locks = jax.tree.map(lambda x: x[chain_idx], locks)
+        return locks_all_free(locks)
 
     # -- data-plane role table (the DP's forwarding state) -------------------
     def roles_table(self) -> Roles:
@@ -179,7 +207,10 @@ class Coordinator:
 
         ``install_roles(state)`` after this publishes the frozen flag, so
         the running data plane NACKs client writes (``OP_WRITE_NACK``)
-        while the CP copies KV pairs.  Reads keep serving throughout.
+        and new transaction PREPAREs (``OP_PREPARE_NACK``) while the CP
+        copies KV pairs.  Reads keep serving throughout.  Before copying,
+        wait for in-flight transactions to release their locks
+        (``locks_drained`` - bounded, since no new lock can be granted).
         """
         m = self.chains[chain_idx]
         m.writes_frozen = True
@@ -192,6 +223,7 @@ class Coordinator:
         position: int,
         stores: Store,
         source_store_index: Optional[int] = None,
+        locks=None,
     ) -> tuple[ChainMembership, Store]:
         """Close the copy window: copy KV pairs from the live source onto
         the replacement, splice it into the forwarding tables and the
@@ -202,8 +234,22 @@ class Coordinator:
         the latter case only ``chain_idx``'s slice is rewritten (the other
         chains keep serving untouched).  The copy is a host-level operation
         (the CP owns it).
+
+        Under transactional traffic, pass the running ``state.locks`` as
+        ``locks``: the copy is refused while the chain still holds a lock
+        (an admitted COMMIT could be draining mid-chain, and a copy taken
+        now would miss its write).  The freeze NACKs new PREPAREs, so
+        ticking the engine drains the table in bounded time.
         """
         m = self.chains[chain_idx]
+        if locks is not None:
+            holder = np.asarray(locks.holder)[chain_idx]
+            assert (holder == -1).all(), (
+                f"chain {chain_idx} still holds txn locks "
+                f"{[int(h) for h in holder if h != -1]}; tick the engine "
+                "until locks_drained before copying (lock-table rules, "
+                "core/chain.py)"
+            )
         try:
             src = (
                 source_store_index

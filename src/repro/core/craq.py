@@ -13,6 +13,10 @@ batch equivalent of the match-action control logic:
              while the chain's writes are frozen (recovery copy window)
              client writes are NACKed at the entry node instead
     ACK   -> commit: install clean value, compact versions <= acked seq
+    COMMIT-> a txn phase-2 write admitted by the head's lock stage
+             (core/txn.py): identical to WRITE except it keeps its opcode
+             down the chain and the tail acknowledges with OP_TXN_REPLY;
+             exempt from the freeze NACK (admission was at PREPARE)
 
 Batch serialization order within one step: READs observe the state at step
 start, then ACKs apply, then WRITEs (DESIGN.md §3).  The sequential oracle
@@ -29,8 +33,10 @@ from repro.core.types import (
     MULTICAST,
     NOWHERE,
     OP_ACK,
+    OP_COMMIT,
     OP_READ,
     OP_READ_REPLY,
+    OP_TXN_REPLY,
     OP_WRITE,
     OP_WRITE_NACK,
     OP_WRITE_REPLY,
@@ -52,13 +58,18 @@ def node_step(cfg: ChainConfig, store: Store, roles: Roles, inbox: Msg):
     is_read = inbox.op == OP_READ
     is_write = inbox.op == OP_WRITE
     is_ack = inbox.op == OP_ACK
+    # Txn phase-2 write admitted by the head's lock stage: rides the chain
+    # exactly like a plain write but keeps its opcode so the tail can
+    # acknowledge with OP_TXN_REPLY.  Never frozen-NACKed - admission
+    # happened at PREPARE time (the freeze stops new PREPAREs instead).
+    is_commit = inbox.op == OP_COMMIT
     is_tail = roles.is_tail
 
     # Write freeze (recovery phase 2 copy window): client writes entering
     # the chain are NACKed; in-flight writes (already sequenced) drain
     # normally so the pre-freeze prefix commits before the CP copies.
     nacked = is_write & (inbox.seq < 0) & roles.frozen
-    is_write = is_write & ~nacked
+    is_write = (is_write & ~nacked) | is_commit
 
     # ---------------- READ path (observes pre-step state) ----------------
     clean = store_lib.is_clean(store, inbox.key)
@@ -114,7 +125,8 @@ def node_step(cfg: ChainConfig, store: Store, roles: Roles, inbox: Msg):
         roles.next_pos,                       # writes propagate along the
     )                                         # live chain (skips dead slots)
     forwards = Msg(
-        op=jnp.where(fwd_read, OP_READ, OP_WRITE),
+        op=jnp.where(fwd_read, OP_READ,
+                     jnp.where(is_commit, OP_COMMIT, OP_WRITE)),
         key=inbox.key,
         value=inbox.value,
         seq=wseq,
@@ -143,11 +155,14 @@ def node_step(cfg: ChainConfig, store: Store, roles: Roles, inbox: Msg):
         extra=inbox.extra,
     ).mask(ack_mask)
     # Write replies share a section with freeze NACKs (disjoint masks: a
-    # NACKed write never reaches the tail-commit path).
+    # NACKed write never reaches the tail-commit path).  Txn commit writes
+    # are acknowledged as OP_TXN_REPLY so the planner can tell them apart.
     wr_mask = ack_mask | nacked
     wreplies = Msg(
         op=jnp.where(nacked, OP_WRITE_NACK,
-                     jnp.where(ack_mask, OP_WRITE_REPLY, 0)),
+                     jnp.where(ack_mask,
+                               jnp.where(is_commit, OP_TXN_REPLY,
+                                         OP_WRITE_REPLY), 0)),
         key=inbox.key,
         value=inbox.value,
         seq=jnp.where(nacked, -1, wseq),

@@ -30,6 +30,11 @@ class FailureDetector:
     n_nodes: int
     timeout_ticks: int = 8
     _last_seen: dict[int, int] = dataclasses.field(default_factory=dict)
+    # reply-timeout mode: outstanding queries the client has sent and not
+    # yet seen answered, qid -> (target node, tick sent)
+    _outstanding: dict[int, tuple[int, int]] = dataclasses.field(
+        default_factory=dict
+    )
     _now: int = 0
 
     def __post_init__(self):
@@ -42,6 +47,38 @@ class FailureDetector:
     def heard_from(self, node_id: int) -> None:
         self._last_seen[node_id] = self._now
 
+    # -- reply-timeout mode --------------------------------------------------
+    # Instead of emulated heartbeats, the client derives liveness from its
+    # own traffic: every query it issues is noted against its target node
+    # (the ReplyLog's t_inject side), every reply observed clears it (the
+    # t_done side) and refreshes the node's responsiveness.  ``overdue``
+    # then names nodes that sat on a query past the timeout while staying
+    # otherwise silent - exactly 'unresponsive for a certain amount of
+    # time' (paper §III.C), measured on real queries.
+    def note_sent(self, node_id: int, qid: int) -> None:
+        """Record a query issued to ``node_id`` (its ReplyLog t_inject)."""
+        self._outstanding[qid] = (node_id, self._now)
+
+    def note_reply(self, qid: int) -> None:
+        """A reply for ``qid`` appeared in the log (its t_done): the target
+        answered - clear the query and refresh the node."""
+        ent = self._outstanding.pop(qid, None)
+        if ent is not None:
+            self.heard_from(ent[0])
+
+    def overdue(self) -> list[int]:
+        """Nodes with a query unanswered past ``timeout_ticks`` and no
+        reply to *any* query within the window (a single dropped query on
+        an otherwise-responsive node is not a failure)."""
+        out = set()
+        for node, t0 in self._outstanding.values():
+            if self._now - t0 <= self.timeout_ticks:
+                continue
+            last = self._last_seen.get(node)
+            if last is None or self._now - last > self.timeout_ticks:
+                out.add(node)
+        return sorted(out)
+
     def track(self, node_id: int) -> None:
         """Start watching a node (a replacement spliced in by recovery may
         carry a fresh id never seen before); it gets a full timeout grace."""
@@ -49,8 +86,11 @@ class FailureDetector:
 
     def untrack(self, node_id: int) -> None:
         """Stop watching a node the CP removed - it must neither linger in
-        ``suspected()`` nor KeyError later probes."""
+        ``suspected()``/``overdue()`` nor KeyError later probes."""
         self._last_seen.pop(node_id, None)
+        self._outstanding = {
+            q: e for q, e in self._outstanding.items() if e[0] != node_id
+        }
 
     def calibrate(self, avg_response_ticks: float, slack: float = 4.0) -> None:
         self.timeout_ticks = max(1, int(avg_response_ticks * slack))

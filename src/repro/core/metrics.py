@@ -41,13 +41,18 @@ class Metrics(NamedTuple):
                               # not KVS pipeline work)
     write_nacks: jax.Array    # client writes rejected while writes_frozen
                               # (recovery copy window; excluded from replies)
+    txn_commits: jax.Array    # COMMIT sub-ops accepted at the head (lock
+                              # released, write admitted to the chain)
+    txn_aborts: jax.Array     # ABORT sub-ops that released a held lock
+    lock_conflicts: jax.Array # PREPAREs denied at the head (lock held by
+                              # another txn, frozen chain, or misdirection)
 
     @staticmethod
     def zeros() -> "Metrics":
         """Scalar counters for one chain (the engine vmaps these over the
         chain axis, yielding [C] leaves)."""
         z = jnp.zeros((), jnp.int32)
-        return Metrics(*([z] * 13))
+        return Metrics(*([z] * 16))
 
     def total(self) -> "Metrics":
         """Reduce per-chain [C] counters to cluster-wide scalars."""

@@ -22,8 +22,10 @@ from repro.core import store as store_lib
 from repro.core.store import Store
 from repro.core.types import (
     NOWHERE,
+    OP_COMMIT,
     OP_READ,
     OP_READ_REPLY,
+    OP_TXN_REPLY,
     OP_WRITE,
     OP_WRITE_NACK,
     OP_WRITE_REPLY,
@@ -46,11 +48,15 @@ def node_step(cfg: ChainConfig, store: Store, roles: Roles, inbox: Msg):
     is_read = inbox.op == OP_READ
     is_write = inbox.op == OP_WRITE
     is_reply = inbox.op == OP_READ_REPLY
+    # Txn phase-2 write (core/txn.py): write-like, keeps its opcode so the
+    # tail replies OP_TXN_REPLY; exempt from the freeze NACK (admission was
+    # at PREPARE - the freeze stops new PREPAREs instead).
+    is_commit = inbox.op == OP_COMMIT
     is_tail = roles.is_tail
 
     # Write freeze (recovery copy window): client writes NACK at the entry.
     nacked = is_write & (inbox.seq < 0) & roles.frozen
-    is_write = is_write & ~nacked
+    is_write = (is_write & ~nacked) | is_commit
 
     # ---------------- READ: only the tail replies ----------------
     v0, s0 = store_lib.read_clean(store, inbox.key)
@@ -100,7 +106,8 @@ def node_step(cfg: ChainConfig, store: Store, roles: Roles, inbox: Msg):
     )
     fwd_write = is_write & ~is_tail
     forwards = Msg(
-        op=jnp.where(fwd_write, OP_WRITE, 0),
+        op=jnp.where(fwd_write,
+                     jnp.where(is_commit, OP_COMMIT, OP_WRITE), 0),
         key=inbox.key,
         value=inbox.value,
         seq=wseq,
@@ -125,7 +132,9 @@ def node_step(cfg: ChainConfig, store: Store, roles: Roles, inbox: Msg):
     wr_mask = wack | nacked
     wreplies = Msg(
         op=jnp.where(nacked, OP_WRITE_NACK,
-                     jnp.where(wack, OP_WRITE_REPLY, 0)),
+                     jnp.where(wack,
+                               jnp.where(is_commit, OP_TXN_REPLY,
+                                         OP_WRITE_REPLY), 0)),
         key=inbox.key,
         value=inbox.value,
         seq=jnp.where(nacked, -1, wseq),

@@ -1,0 +1,555 @@
+"""Cross-chain multi-key transactions - vectorized in-network 2PC.
+
+The paper's headline use case is a *coordination service*, and coordination
+means atomic multi-key operations (NetChain exists precisely to serve
+locks/barriers that span keys).  This module adds that capability on top of
+the multi-chain partition map: a two-phase commit whose participant logic
+runs *in the data plane* (the head's match-action pass), with only the
+coordinator role (the ``TxnPlanner``) on the host - mirroring the paper's
+CP/DP split: per-query work never touches the control plane.
+
+Protocol
+--------
+Phase 1 (``OP_PREPARE``, one per key, addressed to the owning chain's head;
+the ``seq`` field carries the txn id):
+
+* lock free at the head  -> lock it (txn id + client stamped into the
+  ``LockTable``), reply ``OP_PREPARE_ACK`` carrying the head-latest value
+  (the snapshot read) and the key's txn-version counter in ``seq``;
+* lock held / chain frozen / misdirected -> reply ``OP_PREPARE_NACK``
+  (``seq == -1``), counted in ``Metrics.lock_conflicts``.
+
+Phase 2, decided by the planner once every participant answered:
+
+* all ACKed -> ``OP_COMMIT`` per written key: the head validates the lock,
+  releases it, bumps the version counter and admits the write into the
+  chain (it propagates exactly like a plain write; the tail acknowledges
+  the client with ``OP_TXN_REPLY`` carrying the stamped write seq).
+  Read-locked keys are released with ``OP_ABORT`` (release-without-apply).
+* any NACK -> ``OP_ABORT`` for every key that did ACK; the head releases
+  the lock and acknowledges with ``OP_TXN_REPLY`` (``seq == -1``).
+
+Because locks are acquired before any is released (strict two-phase
+locking: the planner's prepare round is the growing phase, the commit /
+abort round the shrinking phase), committed transactions are serializable
+- the property test in ``tests/test_txn.py`` checks exactly that against
+the host-side reference executor.
+
+Single-chain fast path
+----------------------
+When every key of a transaction lives on one chain the planner skips 2PC
+entirely and injects plain ``OP_WRITE``/``OP_READ`` queries in a single
+batch: the engine's tick-level batch serialization commits them atomically,
+so a local transaction costs **zero extra round trips and zero extra
+packets** over plain writes - the paper's traffic-reduction argument
+applied to coordination that happens to be partition-local.
+
+Scope and caveats
+-----------------
+* Locks order only *transactional* traffic: plain writes bypass the lock
+  table (they carry no txn id).  Workloads that need isolation against
+  non-transactional writers must route those writes as 1-key transactions.
+* The lock table is a per-chain ``SimState`` leaf served by ``ChainSim``;
+  ``ChainDist`` does not carry one yet (transactions are a simulator-level
+  subsystem until the dry-run grows a lock-table shard).
+* An admitted commit write still rides the version window: size
+  ``num_versions`` above the per-key in-flight write depth (lock
+  serialization bounds transactional depth at 1 per key; plain writes
+  sharing the key add theirs), or a window overflow can drop a committed
+  sub-write mid-chain after its lock released - the one path that breaks
+  atomicity, and the reason the driver asserts its capacity contract.
+* Recovery interop: a frozen chain NACKs PREPAREs (no new locks), while
+  COMMIT/ABORT of already-held locks proceed - they only complete admitted
+  transactions.  The CP waits for ``locks_all_free`` before copying (see
+  the live-membership contract in ``core/chain.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import store as store_lib
+from repro.core.types import (
+    CLIENT_BASE,
+    NOWHERE,
+    OP_ABORT,
+    OP_COMMIT,
+    OP_NOP,
+    OP_PREPARE,
+    OP_PREPARE_ACK,
+    OP_PREPARE_NACK,
+    OP_READ,
+    OP_READ_REPLY,
+    OP_TXN_REPLY,
+    OP_WRITE,
+    OP_WRITE_REPLY,
+    TO_CLIENT,
+    ChainConfig,
+    ClusterConfig,
+    Msg,
+    Roles,
+    as_cluster,
+)
+
+
+# ---------------------------------------------------------------------------
+# Lock / intent registers (a new per-chain SimState leaf)
+# ---------------------------------------------------------------------------
+class LockTable(NamedTuple):
+    """Per-chain lock/intent registers, keyed by local register index.
+
+    The data-plane analogue of a lock service's lock words: one row per
+    object register, living next to the object store and edited only by the
+    head's transaction stage (``head_txn_stage``).
+    """
+
+    holder: jax.Array   # [K] int32 txn id holding the key's lock (-1 free)
+    client: jax.Array   # [K] int32 client that owns the intent (-1 free)
+    version: jax.Array  # [K] int32 committed-txn counter - the snapshot
+                        #     coordinate PREPARE_ACK hands to multi-key reads
+
+    @staticmethod
+    def empty(num_keys: int) -> "LockTable":
+        neg = jnp.full((num_keys,), -1, jnp.int32)
+        return LockTable(
+            holder=neg, client=neg, version=jnp.zeros((num_keys,), jnp.int32)
+        )
+
+
+def init_locks(cfg: ChainConfig) -> LockTable:
+    return LockTable.empty(cfg.num_keys)
+
+
+def locks_all_free(locks: LockTable) -> bool:
+    """Host-side check the CP uses before a recovery copy: no in-flight
+    transaction holds a lock anywhere (works on [K] and [C, K] tables)."""
+    return bool((np.asarray(locks.holder) == -1).all())
+
+
+# ---------------------------------------------------------------------------
+# The head's transaction stage (runs inside _chain_tick, before node_step)
+# ---------------------------------------------------------------------------
+def head_txn_stage(locks: LockTable, roles: Roles, stores, inbox: Msg):
+    """Process this tick's client transaction ops at the chain's live head.
+
+    ``inbox`` is the chain's merged [n, cap] inbox (dead-masked, entry-
+    stamped).  Client-originated PREPARE/ABORT ops are consumed here;
+    validated COMMITs are passed through to the node step as write-like ops
+    (``seq`` rewritten to -1 so the head stamps a fresh write seq).  Batch
+    serialization order is *releases then acquires*: a lock freed by a
+    COMMIT/ABORT in this batch is grantable to a PREPARE in the same batch.
+
+    Returns ``(locks', inbox', txn_replies [n, cap], (commits, aborts,
+    conflicts))``.  ``txn_replies`` carry ``dst == TO_CLIENT`` and join the
+    node outboxes on the routing fabric, so the exits are packet-accounted
+    exactly like any other reply.
+    """
+    n, cap = inbox.op.shape
+    K = locks.holder.shape[0]
+    W = stores.values.shape[-1]
+    flat: Msg = jax.tree.map(
+        lambda x: x.reshape((n * cap,) + x.shape[2:]), inbox
+    )
+    node_of = jnp.repeat(jnp.arange(n, dtype=jnp.int32), cap)
+    head = roles.head_pos[0]
+    frozen = roles.frozen[0]
+
+    from_client = flat.src >= CLIENT_BASE
+    live = flat.op != OP_NOP
+    is_prep = live & from_client & (flat.op == OP_PREPARE)
+    is_com = live & from_client & (flat.op == OP_COMMIT)
+    is_abt = live & from_client & (flat.op == OP_ABORT)
+    is_txn = is_prep | is_com | is_abt
+    at_head = node_of == head
+    txn_id = flat.seq
+    key_ok = (flat.key >= 0) & (flat.key < K)
+    k = jnp.clip(flat.key, 0, K - 1)
+
+    # ---- release round: COMMIT/ABORT validated against current holders.
+    # At most one release per key per batch can be valid (a lock has one
+    # holder and txn ids are unique), so the scatters are race-free.
+    valid_rel = (
+        (is_com | is_abt) & at_head & key_ok & (txn_id >= 0)
+        & (locks.holder[k] == txn_id)
+    )
+    com_ok = is_com & valid_rel
+    abt_ok = is_abt & valid_rel
+    rel_key = jnp.where(valid_rel, k, K)
+    holder = locks.holder.at[rel_key].set(-1, mode="drop")
+    client = locks.client.at[rel_key].set(-1, mode="drop")
+    com_key = jnp.where(com_ok, k, K)
+    version = locks.version.at[com_key].add(1, mode="drop")
+
+    # ---- acquire round: PREPAREs against the post-release table; among
+    # same-key PREPAREs in one batch the first in stable order wins.  A
+    # frozen chain grants nothing (recovery copy window - new transactions
+    # must not take locks the CP would have to wait out).
+    want = is_prep & at_head & key_ok & (txn_id >= 0) & ~frozen
+    rank = store_lib.batch_rank(flat.key, want)
+    grant = want & (holder[k] == -1) & (rank == 0)
+    g_key = jnp.where(grant, k, K)
+    holder = holder.at[g_key].set(txn_id, mode="drop")
+    client = client.at[g_key].set(flat.client, mode="drop")
+    nack = is_prep & ~grant
+
+    # ---- snapshot read for PREPARE_ACK: the head's latest version,
+    # overlaid with any commit applied earlier in this batch's serial order
+    # (its write enters the store in this tick's node step, after us).
+    head_store = jax.tree.map(lambda x: x[head], stores)
+    v_latest, _ = store_lib.read_latest(head_store, k)
+    new_val = jnp.zeros((K, W), jnp.int32).at[com_key].set(
+        flat.value, mode="drop"
+    )
+    has_new = jnp.zeros((K,), bool).at[com_key].set(True, mode="drop")
+    snap_val = jnp.where(has_new[k][:, None], new_val[k], v_latest)
+
+    # ---- replies: ACK/NACK for prepares, TXN_REPLY(-1) for aborts and
+    # invalid releases.  Valid commits reply from the tail instead.
+    rel_bad = (is_com | is_abt) & ~valid_rel
+    abt_reply = abt_ok | rel_bad
+    reply_mask = grant | nack | abt_reply
+    reply_op = jnp.where(
+        grant, OP_PREPARE_ACK, jnp.where(nack, OP_PREPARE_NACK, OP_TXN_REPLY)
+    )
+    replies = Msg(
+        op=jnp.where(reply_mask, reply_op, OP_NOP),
+        key=flat.key,
+        value=jnp.where(grant[:, None], snap_val, 0),
+        seq=jnp.where(grant, version[k], -1),
+        src=node_of,
+        dst=jnp.where(reply_mask, TO_CLIENT, NOWHERE),
+        client=flat.client,
+        entry=flat.entry,
+        qid=flat.qid,
+        t_inject=flat.t_inject,
+        extra=flat.extra,
+    ).mask(reply_mask)
+
+    # ---- inbox edit: keep non-txn traffic plus validated commits (their
+    # seq reset to -1 so the node step stamps a fresh write sequence).
+    keep = ~is_txn | com_ok
+    passed = flat._replace(
+        seq=jnp.where(com_ok, jnp.asarray(-1, jnp.int32), flat.seq)
+    ).mask(keep)
+
+    lift = lambda m: jax.tree.map(
+        lambda x: x.reshape((n, cap) + x.shape[1:]), m
+    )
+    counts = (
+        com_ok.sum().astype(jnp.int32),
+        abt_ok.sum().astype(jnp.int32),
+        nack.sum().astype(jnp.int32),
+    )
+    return (
+        LockTable(holder=holder, client=client, version=version),
+        lift(passed),
+        lift(replies),
+        counts,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Host-side transaction description + planner (the 2PC coordinator role)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Txn:
+    """A multi-key transaction over *global* keys.
+
+    ``writes`` maps global key -> value (word 0 of the payload); ``reads``
+    are additionally snapshot-read keys.  Key sets must be disjoint within
+    one field and unique (a txn never touches a key twice).
+    """
+
+    txn_id: int
+    writes: tuple[tuple[int, int], ...] = ()
+    reads: tuple[int, ...] = ()
+    client: int = 0
+
+    @property
+    def keys(self) -> tuple[int, ...]:
+        return tuple(k for k, _ in self.writes) + tuple(self.reads)
+
+
+@dataclasses.dataclass
+class TxnResult:
+    txn_id: int
+    committed: bool
+    mode: str                      # "direct" (single-chain) | "2pc"
+    nacks: int = 0                 # prepare NACKs observed (2pc only)
+    write_seqs: dict = dataclasses.field(default_factory=dict)  # gkey -> seq
+    read_values: dict = dataclasses.field(default_factory=dict)  # gkey -> v0
+
+
+class TxnPlanner:
+    """Splits multi-key transactions into per-chain sub-ops via the
+    cluster's partition map and plans the two phases.
+
+    The planner is pure host-side metadata work (stream construction +
+    reply decoding); all per-query processing stays in the data plane.
+    Single-chain transactions take the fast path: plain reads/writes in one
+    batch, no PREPARE round (``is_single_chain``).
+    """
+
+    def __init__(self, cfg: ChainConfig | ClusterConfig, qid_base: int = 1 << 24):
+        self.cluster = as_cluster(cfg)
+        self._next_qid = qid_base
+
+    # -- partition-map splitting -------------------------------------------
+    def chains_of(self, txn: Txn) -> list[int]:
+        return sorted({int(self.cluster.key_to_chain(k)) for k in txn.keys})
+
+    def is_single_chain(self, txn: Txn) -> bool:
+        return len(self.chains_of(txn)) == 1
+
+    def _qids(self, m: int) -> list[int]:
+        out = list(range(self._next_qid, self._next_qid + m))
+        self._next_qid += m
+        return out
+
+    # -- stream construction ------------------------------------------------
+    def _stream(self, subs: list[tuple]) -> Msg:
+        """subs: (op, global_key, value0, seq, qid, client) -> [1, Q] Msg."""
+        Q = max(len(subs), 1)
+        W = self.cluster.chain.value_words
+        arr = lambda i, fill=0: np.full((Q,), fill, np.int32) if not subs else \
+            np.asarray([s[i] for s in subs] + [fill] * (Q - len(subs)), np.int32)
+        op = arr(0, OP_NOP)
+        value = np.zeros((Q, W), np.int32)
+        value[:, 0] = arr(2)
+        m = Msg(
+            op=jnp.asarray(op),
+            key=jnp.asarray(arr(1)),
+            value=jnp.asarray(value),
+            seq=jnp.asarray(arr(3, -1)),
+            src=jnp.asarray(CLIENT_BASE + arr(5)),
+            dst=jnp.full((Q,), NOWHERE, jnp.int32),
+            client=jnp.asarray(CLIENT_BASE + arr(5)),
+            entry=jnp.zeros((Q,), jnp.int32),
+            qid=jnp.asarray(arr(4, -1)),
+            t_inject=jnp.zeros((Q,), jnp.int32),
+            extra=jnp.zeros((Q,), jnp.int32),
+        )
+        return jax.tree.map(lambda x: x[None], m)  # [T=1, Q]
+
+    def phase1(self, txns: list[Txn]):
+        """Plan phase 1: PREPAREs for cross-chain txns, direct plain ops
+        for single-chain ones.  Returns (stream [1, Q] | None, plan)."""
+        subs, plan = [], {}
+        for t in txns:
+            mode = "direct" if self.is_single_chain(t) else "2pc"
+            entry = {"txn": t, "mode": mode, "p1": {}, "p2": {}}
+            if mode == "direct":
+                qids = self._qids(len(t.writes) + len(t.reads))
+                it = iter(qids)
+                for gk, v in t.writes:
+                    q = next(it)
+                    subs.append((OP_WRITE, gk, v, -1, q, t.client))
+                    entry["p1"][q] = ("w", gk)
+                for gk in t.reads:
+                    q = next(it)
+                    subs.append((OP_READ, gk, 0, -1, q, t.client))
+                    entry["p1"][q] = ("r", gk)
+            else:
+                qids = self._qids(len(t.keys))
+                for gk, q in zip(t.keys, qids):
+                    subs.append((OP_PREPARE, gk, 0, t.txn_id, q, t.client))
+                    entry["p1"][q] = ("p", gk)
+            plan[t.txn_id] = entry
+        return (self._stream(subs) if subs else None), plan
+
+    def phase2(self, plan: dict, seen: dict):
+        """Decide commit/abort per 2PC txn from phase-1 replies and plan the
+        second round.  ``seen``: qid -> (op, seq, value0).  A missing or
+        NACKed prepare aborts the txn.  An aborting txn releases EVERY key,
+        including ones whose ACK it never saw: a reply lost after the grant
+        would otherwise leak the lock forever, and the head refuses a
+        release it does not hold (rel_bad), so the extra ABORT is free."""
+        subs = []
+        for entry in plan.values():
+            t: Txn = entry["txn"]
+            if entry["mode"] != "2pc":
+                continue
+            acks, nacks = {}, 0
+            for q, (_, gk) in entry["p1"].items():
+                r = seen.get(q)
+                if r is not None and r[0] == OP_PREPARE_ACK:
+                    acks[gk] = r
+                else:
+                    nacks += 1
+            entry["nacks"] = nacks
+            entry["decision"] = "commit" if nacks == 0 else "abort"
+            wkeys = dict(t.writes)
+            for gk in t.keys:
+                q = self._qids(1)[0]
+                if entry["decision"] == "commit" and gk in wkeys:
+                    subs.append((OP_COMMIT, gk, wkeys[gk], t.txn_id, q,
+                                 t.client))
+                    entry["p2"][q] = ("c", gk)
+                else:
+                    subs.append((OP_ABORT, gk, 0, t.txn_id, q, t.client))
+                    entry["p2"][q] = ("a", gk)
+        return (self._stream(subs) if subs else None)
+
+    def results(self, plan: dict, seen: dict) -> list[TxnResult]:
+        out = []
+        for entry in plan.values():
+            t: Txn = entry["txn"]
+            res = TxnResult(txn_id=t.txn_id, committed=False,
+                            mode=entry["mode"], nacks=entry.get("nacks", 0))
+            if entry["mode"] == "direct":
+                ok = True
+                for q, (kind, gk) in entry["p1"].items():
+                    r = seen.get(q)
+                    if kind == "w":
+                        if r is None or r[0] != OP_WRITE_REPLY:
+                            ok = False
+                        else:
+                            res.write_seqs[gk] = r[1]
+                    else:
+                        if r is None or r[0] != OP_READ_REPLY:
+                            ok = False
+                        else:
+                            res.read_values[gk] = r[2]
+                res.committed = ok
+            else:
+                if entry.get("decision") == "commit":
+                    ok = True
+                    for q, (kind, gk) in entry["p2"].items():
+                        if kind != "c":
+                            continue
+                        r = seen.get(q)
+                        if r is None or r[0] != OP_TXN_REPLY or r[1] < 0:
+                            ok = False
+                        else:
+                            res.write_seqs[gk] = r[1]
+                    res.committed = ok
+                    if ok:
+                        for q, (_, gk) in entry["p1"].items():
+                            r = seen.get(q)
+                            if r is not None and r[0] == OP_PREPARE_ACK \
+                                    and gk in t.reads:
+                                res.read_values[gk] = r[2]
+            out.append(res)
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Host-side driver: runs the phases against a live ChainSim
+# ---------------------------------------------------------------------------
+class TxnDriver:
+    """Ticks a ``ChainSim`` through a wave of transactions: inject phase 1,
+    poll the reply log, decide, inject phase 2, poll again.
+
+    Capacity contract: the caller sizes ``inject_capacity`` so one wave's
+    sub-ops fit their head lanes (asserted - a dropped PREPARE would wait
+    out the timeout, a dropped COMMIT would leak a lock) and the reply log
+    holds every reply.
+    """
+
+    def __init__(self, sim, planner: TxnPlanner):
+        self.sim = sim
+        self.planner = planner
+
+    def _reply_map(self, state) -> dict:
+        r = state.replies.merged()
+        return {
+            int(q): (int(op), int(s), int(v))
+            for q, op, s, v in zip(r.qid, r.op, r.seq, r.value0)
+        }
+
+    def _inject(self, state, stream):
+        from repro.core.workload import route_stream
+
+        routed = route_stream(self.planner.cluster, stream, self.sim.c_in)
+        assert int(routed.dropped) == 0, (
+            f"txn stream overflowed injection lanes ({int(routed.dropped)} "
+            "sub-ops dropped) - shrink the wave or grow inject_capacity"
+        )
+        return self.sim.tick(state, jax.tree.map(lambda x: x[0], routed.lanes))
+
+    def _await(self, state, qids: set, max_ticks: int):
+        empty = self.sim.empty_injection()
+        seen = self._reply_map(state)
+        for _ in range(max_ticks):
+            if qids <= seen.keys():
+                break
+            state = self.sim.tick(state, empty)
+            seen = self._reply_map(state)
+        return state, seen
+
+    def run(self, state, txns: list[Txn], max_ticks: Optional[int] = None):
+        """Run one wave of transactions to completion.  Returns
+        ``(state, [TxnResult])``."""
+        max_ticks = max_ticks or (4 * self.sim.n + 8)
+        stream1, plan = self.planner.phase1(txns)
+        qids1 = {q for e in plan.values() for q in e["p1"]}
+        if stream1 is not None:
+            state = self._inject(state, stream1)
+        state, seen = self._await(state, qids1, max_ticks)
+        stream2 = self.planner.phase2(plan, seen)
+        if stream2 is not None:
+            state = self._inject(state, stream2)
+            qids2 = {q for e in plan.values() for q in e["p2"]}
+            state, seen = self._await(state, qids2, max_ticks)
+        return state, self.planner.results(plan, seen)
+
+
+# ---------------------------------------------------------------------------
+# Host-side reference executor (the serializability oracle)
+# ---------------------------------------------------------------------------
+def reference_execute(committed: list[Txn]) -> dict:
+    """Apply committed transactions serially in list order.  Returns the
+    expected {global_key: value} for every touched key (callers default
+    untouched keys to the store's initial 0)."""
+    kv: dict[int, int] = {}
+    for t in committed:
+        for k, v in t.writes:
+            kv[k] = v
+    return kv
+
+
+def serial_order(results: list[TxnResult]) -> list[int]:
+    """Topological serialization order of committed txns from observed
+    per-key write seqs; raises if the precedence graph has a cycle (a
+    serializability violation the lock protocol must prevent)."""
+    committed = [r for r in results if r.committed and r.write_seqs]
+    by_key: dict[int, list[tuple[int, int]]] = {}
+    for r in committed:
+        for k, s in r.write_seqs.items():
+            by_key.setdefault(k, []).append((s, r.txn_id))
+    edges: dict[int, set[int]] = {r.txn_id: set() for r in committed}
+    indeg = {r.txn_id: 0 for r in committed}
+    for k, pairs in by_key.items():
+        pairs.sort()
+        for (_, a), (_, b) in zip(pairs, pairs[1:]):
+            if b not in edges[a]:
+                edges[a].add(b)
+                indeg[b] += 1
+    order, ready = [], [t for t, d in indeg.items() if d == 0]
+    while ready:
+        t = ready.pop()
+        order.append(t)
+        for u in edges[t]:
+            indeg[u] -= 1
+            if indeg[u] == 0:
+                ready.append(u)
+    if len(order) != len(committed):
+        raise AssertionError(
+            "cyclic write-precedence among committed txns: not serializable"
+        )
+    return order
+
+
+def committed_view(cluster: ClusterConfig, state, node: int = -1) -> dict:
+    """{global_key: committed value} read from every chain's store (default:
+    the physical tail slot).  Call after a drain, when all replicas agree."""
+    vals = np.asarray(state.stores.values)[:, node, :, 0, 0]  # [C, K]
+    out = {}
+    for c in range(cluster.n_chains):
+        for lk in range(cluster.chain.num_keys):
+            out[int(cluster.global_key(lk, c))] = int(vals[c, lk])
+    return out

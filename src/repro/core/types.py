@@ -33,6 +33,24 @@ OP_WRITE_REPLY = 5
 # (recovery phase 2 copy window, paper §III.C).  The client is expected to
 # retry after the splice; the reply carries seq == -1.
 OP_WRITE_NACK = 6
+# ---------------------------------------------------------------------------
+# Cross-chain transaction opcodes (in-network 2PC over the partition map).
+# Phase 1: OP_PREPARE acquires the key's lock at the owning chain's head
+# (seq field carries the txn id); the head answers OP_PREPARE_ACK (value =
+# head-latest value, seq = the key's txn-version counter - the snapshot
+# coordinate for multi-key reads) or OP_PREPARE_NACK (seq = -1) on conflict,
+# freeze, or misdirection.  Phase 2: OP_COMMIT releases the lock and rides
+# the chain as a write (the tail acknowledges with OP_TXN_REPLY carrying the
+# stamped write seq); OP_ABORT releases the lock and the head acknowledges
+# with OP_TXN_REPLY (seq = -1).  Single-chain transactions skip all of this:
+# the planner injects plain OP_WRITEs (no extra round trips - the paper's
+# traffic-reduction argument applied to local coordination).
+OP_PREPARE = 7
+OP_PREPARE_ACK = 8
+OP_PREPARE_NACK = 9
+OP_COMMIT = 10
+OP_ABORT = 11
+OP_TXN_REPLY = 12
 
 OP_NAMES = {
     OP_NOP: "NOP",
@@ -42,7 +60,19 @@ OP_NAMES = {
     OP_READ_REPLY: "READ_REPLY",
     OP_WRITE_REPLY: "WRITE_REPLY",
     OP_WRITE_NACK: "WRITE_NACK",
+    OP_PREPARE: "PREPARE",
+    OP_PREPARE_ACK: "PREPARE_ACK",
+    OP_PREPARE_NACK: "PREPARE_NACK",
+    OP_COMMIT: "COMMIT",
+    OP_ABORT: "ABORT",
+    OP_TXN_REPLY: "TXN_REPLY",
 }
+
+
+def is_txn_op(op):
+    """Client-facing transaction opcodes (array- and int-friendly): the ops
+    the head's lock stage owns and the workload router pins to the head."""
+    return (op == OP_PREPARE) | (op == OP_COMMIT) | (op == OP_ABORT)
 
 # Value payload width: 128-bit VALUE field == 4 x 32-bit words (paper default).
 VALUE_WORDS = 4

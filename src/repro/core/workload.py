@@ -21,6 +21,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.types import (
     CLIENT_BASE,
@@ -32,6 +33,7 @@ from repro.core.types import (
     ClusterConfig,
     Msg,
     as_cluster,
+    is_txn_op,
 )
 
 
@@ -173,7 +175,9 @@ def route_stream(
         order = jnp.argsort(owner_row, stable=True)
         m: Msg = jax.tree.map(lambda x: x[order], msgs)
         own = owner_row[order]
-        is_w = m.op == OP_WRITE
+        # Transaction ops (PREPARE/COMMIT/ABORT) are resolved by the owning
+        # chain's head lock stage, so they ride the write lanes.
+        is_w = (m.op == OP_WRITE) | is_txn_op(m.op)
         is_r = m.op == OP_READ
         # Per-chain ranks among writes / among reads: global cumsum minus
         # the cumsum at the chain's segment start.
@@ -219,3 +223,76 @@ def route_stream(
         dropped=dropped_per_tick.sum().astype(jnp.int32),
         out_of_range=n_out_of_range.astype(jnp.int32),
     )
+
+
+# ---------------------------------------------------------------------------
+# Multi-key transactional workload (core/txn.py)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class TxnWorkloadConfig:
+    """Knobs for the multi-key transactional generator.
+
+    ``cross_chain_fraction`` is the probability that a transaction's keys
+    deliberately span several chains (forcing the 2PC path); the remaining
+    transactions keep all keys on one chain (the planner's no-extra-round-
+    trip fast path).  ``write_fraction`` splits each transaction's keys
+    into writes vs snapshot reads.
+    """
+
+    n_txns: int = 32
+    keys_per_txn: int = 2
+    cross_chain_fraction: float = 1.0
+    write_fraction: float = 1.0
+    seed: int = 0
+    txn_id_base: int = 1
+    client_base: int = 0
+
+
+def make_txn_workload(cfg: ChainConfig | ClusterConfig,
+                      twl: TxnWorkloadConfig) -> list:
+    """Generate host-side transactions over the cluster's global key space.
+
+    Cross-chain transactions draw their keys from distinct chains round-
+    robin (so ``keys_per_txn > n_chains`` revisits chains, still spanning
+    at least two); single-chain transactions pin every key to one chain,
+    rotating the chain per txn so load spreads.  Keys are distinct within
+    a transaction and values are unique across the whole workload, which
+    is what lets the tests detect a partially-applied (non-atomic) txn.
+    """
+    from repro.core.txn import Txn
+
+    cluster = as_cluster(cfg)
+    C, K = cluster.n_chains, cluster.chain.num_keys
+    kpt = min(twl.keys_per_txn, cluster.num_global_keys)
+    rng = np.random.default_rng(twl.seed)
+    txns = []
+    for i in range(twl.n_txns):
+        cross = (
+            C > 1 and kpt > 1
+            and rng.random() < twl.cross_chain_fraction
+        )
+        if cross:
+            off = int(rng.integers(0, C))
+            chains = [(off + j) % C for j in range(kpt)]
+            rng.shuffle(chains)
+            gkeys, used = [], set()
+            for c in chains:
+                lk = int(rng.integers(0, K))
+                while (c, lk) in used:
+                    lk = (lk + 1) % K
+                used.add((c, lk))
+                gkeys.append(int(cluster.global_key(lk, c)))
+        else:
+            c = (twl.seed + i) % C
+            locals_ = rng.choice(K, size=kpt, replace=False)
+            gkeys = [int(cluster.global_key(int(lk), c)) for lk in locals_]
+        n_writes = max(1, round(kpt * twl.write_fraction)) \
+            if twl.write_fraction > 0 else 0
+        tid = twl.txn_id_base + i
+        writes = tuple(
+            (gk, (tid << 8) | (j + 1)) for j, gk in enumerate(gkeys[:n_writes])
+        )
+        reads = tuple(gkeys[n_writes:])
+        txns.append(Txn(txn_id=tid, writes=writes, reads=reads,
+                        client=twl.client_base + i))
+    return txns

@@ -29,3 +29,102 @@ def run_with_devices(code: str, n_devices: int = 8, timeout: int = 540) -> str:
     )
     assert proc.returncode == 0, f"subprocess failed:\n{proc.stdout}\n{proc.stderr}"
     return proc.stdout
+
+
+# ---------------------------------------------------------------------------
+# Shared transactional-serializability harness (used by the seeded fuzz in
+# test_txn.py and the hypothesis property test in
+# test_txn_serializability.py - one checker, two example sources).
+# ---------------------------------------------------------------------------
+_PROP_ENGINE = None
+
+# Workload shape bounds: constant sim shapes across examples (no recompiles)
+# and waves that always fit the head injection lanes.
+PROP_MAX_WAVES = 2
+PROP_MAX_TXNS_PER_WAVE = 4
+PROP_MAX_KEYS_PER_TXN = 3
+PROP_NUM_GLOBAL_KEYS = 8
+
+
+def prop_engine():
+    """Lazy singleton (cluster, sim) for serializability fuzzing: jit
+    caches key on the ChainSim instance, so every example must reuse it."""
+    global _PROP_ENGINE
+    if _PROP_ENGINE is None:
+        from repro.core import ChainConfig, ChainSim, ClusterConfig
+
+        cluster = ClusterConfig(
+            chain=ChainConfig(n_nodes=3, num_keys=4, num_versions=8),
+            n_chains=2,
+        )
+        sim = ChainSim(cluster, inject_capacity=16, route_capacity=96,
+                       reply_capacity=512)
+        _PROP_ENGINE = (cluster, sim)
+    return _PROP_ENGINE
+
+
+def txn_waves_from_spec(spec):
+    """Build Txn waves from a plain spec: [[(k1, k2, ...), ...], ...] -
+    nested tuples of distinct global keys, one inner tuple per txn.  Values
+    are unique per (txn, key) so a partially-applied txn is detectable."""
+    from repro.core import Txn
+
+    waves, tid = [], 1
+    for wave_spec in spec:
+        wave = []
+        for keys in wave_spec:
+            wave.append(Txn(
+                txn_id=tid,
+                writes=tuple((int(k), (tid << 8) | (j + 1))
+                             for j, k in enumerate(keys)),
+            ))
+            tid += 1
+        waves.append(wave)
+    return waves
+
+
+def run_txn_waves_and_check(spec):
+    """The serializability oracle: run the spec's waves through the shared
+    engine, then assert (1) locks drained + chains converged, (2) committed
+    txns are atomic, (3) the observed write precedence is acyclic, and (4)
+    serially replaying it reproduces every chain's store bit-exactly."""
+    import numpy as np
+
+    from repro.core import (TxnDriver, TxnPlanner, committed_view,
+                            locks_all_free, reference_execute, serial_order)
+
+    cluster, sim = prop_engine()
+    waves = txn_waves_from_spec(spec)
+    state = sim.init_state()
+    drv = TxnDriver(sim, TxnPlanner(cluster))
+    results = []
+    for wave in waves:
+        state, res = drv.run(state, wave)
+        results += res
+    empty = sim.empty_injection()
+    for _ in range(4 * sim.n + 4):
+        state = sim.tick(state, empty)
+
+    assert locks_all_free(state.locks)
+    assert int(state.stores.pending.sum()) == 0
+
+    by_id = {t.txn_id: t for wave in waves for t in wave}
+    committed_ids = {r.txn_id for r in results if r.committed}
+    for r in results:  # atomicity: all-or-nothing write acknowledgements
+        if r.committed:
+            assert set(r.write_seqs) == {k for k, _ in by_id[r.txn_id].writes}
+
+    order = serial_order(results)  # raises on cyclic precedence
+    assert set(order) <= committed_ids
+    tail = [t for t in sorted(committed_ids) if t not in set(order)]
+    expected = reference_execute([by_id[t] for t in order + tail])
+    view = committed_view(cluster, state)
+    for gk in range(cluster.num_global_keys):
+        assert view[gk] == expected.get(gk, 0), (
+            f"key {gk}: store={view[gk]} reference={expected.get(gk, 0)}"
+        )
+    vals = np.asarray(state.stores.values)[:, :, :, 0, 0]
+    for c in range(cluster.n_chains):
+        for node in range(sim.n):
+            np.testing.assert_array_equal(vals[c, node], vals[c, -1])
+    return results

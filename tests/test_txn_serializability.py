@@ -1,0 +1,48 @@
+"""Hypothesis-driven serializability property test (core/txn.py).
+
+The acceptance criterion for the transaction subsystem: across >= 200
+generated examples, random interleavings of committed transactions leave
+every chain's store equal to the host-side serial reference executor, the
+observed write-precedence graph is acyclic, and no committed transaction
+is partially applied.  The checker (and the seeded always-run twin) lives
+in tests/helpers.py; this module only contributes the example source, so
+it skips alone when the hypothesis dev dependency is absent.
+
+Workload shapes are bounded by the PROP_* constants so every example fits
+the head injection lanes and reuses one jitted engine - 200 examples, one
+compile.
+"""
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the hypothesis dev dependency"
+)
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from helpers import (
+    PROP_MAX_KEYS_PER_TXN,
+    PROP_MAX_TXNS_PER_WAVE,
+    PROP_MAX_WAVES,
+    PROP_NUM_GLOBAL_KEYS,
+    run_txn_waves_and_check,
+)
+
+_txn_keys = st.lists(
+    st.integers(0, PROP_NUM_GLOBAL_KEYS - 1),
+    min_size=1,
+    max_size=PROP_MAX_KEYS_PER_TXN,
+    unique=True,
+).map(tuple)
+
+_waves = st.lists(
+    st.lists(_txn_keys, min_size=1, max_size=PROP_MAX_TXNS_PER_WAVE),
+    min_size=1,
+    max_size=PROP_MAX_WAVES,
+)
+
+
+@settings(max_examples=200, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(spec=_waves)
+def test_committed_txns_serializable_against_reference_executor(spec):
+    run_txn_waves_and_check(spec)

@@ -1,0 +1,159 @@
+"""Workload generator coverage: the zipf sampling path and RoutedStream's
+loss accounting under adversarial key streams.
+
+``_sample_keys``'s zipf branch (inverse-CDF on a precomputed table) had no
+test at all; ``route_stream`` promises *exact* dropped/out-of-range counts
+- an overstatement there silently inflates benchmark throughput.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ChainConfig, ClusterConfig, route_stream
+from repro.core.types import CLIENT_BASE, Msg, OP_NOP, OP_READ, OP_WRITE
+from repro.core.workload import (
+    TxnWorkloadConfig,
+    WorkloadConfig,
+    _sample_keys,
+    make_txn_workload,
+)
+
+
+def _cluster(C=2, num_keys=8):
+    return ClusterConfig(
+        chain=ChainConfig(n_nodes=4, num_keys=num_keys, num_versions=4),
+        n_chains=C,
+    )
+
+
+# ---------------------------------------------------------------------------
+# _sample_keys: zipf path
+# ---------------------------------------------------------------------------
+def test_zipf_keys_in_bounds_and_int32():
+    wl = WorkloadConfig(key_skew="zipf", zipf_a=1.2)
+    keys = _sample_keys(jax.random.PRNGKey(0), (20_000,), 64, wl)
+    assert keys.dtype == jnp.int32
+    k = np.asarray(keys)
+    assert k.min() >= 0 and k.max() <= 63
+
+
+def test_zipf_clip_keeps_edge_draws_in_range():
+    """u -> 1 lands past the last CDF bucket; the clip must keep the draw
+    on the last valid key even for tiny key spaces."""
+    wl = WorkloadConfig(key_skew="zipf", zipf_a=0.5)  # flat tail: edge-prone
+    for num_keys in (2, 3):
+        k = np.asarray(
+            _sample_keys(jax.random.PRNGKey(7), (50_000,), num_keys, wl)
+        )
+        assert k.min() >= 0 and k.max() == num_keys - 1
+
+
+def test_zipf_distribution_matches_power_law():
+    """Rank-frequency follows k^-a: the head dominates and successive
+    ranks decay with the right ratio (within sampling tolerance)."""
+    a, n_keys, n = 1.2, 64, 200_000
+    wl = WorkloadConfig(key_skew="zipf", zipf_a=a)
+    k = np.asarray(_sample_keys(jax.random.PRNGKey(3), (n,), n_keys, wl))
+    freq = np.bincount(k, minlength=n_keys) / n
+    # frequencies are rank-sorted by construction (rank 1 == key 0)
+    assert freq[0] == freq.max()
+    assert freq[0] > 5 * freq[16] > 0  # heavy head vs mid-tail
+    expected = np.arange(1, n_keys + 1, dtype=np.float64) ** (-a)
+    expected /= expected.sum()
+    # head probabilities within 10% relative error at this sample size
+    np.testing.assert_allclose(freq[:4], expected[:4], rtol=0.1)
+
+
+def test_uniform_keys_cover_the_space_evenly():
+    wl = WorkloadConfig(key_skew="uniform")
+    k = np.asarray(_sample_keys(jax.random.PRNGKey(1), (50_000,), 16, wl))
+    freq = np.bincount(k, minlength=16) / k.size
+    assert freq.min() > 0.8 / 16 and freq.max() < 1.25 / 16
+
+
+# ---------------------------------------------------------------------------
+# RoutedStream accounting under adversarial streams
+# ---------------------------------------------------------------------------
+def _stream(ops, keys):
+    T, Q = ops.shape
+    base = Msg.empty(Q)
+    s = jax.tree.map(lambda x: jnp.broadcast_to(x[None], (T,) + x.shape), base)
+    return s._replace(
+        op=jnp.asarray(ops, jnp.int32),
+        key=jnp.asarray(keys, jnp.int32),
+        qid=jnp.arange(T * Q, dtype=jnp.int32).reshape(T, Q),
+        src=jnp.full((T, Q), CLIENT_BASE, jnp.int32),
+    )
+
+
+def test_routed_stream_accounting_under_adversarial_keys():
+    """Random streams mixing negative keys, out-of-space keys, int32-edge
+    keys and single-key floods: offered == packed + dropped exactly, with
+    out_of_range a subset of dropped, for generous and starved lanes."""
+    cl = _cluster(C=3, num_keys=8)  # 24 global keys
+    rng = np.random.default_rng(0)
+    T, Q = 4, 32
+    for trial in range(6):
+        keys = rng.integers(-5, 40, size=(T, Q))
+        if trial % 3 == 1:
+            keys[:] = 3  # single-key flood: one lane takes everything
+        if trial % 3 == 2:
+            keys[0, :4] = [np.iinfo(np.int32).max, np.iinfo(np.int32).min,
+                           24, -1]  # int32 edges + first out-of-space key
+        ops = rng.choice([OP_READ, OP_WRITE, OP_NOP], size=(T, Q),
+                         p=[0.5, 0.4, 0.1])
+        stream = _stream(ops, keys)
+        offered = int((ops != OP_NOP).sum())
+        oor = int(((ops != OP_NOP) & ((keys < 0) | (keys >= 24))).sum())
+        for q in (2, Q):  # starved and generous lanes
+            routed = route_stream(cl, stream, queries_per_node=q)
+            packed = np.asarray(routed.lanes.op) != OP_NOP
+            assert int(routed.out_of_range) == oor
+            assert int(routed.dropped) == offered - int(packed.sum())
+            assert int(routed.dropped) >= oor
+            # every packed query is in range, in its owning chain
+            lk = np.asarray(routed.lanes.key)[packed]
+            assert lk.min() >= 0 and lk.max() < 8
+            qid = np.asarray(routed.lanes.qid)[packed]
+            assert len(np.unique(qid)) == len(qid)  # packed exactly once
+
+
+def test_routed_stream_full_drop_stream():
+    """All keys out of range: everything drops, nothing packs."""
+    cl = _cluster(C=2, num_keys=4)  # 8 global keys
+    ops = np.full((2, 6), OP_READ)
+    keys = np.full((2, 6), 99)
+    routed = route_stream(cl, _stream(ops, keys), queries_per_node=4)
+    assert int(routed.dropped) == 12 and int(routed.out_of_range) == 12
+    assert not (np.asarray(routed.lanes.op) != OP_NOP).any()
+
+
+# ---------------------------------------------------------------------------
+# transactional generator knobs
+# ---------------------------------------------------------------------------
+def test_make_txn_workload_respects_knobs():
+    cl = _cluster(C=4, num_keys=16)
+    twl = TxnWorkloadConfig(n_txns=40, keys_per_txn=3,
+                            cross_chain_fraction=0.5, seed=1)
+    txns = make_txn_workload(cl, twl)
+    assert len(txns) == 40
+    n_cross = 0
+    seen_values = set()
+    for t in txns:
+        keys = t.keys
+        assert len(set(keys)) == len(keys) == 3
+        chains = {int(cl.key_to_chain(k)) for k in keys}
+        n_cross += len(chains) > 1
+        for _, v in t.writes:
+            assert v not in seen_values  # unique values (atomicity probes)
+            seen_values.add(v)
+    assert 8 <= n_cross <= 32  # ~half cross-chain at this seed
+
+    all_local = make_txn_workload(cl, TxnWorkloadConfig(
+        n_txns=10, keys_per_txn=2, cross_chain_fraction=0.0, seed=2))
+    assert all(len({int(cl.key_to_chain(k)) for k in t.keys}) == 1
+               for t in all_local)
+    all_cross = make_txn_workload(cl, TxnWorkloadConfig(
+        n_txns=10, keys_per_txn=2, cross_chain_fraction=1.0, seed=3))
+    assert all(len({int(cl.key_to_chain(k)) for k in t.keys}) == 2
+               for t in all_cross)
