@@ -1,0 +1,316 @@
+"""Live key-range rebalancing under skewed traffic - the versioned
+partition map's headline figure.
+
+A zipf-skewed tenant whose keys all hash to chain 0's home partition
+hot-spots that chain: its injection lanes saturate while the sibling
+chains idle, capping aggregate throughput far below the uniform-workload
+ceiling (the failure mode the static modulo map cannot escape).  Mid-run
+the CP migrates the tenant's two hottest buckets onto the idle chains
+through the freeze -> drain -> copy -> publish lifecycle (partition-epoch
+rules, ``core/chain.py``):
+
+* ``begin_rebalance`` freezes the source chain's writes (the PR-2
+  freeze/NACK path) and ``install_roles`` publishes the freeze;
+* the engine ticks until the pre-freeze writes commit and the lock table
+  drains (``complete_rebalance`` asserts both);
+* ``complete_rebalance`` copies the bucket's register slice to the
+  destination's landing region via the recovery copy path, publishes the
+  epoch-bumped map (``install_partition``) and unfreezes - all pure state
+  swaps on the running engine.
+
+One tick after each publish the clients still route with their cached
+(stale) map: the router counts them (``RoutedStream.stale``) and the old
+owner NACK-redirects them (``OP_STALE_NACK`` -> ``Metrics.stale_routes``)
+instead of serving the freed region.
+
+Acceptance (asserted here, smoke-run by the nightly `slow` lane):
+
+* aggregate reply throughput over the post-migration window rises vs the
+  static map on the same stream, recovering toward the uniform-workload
+  ceiling;
+* ZERO jit recompilations across begin/drain/copy/publish;
+* the non-participating chain (neither source nor destination of any
+  move) ends bit-identical - reply log, stores, per-chain counters and
+  per-tick throughput - to the undisturbed twin run;
+* post-migration stores equal a serial reference replay of every
+  acknowledged write (max-seq per key), through the live map's inverse.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import BenchRow
+from repro.core import (ChainConfig, ChainSim, ClusterConfig, Coordinator,
+                        WorkloadConfig, committed_view, route_stream)
+from repro.core.types import CLIENT_BASE, Msg, OP_READ, OP_WRITE, OP_WRITE_REPLY
+from repro.core.workload import _sample_keys
+
+
+def _make_stream(cluster: ClusterConfig, ticks: int, per_tick: int, *,
+                 hot_fraction: float, zipf_a: float, write_fraction: float,
+                 seed: int, uniform: bool = False) -> Msg:
+    """[T, Q] global-key client stream.  ``uniform=False``: ``hot_fraction``
+    of the queries target the skewed tenant - zipf-ranked keys whose home
+    coordinates all land on chain 0 (g = rank * C) - and the rest spread
+    uniformly.  ``uniform=True`` is the balanced ceiling reference."""
+    T, Q, C = ticks, per_tick, cluster.n_chains
+    rng = jax.random.PRNGKey(seed)
+    k_hot, k_rank, k_bg, k_w, k_v = jax.random.split(rng, 5)
+    wl = WorkloadConfig(key_skew="zipf", zipf_a=zipf_a)
+    ranks = _sample_keys(k_rank, (T, Q), cluster.keys_in_use, wl)
+    hot_keys = ranks * C  # home chain 0: the tenant aliases onto one chain
+    bg_keys = jax.random.randint(k_bg, (T, Q), 0, cluster.num_global_keys,
+                                 jnp.int32)
+    if uniform:
+        gkeys = bg_keys
+    else:
+        is_hot = jax.random.uniform(k_hot, (T, Q)) < hot_fraction
+        gkeys = jnp.where(is_hot, hot_keys, bg_keys)
+    is_write = jax.random.uniform(k_w, (T, Q)) < write_fraction
+    vals = jax.random.randint(k_v, (T, Q), 1, 1 << 20, jnp.int32)
+
+    qid = jnp.arange(T * Q, dtype=jnp.int32).reshape(T, Q)
+    base = Msg.empty(Q, cluster.chain.value_words)
+    stream: Msg = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (T,) + x.shape), base)
+    value = jnp.zeros((T, Q, cluster.chain.value_words), jnp.int32)
+    value = value.at[..., 0].set(jnp.where(is_write, vals, 0))
+    return stream._replace(
+        op=jnp.where(is_write, OP_WRITE, OP_READ).astype(jnp.int32),
+        key=gkeys,
+        value=value,
+        src=CLIENT_BASE + qid % 512,
+        client=CLIENT_BASE + qid % 512,
+        qid=qid,
+        t_inject=jnp.broadcast_to(
+            jnp.arange(T, dtype=jnp.int32)[:, None], (T, Q)),
+    )
+
+
+def _hottest_buckets(cluster: ClusterConfig, stream: Msg, upto_tick: int,
+                     chain: int, k: int) -> list[int]:
+    """The ``k`` most-loaded buckets currently homed on ``chain``, measured
+    from the offered stream (what a load-aware CP would sample)."""
+    gk = np.asarray(stream.key[:upto_tick]).ravel()
+    buckets = np.asarray(cluster.bucket_of(gk))
+    counts = np.bincount(buckets, minlength=cluster.num_buckets)
+    mine = [b for b in range(cluster.num_buckets)
+            if b // cluster.buckets_per_chain == chain]
+    return sorted(mine, key=lambda b: -counts[b])[:k]
+
+
+def _reference_replay(cluster: ClusterConfig, state, stream: Msg) -> dict:
+    """Serial reference executor: replay every ACKNOWLEDGED write (per-key
+    max write seq wins - the engine's serialization order) onto an empty
+    store.  Returns {global_key: value}."""
+    qid_to_g = dict(zip(np.asarray(stream.qid).ravel().tolist(),
+                        np.asarray(stream.key).ravel().tolist()))
+    r = state.replies
+    cur = np.asarray(r.cursor)
+    best: dict[int, tuple[int, int]] = {}
+    for c in range(cur.shape[0]):
+        n = int(cur[c])
+        ops = np.asarray(r.op[c])[:n]
+        qids = np.asarray(r.qid[c])[:n]
+        seqs = np.asarray(r.seq[c])[:n]
+        v0 = np.asarray(r.value0[c])[:n]
+        for i in np.where(ops == OP_WRITE_REPLY)[0]:
+            g = qid_to_g[int(qids[i])]
+            if g not in best or int(seqs[i]) > best[g][0]:
+                best[g] = (int(seqs[i]), int(v0[i]))
+    return {g: v for g, (_, v) in best.items()}
+
+
+def run(C: int = 4, n_nodes: int = 4, q: int = 4, ticks: int = 44,
+        per_tick: int = 48, hot_fraction: float = 0.85, zipf_a: float = 0.5,
+        write_fraction: float = 0.1, seed: int = 0) -> list[BenchRow]:
+    cluster = ClusterConfig(
+        chain=ChainConfig(n_nodes=n_nodes, num_keys=24, num_versions=6),
+        n_chains=C,
+        buckets_per_chain=4,   # 16 in-use registers -> 4-slot buckets
+        spare_keys=8,          # two landing regions per chain
+    )
+    sim = ChainSim(cluster, inject_capacity=q,
+                   route_capacity=max(256, 16 * q),
+                   reply_capacity=4096)
+    stream = _make_stream(cluster, ticks, per_tick,
+                          hot_fraction=hot_fraction, zipf_a=zipf_a,
+                          write_fraction=write_fraction, seed=seed)
+    uni_stream = _make_stream(cluster, ticks, per_tick,
+                              hot_fraction=hot_fraction, zipf_a=zipf_a,
+                              write_fraction=write_fraction, seed=seed,
+                              uniform=True)
+
+    # migration scribble: freeze after tick f, drain 6 frozen ticks (the
+    # deepest pre-freeze write needs ~n+2 ticks to commit + ACK), publish,
+    # one stale-client tick, then the clients refresh their map
+    freeze_after = {0: 12, 1: 20}
+    publish_after = {0: 18, 1: 26}
+    post_window = publish_after[1] + 2
+    hot = _hottest_buckets(cluster, stream, freeze_after[0], chain=0, k=2)
+    dst_of = {hot[0]: 1, hot[1]: 2}  # chain 3 never participates
+
+    def tick_slice(s, t):
+        return jax.tree.map(lambda x: x[t:t + 1], s)
+
+    def run_once(src: Msg, migrate: bool):
+        co = Coordinator(cluster)
+        state = sim.init_state()
+        client_pmap = co.partition_map()   # the clients' cached map view
+        client_epoch = 0
+        live_pmap, live_epoch = client_pmap, 0  # rebuilt only on a bump
+        per_tick_replies = []
+        router_stale = 0
+        prev = np.zeros(C, np.int64)
+        move_iter = iter(hot)
+        pending: int | None = None
+        for t in range(ticks):
+            if live_epoch != co.partition_epoch:
+                live_pmap, live_epoch = co.partition_map(), co.partition_epoch
+            routed = route_stream(cluster, tick_slice(src, t), q,
+                                  pmap=client_pmap,
+                                  live_pmap=live_pmap)
+            router_stale += int(routed.stale)
+            state = sim.tick(state, jax.tree.map(lambda x: x[0], routed.lanes))
+            if migrate:
+                if t in freeze_after.values() and pending is None:
+                    b = next(move_iter)
+                    co.begin_rebalance(b, dst_of[b])
+                    state = co.install_roles(state)
+                    pending = b
+                if t in publish_after.values() and pending is not None:
+                    state = co.complete_rebalance(state)
+                    pending = None
+                    # clients keep their stale map for exactly one tick
+                    # (the NACK-redirect window), then refetch
+                elif client_epoch != live_epoch:
+                    client_pmap, client_epoch = live_pmap, live_epoch
+            cur = np.asarray(jax.device_get(state.metrics.replies), np.int64)
+            per_tick_replies.append(cur - prev)
+            prev = cur
+        empty = sim.empty_injection()
+        for _ in range(4 * n_nodes):
+            state = sim.tick(state, empty)
+        return co, state, np.stack(per_tick_replies), router_stale  # [T, C]
+
+    # The undisturbed twin doubles as the jit warmup; after it, demand zero
+    # recompilations for the whole migration lifecycle.
+    co_s, state_static, tput_static, stale_s = run_once(stream, migrate=False)
+    compiles_before = ChainSim.tick._cache_size()
+    co_m, state_mig, tput_mig, stale_m = run_once(stream, migrate=True)
+    recompiles = ChainSim.tick._cache_size() - compiles_before
+    assert recompiles == 0, (
+        f"bucket migration recompiled the data path {recompiles}x"
+    )
+    _, state_uni, tput_uni, _ = run_once(uni_stream, migrate=False)
+    assert ChainSim.tick._cache_size() == compiles_before, (
+        "uniform reference run recompiled the data path"
+    )
+
+    # -- throughput: the migrated run must recover toward the uniform
+    # ceiling over the post-migration window --------------------------------
+    w = slice(post_window, ticks)
+    served_static = float(tput_static[w].sum())
+    served_mig = float(tput_mig[w].sum())
+    served_uni = float(tput_uni[w].sum())
+    assert served_mig >= 1.5 * served_static, (
+        f"migration did not relieve the hot spot: {served_mig:.0f} vs "
+        f"static {served_static:.0f} replies over the window"
+    )
+    assert served_mig >= 0.7 * served_uni, (
+        f"migrated throughput {served_mig:.0f} too far from the uniform "
+        f"ceiling {served_uni:.0f}"
+    )
+
+    # -- stale clients were redirected, not silently served -----------------
+    m_mig = state_mig.metrics.asdict()
+    m_static = state_static.metrics.asdict()
+    assert stale_m > 0 and m_mig["stale_routes"] > 0
+    assert m_mig["stale_routes"] <= stale_m  # lane drops can only shrink it
+    assert m_static["stale_routes"] == 0 and stale_s == 0
+    moves = state_mig.metrics.per_chain()["migration_moves"]
+    assert sum(moves) == 4 and moves[3] == 0, moves  # 2 moves x (src + dst)
+    assert m_mig["drops"] == 0 and m_static["drops"] == 0
+
+    # -- the non-participating chain is bit-identical to the twin -----------
+    spectator = 3
+    for a, b in zip(state_mig.replies, state_static.replies):
+        np.testing.assert_array_equal(
+            np.asarray(a[spectator]), np.asarray(b[spectator]),
+            err_msg="spectator chain reply log diverged under migration")
+    for a, b in zip(state_mig.stores, state_static.stores):
+        np.testing.assert_array_equal(
+            np.asarray(a[spectator]), np.asarray(b[spectator]),
+            err_msg="spectator chain store diverged under migration")
+    for name, leaf in state_mig.metrics._asdict().items():
+        if name == "migration_moves":
+            continue
+        np.testing.assert_array_equal(
+            np.asarray(leaf[spectator]),
+            np.asarray(getattr(state_static.metrics, name)[spectator]),
+            err_msg=f"spectator chain metric {name} diverged")
+    np.testing.assert_array_equal(tput_mig[:, spectator],
+                                  tput_static[:, spectator])
+
+    # -- post-migration stores == serial reference replay -------------------
+    for st, src in ((state_mig, stream), (state_static, stream)):
+        assert int(np.asarray(st.stores.pending).sum()) == 0
+        ref = _reference_replay(cluster, st, src)
+        view = committed_view(cluster, st)
+        for g in range(cluster.num_global_keys):
+            assert view[g] == ref.get(g, 0), (
+                f"key {g}: store={view[g]} reference={ref.get(g, 0)}"
+            )
+        # replicas converged on every chain
+        vals = np.asarray(st.stores.values)[:, :, :, 0, 0]
+        for c in range(C):
+            for node in range(n_nodes):
+                np.testing.assert_array_equal(vals[c, node], vals[c, -1])
+
+    hot_owned = [co_m.bucket_placement(b)[0] for b in hot]
+    rows = [
+        BenchRow(
+            name="rebalance/throughput",
+            us_per_call=0.0,
+            derived=(f"static={served_static:.0f};migrated={served_mig:.0f};"
+                     f"uniform_ceiling={served_uni:.0f};"
+                     f"gain={served_mig / served_static:.2f}x;"
+                     f"of_ceiling={served_mig / served_uni:.2f}"),
+            data={"served_static": served_static, "served_migrated": served_mig,
+                  "served_uniform": served_uni,
+                  "gain": served_mig / served_static,
+                  "window": [post_window, ticks]},
+        ),
+        BenchRow(
+            name="rebalance/continuity",
+            us_per_call=0.0,
+            derived=(f"recompiles={recompiles};spectator_bit_identical=1/1;"
+                     f"stale_routes={m_mig['stale_routes']};"
+                     f"router_stale={stale_m};"
+                     f"migration_moves={moves};"
+                     f"epoch={co_m.partition_epoch}"),
+            data={"recompiles": recompiles,
+                  "stale_routes": m_mig["stale_routes"],
+                  "router_stale": stale_m,
+                  "migration_moves": moves,
+                  "hot_buckets": hot, "hot_new_owners": hot_owned,
+                  "metrics": m_mig},
+        ),
+        BenchRow(
+            name="rebalance/consistency",
+            us_per_call=0.0,
+            derived=("stores==serial_reference;replicas_converged;"
+                     f"write_nacks={m_mig['write_nacks']}"
+                     f"(freeze windows)"),
+            data={"write_nacks": m_mig["write_nacks"],
+                  "write_nacks_static": m_static["write_nacks"]},
+        ),
+    ]
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

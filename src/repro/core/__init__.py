@@ -15,9 +15,11 @@ Public surface:
 from repro.core.types import (  # noqa: F401
     ChainConfig,
     ClusterConfig,
+    PartitionMap,
     as_cluster,
     Msg,
     Roles,
+    OP_STALE_NACK,
     OP_ACK,
     OP_ABORT,
     OP_COMMIT,

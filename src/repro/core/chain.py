@@ -63,6 +63,45 @@ recovery copy path copies *stores only* - lock words never move between
 nodes because they live per chain, not per node.  In-flight PREPAREs at
 the moment of a freeze are therefore either granted before the freeze
 (their txn completes normally) or NACKed by it; there is no third state.
+
+Partition-epoch rules (the rebalancing extension of the same contract)
+----------------------------------------------------------------------
+``SimState.pmap`` is the versioned bucket->chain ``PartitionMap`` (see
+``core/types.py``).  Like the role table it is **CP-owned**: only the
+``Coordinator`` may rewrite it - the epoch is bumped exclusively by
+``complete_rebalance`` (one bump per bucket move), published between
+ticks with ``install_partition(state)``, and every leaf keeps its shape
+and dtype, so a migration never recompiles the jitted data path.  The
+migration lifecycle is strictly ordered:
+
+1. **freeze** (``begin_rebalance``): the *source* chain's writes freeze
+   (the PR-2 freeze/NACK path - client writes NACK ``OP_WRITE_NACK``, new
+   transaction PREPAREs NACK ``OP_PREPARE_NACK``; reads keep serving).
+   Publish with ``install_roles``.
+2. **drain**: the CP ticks the engine until the source chain's in-flight
+   writes commit and its lock table drains (``locks_drained`` - bounded,
+   because the freeze admits no new lock; ``complete_rebalance`` asserts
+   it).  Copying earlier could miss an admitted COMMIT's write.
+3. **copy + publish** (``complete_rebalance``, between two ticks): the
+   moving bucket's register slice - store leaves *and* the lock table's
+   commit-version column, the snapshot coordinate multi-key reads pin -
+   is copied to the destination region via the recovery copy path, the
+   freed source region is reset to its initial state, the epoch-bumped
+   map (``owner``/``base``/``slot_bucket``/``slot_epoch``) is installed
+   with ``install_partition``, and the source chain unfreezes
+   (``install_roles``).
+
+The data plane's half of the bargain is the **stale-route check** at the
+entry node: every client op carries the epoch of the map it was routed
+under (``Msg.ver``), and the tick NACK-redirects (``OP_STALE_NACK``,
+counted in ``Metrics.stale_routes``) any op whose stamp is older than
+``slot_epoch`` of the slot it addresses, or that targets a slot no
+bucket occupies - so a stale client can never read the old owner's
+stale region (or a recycled region's foreign keys), while buckets the
+migration did not touch keep serving stale-but-consistent clients
+without interruption.  Chains not named by the move (neither source nor
+destination) observe identical traffic and stay bit-identical to an
+undisturbed run - asserted by ``benchmarks/fig_rebalance.py``.
 """
 from __future__ import annotations
 
@@ -79,6 +118,7 @@ from repro.core.metrics import Metrics, ReplyLog
 from repro.core.store import Store
 from repro.core.txn import LockTable
 from repro.core.types import (
+    CLIENT_BASE,
     MULTICAST,
     OP_READ_REPLY,
     NOWHERE,
@@ -87,6 +127,7 @@ from repro.core.types import (
     OP_PREPARE_ACK,
     OP_PREPARE_NACK,
     OP_READ,
+    OP_STALE_NACK,
     OP_TXN_REPLY,
     OP_WRITE,
     OP_WRITE_NACK,
@@ -94,6 +135,7 @@ from repro.core.types import (
     ChainConfig,
     ClusterConfig,
     Msg,
+    PartitionMap,
     Roles,
     as_cluster,
 )
@@ -114,7 +156,42 @@ class SimState(NamedTuple):
     replies: ReplyLog    # [C, R]
     roles: Roles         # [C, n] live membership/role table (CP-owned; see
                          #     the module docstring's contract)
+    pmap: PartitionMap   # versioned bucket->chain partition map (CP-owned;
+                         #     see the partition-epoch rules above)
     t: jax.Array         # [] int32 tick counter (shared; chains are in step)
+
+
+def stale_route_admission(msg: Msg, slot_epoch: jax.Array,
+                          slot_bucket: jax.Array, src_pos):
+    """Partition-epoch admission, shared by both engines (the per-node
+    code must stay identical - see the partition-epoch rules above).
+
+    ``msg`` is a flat [M] batch already entry-stamped; ``slot_epoch``/
+    ``slot_bucket`` are this chain's [K] occupancy rows; ``src_pos`` is
+    the entry node id per slot ([M] array or scalar).  A client op whose
+    map stamp predates the last migration that touched its slot - or that
+    targets a slot no bucket occupies - is consumed and NACK-redirected.
+    Returns ``(kept_msg, nack_replies, n_stale)``.
+    """
+    K = slot_epoch.shape[0]
+    sk = jnp.clip(msg.key, 0, K - 1)
+    slot_current = (
+        (msg.key >= 0) & (msg.key < K)
+        & (msg.ver >= slot_epoch[sk])
+        & (slot_bucket[sk] >= 0)
+    )
+    is_stale = (
+        (msg.op != OP_NOP) & (msg.src >= CLIENT_BASE) & ~slot_current
+    )
+    nack = msg._replace(
+        op=jnp.where(is_stale, OP_STALE_NACK, OP_NOP),
+        value=jnp.zeros_like(msg.value),
+        seq=jnp.full_like(msg.seq, -1),
+        src=jnp.broadcast_to(
+            jnp.asarray(src_pos, jnp.int32), msg.src.shape),
+        dst=jnp.where(is_stale, TO_CLIENT, NOWHERE),
+    ).mask(is_stale)
+    return msg.mask(~is_stale), nack, is_stale.sum()
 
 
 def full_roles_table(n_nodes: int, n_chains: int) -> Roles:
@@ -180,6 +257,7 @@ class ChainSim:
             metrics=metrics,
             replies=replies,
             roles=full_roles_table(self.n, self.C),
+            pmap=self.cluster.default_partition(),
             t=jnp.zeros((), jnp.int32),
         )
 
@@ -195,17 +273,20 @@ class ChainSim:
 
     # -- one tick of ONE chain (vmapped over the chain axis) ---------------
     def _chain_tick(self, stores, inbox, locks, metrics, replies, injected,
-                    roles, t):
+                    roles, pmap, t):
         """stores [n,...], inbox [n,c_route], locks [K]-leaf LockTable,
-        injected [n,c_in], roles [n]-leaf Roles table, t [].
+        injected [n,c_in], roles [n]-leaf Roles table, pmap this chain's
+        PartitionMap view ([K] slot rows, shared [G] columns), t [].
 
         Returns (stores', inbox', locks', metrics', replies').  The routing
         fabric is local to the chain: unicast/multicast destinations are
         chain positions, so nothing ever crosses into another chain's
         state.  Membership is read from ``roles`` - dead slots are masked
         out of injection, processing, delivery and hop accounting.  Client
-        transaction ops are resolved by the head's lock stage before the
-        node step sees the batch (see txn.head_txn_stage).
+        ops routed under a stale partition map are NACK-redirected at the
+        entry node (see the partition-epoch rules), then transaction ops
+        are resolved by the head's lock stage before the node step sees
+        the batch (see txn.head_txn_stage).
         """
         n, cfg = self.n, self.cfg
         alive = roles.alive          # [n] bool
@@ -242,6 +323,24 @@ class ChainSim:
         # other query.
         live_in = full_inbox.op != OP_NOP
 
+        # Stale-route admission (partition-epoch rules, module docstring):
+        # consumed here and NACK-redirected, before the lock stage can
+        # grant a lock (or the store serve a read) this chain no longer
+        # owns.  Ops on unmoved buckets pass regardless of their stamp.
+        cap_total = full_inbox.op.shape[1]
+        flat_in: Msg = jax.tree.map(
+            lambda x: x.reshape((n * cap_total,) + x.shape[2:]), full_inbox
+        )
+        node_of_in = jnp.repeat(jnp.arange(n, dtype=jnp.int32), cap_total)
+        kept, stale_out, n_stale = stale_route_admission(
+            flat_in, pmap.slot_epoch, pmap.slot_bucket, node_of_in
+        )
+        lift_in = lambda m: jax.tree.map(
+            lambda x: x.reshape((n, cap_total) + x.shape[1:]), m
+        )
+        full_inbox = lift_in(kept)
+        stale_out = lift_in(stale_out)
+
         # Transaction stage at the live head: PREPARE/ABORT are consumed
         # (lock edits + ACK/NACK replies), validated COMMITs pass through
         # to the node step as write-like ops.
@@ -253,9 +352,11 @@ class ChainSim:
         new_stores, outbox = jax.vmap(
             functools.partial(self.node_step, cfg)
         )(stores, roles, full_inbox)
-        # The lock stage's replies join the node outboxes on the fabric.
+        # The lock stage's and the stale stage's replies join the node
+        # outboxes on the fabric (packet-accounted like any other reply).
         outbox = jax.tree.map(
-            lambda a, b: jnp.concatenate([a, b], axis=1), outbox, txn_out
+            lambda a, b, c: jnp.concatenate([a, b, c], axis=1),
+            outbox, txn_out, stale_out,
         )
         # A dead node emits nothing (its inbox is already empty; this pins
         # the invariant even if a node_step ever emitted unsolicited).
@@ -333,13 +434,15 @@ class ChainSim:
         # ---------------- exits -> reply log ----------------
         exits = flat.mask(is_exit)
         is_nack = exits.op == OP_WRITE_NACK
-        # 2PC control exits (phase-1 ACKs, prepare NACKs, abort acks) are
-        # logged for the planner but excluded from the `replies` throughput
-        # counter: only completed client operations count, and a committed
-        # transaction's completion is its tail OP_TXN_REPLY (seq >= 0).
+        # 2PC control exits (phase-1 ACKs, prepare NACKs, abort acks) and
+        # stale-route redirects are logged for the planner/client but
+        # excluded from the `replies` throughput counter: only completed
+        # client operations count, and a committed transaction's
+        # completion is its tail OP_TXN_REPLY (seq >= 0).
         is_ctrl = (
             (exits.op == OP_PREPARE_ACK)
             | (exits.op == OP_PREPARE_NACK)
+            | (exits.op == OP_STALE_NACK)
             | ((exits.op == OP_TXN_REPLY) & (exits.seq < 0))
         )
         new_replies = replies.append(exits, t + 1)
@@ -367,6 +470,9 @@ class ChainSim:
             txn_commits=metrics.txn_commits + txn_counts[0],
             txn_aborts=metrics.txn_aborts + txn_counts[1],
             lock_conflicts=metrics.lock_conflicts + txn_counts[2],
+            stale_routes=metrics.stale_routes + n_stale,
+            # bumped by the CP (complete_rebalance), never by the tick
+            migration_moves=metrics.migration_moves,
         )
 
         return new_stores, routed, new_locks, new_metrics, new_replies
@@ -386,13 +492,19 @@ class ChainSim:
         """injected: [C, n, c_in] client queries addressed to their entry
         node within their key's owning chain (see workload.make_schedule).
 
-        Membership is read from ``state.roles`` (a traced leaf): the CP may
-        swap the table between ticks without triggering a recompile."""
+        Membership (``state.roles``) and the partition map (``state.pmap``)
+        are traced leaves: the CP may swap either between ticks without
+        triggering a recompile."""
         injected = self._lift(injected)
+        # The per-chain view of the map: the [C, K] slot tables vmap over
+        # the chain axis; the bucket columns and epoch are shared.
+        pmap_axes = PartitionMap(
+            owner=None, base=None, epoch=None, slot_bucket=0, slot_epoch=0
+        )
         stores, inbox, locks, metrics, replies = jax.vmap(
-            self._chain_tick, in_axes=(0, 0, 0, 0, 0, 0, 0, None)
+            self._chain_tick, in_axes=(0, 0, 0, 0, 0, 0, 0, pmap_axes, None)
         )(state.stores, state.inbox, state.locks, state.metrics,
-          state.replies, injected, state.roles, state.t)
+          state.replies, injected, state.roles, state.pmap, state.t)
         return SimState(
             stores=stores,
             inbox=inbox,
@@ -400,6 +512,7 @@ class ChainSim:
             metrics=metrics,
             replies=replies,
             roles=state.roles,
+            pmap=state.pmap,
             t=state.t + 1,
         )
 
@@ -509,6 +622,12 @@ class ChainDist:
             return Roles.from_membership(self.n, range(self.n))
         return full_roles_table(self.n, self.C)
 
+    def default_pmap(self) -> PartitionMap:
+        """The epoch-0 partition map shaped for ``make_step``.  Feed
+        ``Coordinator.partition_map()`` instead to run under a rebalanced
+        map - same shapes, no re-jit."""
+        return self.cluster.default_partition()
+
     def _specs(self):
         if self.group_axis is None:
             return P(self.axis)
@@ -519,21 +638,35 @@ class ChainDist:
         grouped = self.group_axis is not None
         node_step = self.node_step
 
-        def step(stores: Store, inbox: Msg, roles: Roles):
+        def step(stores: Store, inbox: Msg, roles: Roles,
+                 pmap: PartitionMap):
             """shard_map body: [1, ...] (or [1, 1, ...]) local shards; one
-            chain tick under the CP-installed live role table (a traced
-            argument - membership edits re-run, never re-compile).
-            Returns (stores', inbox', replies_local)."""
+            chain tick under the CP-installed live role table and partition
+            map (traced arguments - membership edits and bucket migrations
+            re-run, never re-compile).  Returns (stores', inbox',
+            replies_local)."""
             unshard = (lambda x: x[0, 0]) if grouped else (lambda x: x[0])
             my_roles: Roles = jax.tree.map(unshard, roles)
             my_pos = my_roles.my_pos
             local_store = jax.tree.map(unshard, stores)
             local_in = jax.tree.map(unshard, inbox)
+            # this chain's slot rows (the [C, K] tables shard per group;
+            # ungrouped engines carry the C=1 row)
+            slot_epoch = pmap.slot_epoch[0]
+            slot_bucket = pmap.slot_bucket[0]
             # a dead device receives nothing and processes nothing
             local_in = local_in.mask(
                 jnp.broadcast_to(my_roles.alive, local_in.op.shape)
             )
             local_in = craq.stamp_entry(local_in, my_pos)
+
+            # stale-route admission (partition-epoch rules): client ops
+            # routed under a stale map NACK back to the client instead of
+            # touching a store this chain no longer owns - the exact same
+            # helper the simulator's tick runs.
+            local_in, stale_out, _ = stale_route_admission(
+                local_in, slot_epoch, slot_bucket, my_pos
+            )
 
             new_store, outbox = node_step(cfg, local_store, my_roles, local_in)
             # ... and emits nothing
@@ -566,7 +699,10 @@ class ChainDist:
             ) & my_roles.alive
             from_fabric = all_fab.mask(take)
 
-            replies = self._compact(outbox.mask(outbox.dst == TO_CLIENT), batch_per_node)
+            replies = self._compact(
+                Msg.concat([outbox.mask(outbox.dst == TO_CLIENT), stale_out]),
+                batch_per_node,
+            )
 
             next_inbox = self._compact(
                 Msg.concat([from_prev, from_fabric]), batch_per_node
@@ -582,11 +718,19 @@ class ChainDist:
         spec_store = Store(*([spec] * len(Store._fields)))
         msg_spec = Msg(*([spec] * len(Msg._fields)))
         roles_spec = Roles(*([spec] * len(Roles._fields)))
+        # bucket columns + epoch replicate everywhere; the [C, K] slot
+        # tables shard one chain row per group (replicated when ungrouped,
+        # where C == 1)
+        slot_spec = P(self.group_axis) if grouped else P()
+        pmap_spec = PartitionMap(
+            owner=P(), base=P(), epoch=P(),
+            slot_bucket=slot_spec, slot_epoch=slot_spec,
+        )
         return jax.jit(
             shard_map(
                 step,
                 mesh=self.mesh,
-                in_specs=(spec_store, msg_spec, roles_spec),
+                in_specs=(spec_store, msg_spec, roles_spec, pmap_spec),
                 out_specs=(spec_store, msg_spec, msg_spec),
             )
         )

@@ -24,7 +24,8 @@ import numpy as np
 from repro.core import store as store_lib
 from repro.core.failure import FailureDetector
 from repro.core.store import Store
-from repro.core.types import ChainConfig, ClusterConfig, Roles, as_cluster
+from repro.core.types import (ChainConfig, ClusterConfig, PartitionMap,
+                              Roles, as_cluster)
 
 
 @dataclasses.dataclass
@@ -113,15 +114,56 @@ class Coordinator:
         ]
         self._recovery_log: list[dict] = []
         self._txn_planner = None
+        # -- authoritative (host-side) partition map state ------------------
+        # Mirrors ChainMembership: the CP's mutable truth from which the
+        # data-plane PartitionMap pytree is *published* (partition_map()).
+        cl = self.cluster
+        homes = [cl.bucket_home(b) for b in range(cl.num_buckets)]
+        self._p_owner = [c for c, _ in homes]
+        self._p_base = [s for _, s in homes]
+        self._p_epoch = 0
+        self._p_slot_epoch = np.zeros(
+            (cl.n_chains, self.cfg.num_keys), np.int32)
+        # free landing regions per chain (bucket-sized, from the spare tail)
+        n_spare = cl.spare_keys // cl.bucket_slots
+        self._p_free = {
+            c: [cl.keys_in_use + i * cl.bucket_slots for i in range(n_spare)]
+            for c in range(cl.n_chains)
+        }
+        self._pending_move: Optional[tuple] = None
 
     # -- key partitioning ---------------------------------------------------
-    # The ClusterConfig partition map is the source of truth; the data plane
-    # (workload router, kv_engine cluster kernels) uses the same map.
+    # The CP's live partition map is the source of truth; the data plane
+    # (workload router, kv_engine cluster kernels, the engines' stale-route
+    # check) answers through the published PartitionMap pytree.
     def key_to_chain(self, key: int) -> int:
-        return int(self.cluster.key_to_chain(key))
+        self._check_key(key)
+        return self._p_owner[int(self.cluster.bucket_of(key))]
 
     def local_key(self, key: int) -> int:
-        return int(self.cluster.local_key(key))
+        self._check_key(key)
+        cl = self.cluster
+        b = int(cl.bucket_of(key))
+        return self._p_base[b] + (int(key) // cl.n_chains) % cl.bucket_slots
+
+    def _check_key(self, key: int) -> None:
+        # With spare_keys > 0 the bucket arithmetic is no longer total: an
+        # out-of-space key would alias onto (or index past) a real bucket
+        # and silently misroute a lock/write - fail loudly instead (the
+        # router's route_stream handles untrusted keys with out_of_range
+        # accounting; these host-side lookups are for valid keys only).
+        assert 0 <= int(key) < self.cluster.num_global_keys, (
+            f"global key {key} outside the key space "
+            f"0..{self.cluster.num_global_keys - 1}"
+        )
+
+    @property
+    def partition_epoch(self) -> int:
+        return self._p_epoch
+
+    def bucket_placement(self, bucket: int) -> tuple:
+        """(owning chain, base register slot) of a bucket right now."""
+        return self._p_owner[bucket], self._p_base[bucket]
 
     # -- cross-chain transactions (in-network 2PC, core/txn.py) --------------
     @property
@@ -132,7 +174,7 @@ class Coordinator:
         if self._txn_planner is None:
             from repro.core.txn import TxnPlanner
 
-            self._txn_planner = TxnPlanner(self.cluster)
+            self._txn_planner = TxnPlanner(self.cluster, coordinator=self)
         return self._txn_planner
 
     @staticmethod
@@ -172,6 +214,183 @@ class Coordinator:
         contract)."""
         return state._replace(roles=self.roles_table())
 
+    # -- data-plane partition map (who owns key g) ---------------------------
+    def partition_map(self) -> PartitionMap:
+        """The published ``PartitionMap`` pytree reflecting the CP's current
+        bucket placement.  Leaf shapes/dtypes depend only on the config, so
+        installing it on a running engine never recompiles the data path."""
+        cl = self.cluster
+        return PartitionMap.build(
+            owner=self._p_owner,
+            base=self._p_base,
+            epoch=self._p_epoch,
+            n_chains=cl.n_chains,
+            num_keys=self.cfg.num_keys,
+            bucket_slots=cl.bucket_slots,
+            slot_epoch=self._p_slot_epoch,
+        )
+
+    def install_partition(self, state):
+        """Publish the current partition map into a running ``SimState`` (a
+        pure map edit between ticks; see the partition-epoch rules in
+        chain.py's contract)."""
+        return state._replace(pmap=self.partition_map())
+
+    # -- live key-range rebalancing (freeze -> drain -> copy -> publish) -----
+    def begin_rebalance(self, bucket: int, dst_chain: int):
+        """Open a bucket migration: freeze the source chain's writes (the
+        recovery freeze/NACK path) and reserve a landing region on the
+        destination.  Call ``install_roles(state)`` afterwards so the
+        running data plane observes the freeze; then tick until the source
+        chain's writes commit and its locks drain before
+        ``complete_rebalance``.  One migration is in flight at a time.
+
+        Returns ``(src_chain, dst_chain)``.
+        """
+        cl = self.cluster
+        assert self._pending_move is None, (
+            f"migration of bucket {self._pending_move[0]} still open - "
+            "complete_rebalance it first"
+        )
+        assert 0 <= bucket < cl.num_buckets, f"no bucket {bucket}"
+        src = self._p_owner[bucket]
+        assert dst_chain != src, (
+            f"bucket {bucket} already lives on chain {dst_chain}"
+        )
+        assert 0 <= dst_chain < cl.n_chains
+        assert self._p_free[dst_chain], (
+            f"chain {dst_chain} has no free landing region (size the "
+            "cluster with spare_keys >= bucket_slots per expected "
+            "in-migration)"
+        )
+        # One freeze lifecycle per chain at a time: recovery and migration
+        # share the chain-wide freeze flag, and whichever completed first
+        # would silently unfreeze the other's still-open copy window.
+        assert not self.chains[src].writes_frozen, (
+            f"chain {src} is already frozen by another recovery/migration "
+            "window - complete it before opening a new one"
+        )
+        self.chains[src].writes_frozen = True
+        self._pending_move = (bucket, src, dst_chain, self._p_free[dst_chain][0])
+        self._recovery_log.append(
+            {"event": "rebalance_begin", "bucket": bucket, "src": src,
+             "dst": dst_chain, "epoch": self._p_epoch, "t": time.time()}
+        )
+        return src, dst_chain
+
+    def complete_rebalance(self, state):
+        """Close the migration opened by ``begin_rebalance``: copy the
+        bucket's register slice (store leaves + the lock table's commit-
+        version column) to the destination region via the recovery copy
+        path, reset the freed source region, publish the epoch-bumped map
+        and the unfrozen role table, and count the move in
+        ``Metrics.migration_moves`` for both participants.
+
+        ``state`` is the running ``SimState`` *after* the source chain
+        drained: in-flight writes to the moving bucket must have committed
+        (no dirty versions in the slice) and the source chain's lock table
+        must be empty - both asserted, both guaranteed in bounded time by
+        the freeze (no new write or PREPARE is admitted).  Returns the new
+        state; every edit is a pure state swap (zero recompiles).
+        """
+        cl = self.cluster
+        assert self._pending_move is not None, "no migration in flight"
+        bucket, src, dst, dst_base = self._pending_move
+        src_base = self._p_base[bucket]
+        bsz = cl.bucket_slots
+        s_sl = slice(src_base, src_base + bsz)
+        d_sl = slice(dst_base, dst_base + bsz)
+
+        holder = np.asarray(state.locks.holder)
+        assert (holder[src] == -1).all(), (
+            f"chain {src} still holds txn locks "
+            f"{[int(h) for h in holder[src] if h != -1]}; tick the engine "
+            "until locks_drained before copying (partition-epoch rules, "
+            "core/chain.py)"
+        )
+        assert (holder[dst, d_sl] == -1).all(), (
+            f"destination region {dst}:{dst_base}..{dst_base + bsz} holds "
+            "locks - a free region can never be lock-granted"
+        )
+        pending = np.asarray(state.stores.pending)[src, :, s_sl]
+        assert (pending == 0).all(), (
+            f"bucket {bucket} still has {int(pending.sum())} dirty "
+            "version(s) in flight on chain "
+            f"{src}; tick the frozen engine until the pre-freeze writes "
+            "commit before copying"
+        )
+        # The fabric must be quiet for the moving slots too: a forwarded
+        # dirty read or late ACK still parked in the source chain's inbox
+        # carries a node src (not a client), so the stale-route gate would
+        # never re-check it - served after the copy it would read the
+        # reset region.  Bounded: the freeze admits nothing new for the
+        # bucket, so a few more drain ticks always clear this.
+        inbox_live = np.asarray(state.inbox.op)[src] != 0
+        inbox_keys = np.asarray(state.inbox.key)[src]
+        in_region = inbox_live & (inbox_keys >= src_base) & (
+            inbox_keys < src_base + bsz)
+        assert not in_region.any(), (
+            f"{int(in_region.sum())} in-flight message(s) on chain {src} "
+            f"still address bucket {bucket}'s slots; tick the frozen "
+            "engine until the fabric drains before copying"
+        )
+
+        n = self.cfg.n_nodes
+        stores = state.stores
+        reset_seqs = jnp.broadcast_to(
+            jnp.full((cl.chain.num_versions,), -1, jnp.int32).at[0].set(0),
+            (n, bsz, cl.chain.num_versions),
+        )
+        values = stores.values.at[dst, :, d_sl].set(stores.values[src, :, s_sl])
+        values = values.at[src, :, s_sl].set(0)
+        seqs = stores.seqs.at[dst, :, d_sl].set(stores.seqs[src, :, s_sl])
+        seqs = seqs.at[src, :, s_sl].set(reset_seqs)
+        pend = stores.pending.at[dst, :, d_sl].set(stores.pending[src, :, s_sl])
+        pend = pend.at[src, :, s_sl].set(0)
+        nxt = stores.next_seq.at[dst, :, d_sl].set(stores.next_seq[src, :, s_sl])
+        nxt = nxt.at[src, :, s_sl].set(1)
+        new_stores = stores._replace(
+            values=values, seqs=seqs, pending=pend, next_seq=nxt
+        )
+        # The commit-version column moves with its bucket (it is the
+        # snapshot coordinate PREPARE_ACK hands to multi-key reads);
+        # holder/client are -1 on both regions (asserted above).
+        lver = state.locks.version
+        lver = lver.at[dst, d_sl].set(lver[src, s_sl]).at[src, s_sl].set(0)
+        new_locks = state.locks._replace(version=lver)
+        new_metrics = state.metrics._replace(
+            migration_moves=state.metrics.migration_moves.at[src]
+            .add(1).at[dst].add(1)
+        )
+
+        # host-map update + epoch bump; only the two touched regions get
+        # the new slot_epoch (unmoved buckets keep serving stale clients)
+        self._p_free[dst].remove(dst_base)
+        self._p_free[src].append(src_base)
+        self._p_owner[bucket] = dst
+        self._p_base[bucket] = dst_base
+        self._p_epoch += 1
+        self._p_slot_epoch[src, s_sl] = self._p_epoch
+        self._p_slot_epoch[dst, d_sl] = self._p_epoch
+        self.chains[src].writes_frozen = False
+        self._pending_move = None
+        self._recovery_log.append(
+            {"event": "rebalance", "bucket": bucket, "src": src, "dst": dst,
+             "base": dst_base, "epoch": self._p_epoch, "t": time.time()}
+        )
+
+        state = state._replace(
+            stores=new_stores, locks=new_locks, metrics=new_metrics
+        )
+        return self.install_roles(self.install_partition(state))
+
+    def rebalance(self, state, bucket: int, dst_chain: int):
+        """Freeze + copy + publish in one shot, for host-level surgery
+        where no ticks elapse during the window.  A live cluster should
+        use the two-step form with ``install_roles`` + drain ticks in
+        between, so the freeze is observable to in-flight traffic."""
+        self.begin_rebalance(bucket, dst_chain)
+        return self.complete_rebalance(self.install_roles(state))
 
     # -- failure recovery (two phases, paper §III.C) -------------------------
     def fail_node(self, chain_idx: int, node_id: int) -> ChainMembership:
@@ -211,8 +430,17 @@ class Coordinator:
         copies KV pairs.  Reads keep serving throughout.  Before copying,
         wait for in-flight transactions to release their locks
         (``locks_drained`` - bounded, since no new lock can be granted).
+
+        The freeze flag is shared with bucket migration: one freeze
+        lifecycle per chain at a time (asserted), or completing either
+        window would silently unfreeze the other.
         """
         m = self.chains[chain_idx]
+        assert not (self._pending_move is not None
+                    and self._pending_move[1] == chain_idx), (
+            f"chain {chain_idx} is frozen by an open bucket migration - "
+            "complete_rebalance it before starting a recovery window"
+        )
         m.writes_frozen = True
         return m
 

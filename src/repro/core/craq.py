@@ -95,6 +95,7 @@ def node_step(cfg: ChainConfig, store: Store, roles: Roles, inbox: Msg):
         qid=inbox.qid,
         t_inject=inbox.t_inject,
         extra=inbox.extra,
+        ver=inbox.ver,
     ).mask(answers)
 
     # ---------------- ACK path ----------------
@@ -137,6 +138,7 @@ def node_step(cfg: ChainConfig, store: Store, roles: Roles, inbox: Msg):
         qid=inbox.qid,
         t_inject=inbox.t_inject,
         extra=inbox.extra,
+        ver=inbox.ver,
     ).mask(fwd_mask)
 
     # Tail: multicast ACK to the rest of the chain + acknowledge the client.
@@ -153,6 +155,7 @@ def node_step(cfg: ChainConfig, store: Store, roles: Roles, inbox: Msg):
         qid=inbox.qid,
         t_inject=inbox.t_inject,
         extra=inbox.extra,
+        ver=inbox.ver,
     ).mask(ack_mask)
     # Write replies share a section with freeze NACKs (disjoint masks: a
     # NACKed write never reaches the tail-commit path).  Txn commit writes
@@ -173,6 +176,7 @@ def node_step(cfg: ChainConfig, store: Store, roles: Roles, inbox: Msg):
         qid=inbox.qid,
         t_inject=inbox.t_inject,
         extra=inbox.extra,
+        ver=inbox.ver,
     ).mask(wr_mask)
 
     outbox = Msg.concat([replies, forwards, acks, wreplies])

@@ -46,13 +46,20 @@ class Metrics(NamedTuple):
     txn_aborts: jax.Array     # ABORT sub-ops that released a held lock
     lock_conflicts: jax.Array # PREPAREs denied at the head (lock held by
                               # another txn, frozen chain, or misdirection)
+    stale_routes: jax.Array   # client ops NACK-redirected at the entry node
+                              # because they were routed under a stale
+                              # partition map (OP_STALE_NACK; excluded from
+                              # replies - the client re-routes and retries)
+    migration_moves: jax.Array  # bucket migrations this chain participated
+                                # in (source or destination; bumped by the
+                                # CP's complete_rebalance, not by the tick)
 
     @staticmethod
     def zeros() -> "Metrics":
         """Scalar counters for one chain (the engine vmaps these over the
         chain axis, yielding [C] leaves)."""
         z = jnp.zeros((), jnp.int32)
-        return Metrics(*([z] * 16))
+        return Metrics(*([z] * 18))
 
     def total(self) -> "Metrics":
         """Reduce per-chain [C] counters to cluster-wide scalars."""

@@ -78,6 +78,7 @@ def node_step(cfg: ChainConfig, store: Store, roles: Roles, inbox: Msg):
         qid=inbox.qid,
         t_inject=inbox.t_inject,
         extra=inbox.extra,
+        ver=inbox.ver,
     ).mask(tail_answers)
 
     # ---------------- READ_REPLY relay back toward the entry node --------
@@ -94,6 +95,7 @@ def node_step(cfg: ChainConfig, store: Store, roles: Roles, inbox: Msg):
         qid=inbox.qid,
         t_inject=inbox.t_inject,
         extra=inbox.extra,
+        ver=inbox.ver,
     ).mask(is_reply)
 
     # ---------------- WRITE: overwrite + propagate ----------------
@@ -118,6 +120,7 @@ def node_step(cfg: ChainConfig, store: Store, roles: Roles, inbox: Msg):
         qid=inbox.qid,
         t_inject=inbox.t_inject,
         extra=inbox.extra,
+        ver=inbox.ver,
     ).mask(fwd_write | fwd_read)
     # Forwarded reads ride in the same section (op stays READ).
     forwards = forwards._replace(
@@ -145,6 +148,7 @@ def node_step(cfg: ChainConfig, store: Store, roles: Roles, inbox: Msg):
         qid=inbox.qid,
         t_inject=inbox.t_inject,
         extra=inbox.extra,
+        ver=inbox.ver,
     ).mask(wr_mask)
 
     outbox = Msg.concat([replies, forwards, relays, wreplies])

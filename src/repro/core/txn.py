@@ -227,6 +227,7 @@ def head_txn_stage(locks: LockTable, roles: Roles, stores, inbox: Msg):
         qid=flat.qid,
         t_inject=flat.t_inject,
         extra=flat.extra,
+        ver=flat.ver,
     ).mask(reply_mask)
 
     # ---- inbox edit: keep non-txn traffic plus validated commits (their
@@ -292,15 +293,34 @@ class TxnPlanner:
     reply decoding); all per-query processing stays in the data plane.
     Single-chain transactions take the fast path: plain reads/writes in one
     batch, no PREPARE round (``is_single_chain``).
+
+    Under a live (rebalanced) partition map, pass the owning
+    ``Coordinator``: the planner then splits transactions with the CP's
+    *current* map and stamps its epoch into every sub-op, so the data
+    plane NACK-redirects sub-ops planned against a map that has since
+    moved instead of locking keys on the wrong chain.
     """
 
-    def __init__(self, cfg: ChainConfig | ClusterConfig, qid_base: int = 1 << 24):
+    def __init__(self, cfg: ChainConfig | ClusterConfig, qid_base: int = 1 << 24,
+                 coordinator=None):
         self.cluster = as_cluster(cfg)
         self._next_qid = qid_base
+        self._coordinator = coordinator
 
     # -- partition-map splitting -------------------------------------------
+    def _key_to_chain(self, key: int) -> int:
+        if self._coordinator is not None:
+            return self._coordinator.key_to_chain(key)
+        return int(self.cluster.key_to_chain(key))
+
+    @property
+    def _epoch(self) -> int:
+        if self._coordinator is not None:
+            return self._coordinator.partition_epoch
+        return 0
+
     def chains_of(self, txn: Txn) -> list[int]:
-        return sorted({int(self.cluster.key_to_chain(k)) for k in txn.keys})
+        return sorted({self._key_to_chain(k) for k in txn.keys})
 
     def is_single_chain(self, txn: Txn) -> bool:
         return len(self.chains_of(txn)) == 1
@@ -332,6 +352,7 @@ class TxnPlanner:
             qid=jnp.asarray(arr(4, -1)),
             t_inject=jnp.zeros((Q,), jnp.int32),
             extra=jnp.zeros((Q,), jnp.int32),
+            ver=jnp.full((Q,), self._epoch, jnp.int32),
         )
         return jax.tree.map(lambda x: x[None], m)  # [T=1, Q]
 
@@ -464,7 +485,11 @@ class TxnDriver:
     def _inject(self, state, stream):
         from repro.core.workload import route_stream
 
-        routed = route_stream(self.planner.cluster, stream, self.sim.c_in)
+        co = self.planner._coordinator
+        routed = route_stream(
+            self.planner.cluster, stream, self.sim.c_in,
+            pmap=co.partition_map() if co is not None else None,
+        )
         assert int(routed.dropped) == 0, (
             f"txn stream overflowed injection lanes ({int(routed.dropped)} "
             "sub-ops dropped) - shrink the wave or grow inject_capacity"
@@ -546,10 +571,20 @@ def serial_order(results: list[TxnResult]) -> list[int]:
 
 def committed_view(cluster: ClusterConfig, state, node: int = -1) -> dict:
     """{global_key: committed value} read from every chain's store (default:
-    the physical tail slot).  Call after a drain, when all replicas agree."""
+    the physical tail slot).  Call after a drain, when all replicas agree.
+
+    The inverse goes through the state's live ``PartitionMap`` occupancy
+    table (``ClusterConfig.global_key`` - the one canonical inverse), so
+    rebalanced buckets read from wherever they currently live; free
+    regions (no bucket) are skipped."""
     vals = np.asarray(state.stores.values)[:, node, :, 0, 0]  # [C, K]
-    out = {}
-    for c in range(cluster.n_chains):
-        for lk in range(cluster.chain.num_keys):
-            out[int(cluster.global_key(lk, c))] = int(vals[c, lk])
-    return out
+    C, K = vals.shape
+    chains = np.repeat(np.arange(C), K)
+    slots = np.tile(np.arange(K), C)
+    gks = np.asarray(cluster.global_key(
+        jnp.asarray(slots), jnp.asarray(chains), state.pmap))
+    return {
+        int(g): int(vals[c, s])
+        for g, c, s in zip(gks, chains, slots)
+        if g >= 0
+    }

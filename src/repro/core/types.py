@@ -51,6 +51,12 @@ OP_PREPARE_NACK = 9
 OP_COMMIT = 10
 OP_ABORT = 11
 OP_TXN_REPLY = 12
+# Client op routed under a stale partition map (its epoch stamp is older
+# than the last migration that touched the slot it addresses, or it targets
+# a slot no bucket currently occupies).  The entry node consumes the op and
+# replies OP_STALE_NACK (seq == -1): the client refetches the map from the
+# CP and re-routes - the op never reaches the lock stage or the store.
+OP_STALE_NACK = 13
 
 OP_NAMES = {
     OP_NOP: "NOP",
@@ -66,6 +72,7 @@ OP_NAMES = {
     OP_COMMIT: "COMMIT",
     OP_ABORT: "ABORT",
     OP_TXN_REPLY: "TXN_REPLY",
+    OP_STALE_NACK: "STALE_NACK",
 }
 
 
@@ -118,6 +125,10 @@ class Msg(NamedTuple):
     t_inject: jax.Array  # [B] int32 tick the query entered the system
     extra: jax.Array     # [B] int32 accumulated extra hop-ticks (multi-hop
                          #     unicast delivered in one sim tick)
+    ver: jax.Array       # [B] int32 partition-map epoch the client routed
+                         #     under (stamped by the router; the entry node
+                         #     NACK-redirects ops older than the last move
+                         #     that touched their slot - see PartitionMap)
 
     @property
     def batch(self) -> int:
@@ -138,6 +149,7 @@ class Msg(NamedTuple):
             qid=z - 1,
             t_inject=z,
             extra=z,
+            ver=z,
         )
 
     def mask(self, keep: jax.Array) -> "Msg":
@@ -161,6 +173,7 @@ class Msg(NamedTuple):
             qid=i32(jnp.where(keep, self.qid, -1)),
             t_inject=i32(jnp.where(keep, self.t_inject, 0)),
             extra=i32(jnp.where(keep, self.extra, 0)),
+            ver=i32(jnp.where(keep, self.ver, 0)),
         )
 
     def live(self) -> jax.Array:
@@ -197,44 +210,188 @@ class ChainConfig:
         return 4 * self.value_words
 
 
+class PartitionMap(NamedTuple):
+    """Versioned, data-driven bucket->chain partition table (the TurboKV-
+    style in-network directory): the answer to "who owns global key g" is
+    *state*, not arithmetic, so the CP can move key ranges between chains
+    on a running cluster without recompiling anything.
+
+    The global key space is carved into ``num_buckets`` buckets (a bucket =
+    one home chain's contiguous block of ``bucket_slots`` register slots);
+    ``owner``/``base`` say which chain currently serves each bucket and at
+    which register offset.  ``epoch`` is bumped by the CP on every
+    migration; clients stamp the epoch of the map they routed under into
+    ``Msg.ver``, and the data plane compares it against ``slot_epoch`` (the
+    epoch of the last move that changed a slot's occupancy) - so traffic
+    from stale clients is NACK-redirected *only* where the map actually
+    changed, and unmoved buckets keep serving stale-but-consistent clients.
+
+    All leaves are plain int32 arrays with shapes fixed by the config, so
+    installing a new map on a running engine (``install_partition``) is a
+    pure state swap: zero recompiles, exactly like the ``Roles`` table.
+    """
+
+    owner: jax.Array        # [G] int32 chain currently serving each bucket
+    base: jax.Array         # [G] int32 first register slot of the bucket
+                            #     within the owner chain's store
+    epoch: jax.Array        # [] int32 map version (bumped per migration)
+    slot_bucket: jax.Array  # [C, K] int32 bucket occupying each (chain,
+                            #     slot) register; -1 = free region
+    slot_epoch: jax.Array   # [C, K] int32 epoch of the last migration that
+                            #     changed this slot's occupancy (0 = never)
+
+    @staticmethod
+    def build(owner, base, epoch, *, n_chains: int, num_keys: int,
+              bucket_slots: int, slot_epoch=None) -> "PartitionMap":
+        """Assemble a map from its primary columns, deriving the [C, K]
+        reverse occupancy table (``slot_bucket``) by scattering each
+        bucket's slot range into its owner chain's row."""
+        owner = jnp.asarray(owner, jnp.int32)
+        base = jnp.asarray(base, jnp.int32)
+        G = owner.shape[0]
+        j = jnp.arange(bucket_slots, dtype=jnp.int32)
+        rows = jnp.repeat(owner, bucket_slots)
+        cols = (base[:, None] + j[None, :]).reshape(-1)
+        ids = jnp.repeat(jnp.arange(G, dtype=jnp.int32), bucket_slots)
+        flat = jnp.full((n_chains * num_keys,), -1, jnp.int32)
+        flat = flat.at[rows * num_keys + cols].set(ids)
+        if slot_epoch is None:
+            slot_epoch = jnp.zeros((n_chains, num_keys), jnp.int32)
+        return PartitionMap(
+            owner=owner,
+            base=base,
+            epoch=jnp.asarray(epoch, jnp.int32),
+            slot_bucket=flat.reshape(n_chains, num_keys),
+            slot_epoch=jnp.asarray(slot_epoch, jnp.int32),
+        )
+
+
 @dataclasses.dataclass(frozen=True)
 class ClusterConfig:
     """Static configuration of a multi-chain cluster.
 
     ``n_chains`` *virtual chains* partition a global key space of
-    ``n_chains * chain.num_keys`` keys (NetChain §II.A / the paper's
-    multi-node scaling scenario): chain ``c`` owns every global key with
-    ``key % n_chains == c`` and stores it at register index
-    ``key // n_chains``.  Chains are fully independent in the data plane -
-    disjoint key ranges, disjoint stores, disjoint routing fabrics - which
-    is exactly what makes the throughput scale with ``n_chains``.
+    ``n_chains * keys_in_use`` keys (NetChain §II.A / the paper's
+    multi-node scaling scenario).  The *home* coordinates of global key
+    ``g`` are chain ``g % n_chains``, register slot ``g // n_chains`` -
+    and under the default (epoch-0) ``PartitionMap`` that is exactly where
+    the key lives, reproducing the seed modulo map bit-for-bit.  Chains
+    are fully independent in the data plane - disjoint key ranges,
+    disjoint stores, disjoint routing fabrics - which is exactly what
+    makes the throughput scale with ``n_chains``.
 
-    The partition map here is the single source of truth: the control plane
-    (``Coordinator``), the workload router and the tests all delegate to it.
+    Rebalancing granularity: each chain's in-use register file is carved
+    into ``buckets_per_chain`` contiguous buckets of ``bucket_slots``
+    slots; a bucket is the unit the CP migrates between chains
+    (``Coordinator.begin_rebalance``).  ``spare_keys`` registers per chain
+    are kept out of the key space as landing regions for in-migrated
+    buckets - with the default 0 the cluster has no rebalancing headroom
+    and the map is static.
+
+    The partition map is the single source of truth: the control plane
+    (``Coordinator``), the workload router, the transaction planner and
+    the cluster kernels all answer "who owns key g" through it.  The
+    map-less overloads (``pmap=None``) are the static home map - callers
+    holding a live ``PartitionMap`` must pass it.
     """
 
     chain: ChainConfig = dataclasses.field(default_factory=ChainConfig)
     n_chains: int = 1
+    buckets_per_chain: int = 1
+    spare_keys: int = 0
 
     def __post_init__(self):
         assert self.n_chains >= 1, "cluster needs at least one chain"
+        assert 0 <= self.spare_keys < self.chain.num_keys, (
+            "spare_keys must leave at least one in-use register"
+        )
+        assert self.buckets_per_chain >= 1
+        assert self.keys_in_use % self.buckets_per_chain == 0, (
+            f"{self.keys_in_use} in-use registers do not divide into "
+            f"{self.buckets_per_chain} equal buckets"
+        )
 
     # -- key partition map (global key space <-> per-chain registers) ------
     @property
+    def keys_in_use(self) -> int:
+        """Registers per chain that carry keys (the rest is spare room)."""
+        return self.chain.num_keys - self.spare_keys
+
+    @property
+    def bucket_slots(self) -> int:
+        """Register slots per bucket (the migration unit's width)."""
+        return self.keys_in_use // self.buckets_per_chain
+
+    @property
+    def num_buckets(self) -> int:
+        return self.n_chains * self.buckets_per_chain
+
+    @property
     def num_global_keys(self) -> int:
-        return self.n_chains * self.chain.num_keys
+        return self.n_chains * self.keys_in_use
 
-    def key_to_chain(self, key):
-        """Owning chain of a global key (array- and int-friendly)."""
-        return key % self.n_chains
+    def bucket_of(self, key):
+        """Bucket id of a global key (array- and int-friendly; fixed home
+        arithmetic - a bucket's *membership* never changes, only its
+        placement)."""
+        return (key % self.n_chains) * self.buckets_per_chain + (
+            key // self.n_chains
+        ) // self.bucket_slots
 
-    def local_key(self, key):
+    def bucket_home(self, bucket):
+        """(home chain, home base slot) of a bucket - its epoch-0 spot."""
+        return (
+            bucket // self.buckets_per_chain,
+            (bucket % self.buckets_per_chain) * self.bucket_slots,
+        )
+
+    def default_partition(self) -> PartitionMap:
+        """The epoch-0 map: every bucket at home (== the seed modulo map:
+        chain ``g % C``, slot ``g // C``)."""
+        b = jnp.arange(self.num_buckets, dtype=jnp.int32)
+        return PartitionMap.build(
+            owner=b // self.buckets_per_chain,
+            base=(b % self.buckets_per_chain) * self.bucket_slots,
+            epoch=0,
+            n_chains=self.n_chains,
+            num_keys=self.chain.num_keys,
+            bucket_slots=self.bucket_slots,
+        )
+
+    def key_to_chain(self, key, pmap: "PartitionMap | None" = None):
+        """Owning chain of a global key (array- and int-friendly).
+
+        With a ``pmap`` the answer is a bucket-table gather; without one
+        it is the static home map (``key % n_chains``)."""
+        if pmap is None:
+            return key % self.n_chains
+        return jnp.asarray(pmap.owner)[self.bucket_of(key)]
+
+    def key_to_slot(self, key, pmap: "PartitionMap | None" = None):
         """Register index of a global key within its owning chain."""
-        return key // self.n_chains
+        if pmap is None:
+            return key // self.n_chains
+        return jnp.asarray(pmap.base)[self.bucket_of(key)] + (
+            key // self.n_chains
+        ) % self.bucket_slots
 
-    def global_key(self, local, chain):
-        """Inverse of (key_to_chain, local_key)."""
-        return local * self.n_chains + chain
+    def local_key(self, key, pmap: "PartitionMap | None" = None):
+        """Alias of ``key_to_slot`` (the pre-rebalancing name)."""
+        return self.key_to_slot(key, pmap)
+
+    def global_key(self, local, chain, pmap: "PartitionMap | None" = None):
+        """Inverse of (key_to_chain, key_to_slot): the global key stored at
+        register ``local`` of ``chain``.  With a ``pmap`` the inverse goes
+        through the occupancy table and returns -1 for free slots."""
+        if pmap is None:
+            return local * self.n_chains + chain
+        b = jnp.asarray(pmap.slot_bucket)[chain, local]
+        bc = jnp.clip(b, 0, self.num_buckets - 1)
+        within = local - jnp.asarray(pmap.base)[bc]
+        g = (
+            (bc % self.buckets_per_chain) * self.bucket_slots + within
+        ) * self.n_chains + bc // self.buckets_per_chain
+        return jnp.where(b < 0, -1, g)
 
     # -- delegated wire-format properties ----------------------------------
     @property

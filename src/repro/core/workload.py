@@ -85,8 +85,9 @@ def make_schedule(cfg: ChainConfig | ClusterConfig, wl: WorkloadConfig) -> Msg:
 
     shape = (T, C, n, q)
     # Chain-local keys; the implied global key is local * C + chain, i.e.
-    # exactly the keys the partition map assigns to this chain.
-    keys = _sample_keys(k_key, shape, chain_cfg.num_keys, wl)
+    # exactly the keys the home map assigns to this chain (spare landing
+    # regions beyond keys_in_use carry no keys and are never sampled).
+    keys = _sample_keys(k_key, shape, cluster.keys_in_use, wl)
     is_write = jax.random.uniform(k_op, shape) < wl.write_fraction
     vals = jax.random.randint(k_val, shape, 1, 1 << 20, jnp.int32)
 
@@ -126,6 +127,10 @@ def make_schedule(cfg: ChainConfig | ClusterConfig, wl: WorkloadConfig) -> Msg:
         qid=jnp.where(active, qid, -1),
         t_inject=tick_idx * jnp.ones_like(op),
         extra=z,
+        # make_schedule generates lanes under the HOME map by construction
+        # (epoch 0); clusters running a rebalanced map must route a global
+        # stream through route_stream with the live PartitionMap instead.
+        ver=z,
     )
     if squeeze:
         sched = jax.tree.map(lambda x: x[:, 0], sched)
@@ -141,10 +146,21 @@ class RoutedStream(NamedTuple):
     dropped: jax.Array    # [] int32 total queries not packed
     out_of_range: jax.Array  # [] int32 subset of ``dropped`` whose key has
                              #    no owning register (outside the key space)
+    stale: jax.Array      # [] int32 queries the live map's admission check
+                          #    will NACK-redirect: the slot they target
+                          #    (under the client's ``pmap``) has moved
+                          #    since the client's epoch (``slot_epoch``
+                          #    newer, or no bucket there) - the exact
+                          #    predicate the entry node applies.  They are
+                          #    still packed to wherever the stale map says
+                          #    - faithfully modelling a stale client - but
+                          #    counted here so benchmarks never mistake
+                          #    them for served load
 
 
 def route_stream(
-    cluster: ClusterConfig, stream: Msg, queries_per_node: int
+    cluster: ClusterConfig, stream: Msg, queries_per_node: int,
+    pmap=None, live_pmap=None,
 ) -> RoutedStream:
     """Pack a flat client stream into per-chain injection lanes.
 
@@ -157,6 +173,14 @@ def route_stream(
     not be packed - keys outside the global key space and lane-capacity
     overflow (the benchmarks size lanes with headroom, but the count makes
     any loss explicit).
+
+    ``pmap`` is the CLIENT's view of the versioned partition map (``None``
+    = the static epoch-0 home map); its epoch is stamped into every lane's
+    ``ver`` field.  Pass the authoritative map as ``live_pmap`` to model
+    clients routing during a migration: queries whose key has moved since
+    ``pmap`` are counted in ``RoutedStream.stale`` (they still go to the
+    old owner, which NACK-redirects them - see the partition-epoch rules
+    in ``core/chain.py``).
     """
     T, Q = stream.op.shape
     C, n, q = cluster.n_chains, cluster.n_nodes, queries_per_node
@@ -166,9 +190,29 @@ def route_stream(
     in_range = (stream.key >= 0) & (stream.key < cluster.num_global_keys)
     live = offered & in_range
     n_out_of_range = jnp.sum(offered & ~in_range)
-    owner = jnp.where(live, cluster.key_to_chain(stream.key), C)  # C = parked
-    local = cluster.local_key(stream.key)
-    stream = stream._replace(key=jnp.where(live, local, 0))
+    gkey = jnp.where(live, stream.key, 0)
+    owner = jnp.where(live, cluster.key_to_chain(gkey, pmap), C)  # C = parked
+    local = cluster.key_to_slot(gkey, pmap)
+    epoch = jnp.asarray(0 if pmap is None else pmap.epoch, jnp.int32)
+    if live_pmap is None:
+        n_stale = jnp.zeros((), jnp.int32)
+    else:
+        # Mirror the entry node's admission predicate exactly (see
+        # stale_route_admission): the (chain, slot) the CLIENT targets is
+        # checked against the LIVE map's per-slot move epoch and
+        # occupancy.  Comparing placements instead would undercount - a
+        # bucket migrated away and later back to a recycled region keeps
+        # its old placement yet still NACKs clients whose epoch predates
+        # the round trip.
+        oc = jnp.clip(owner, 0, C - 1)
+        lc = jnp.clip(local, 0, cluster.chain.num_keys - 1)
+        se = jnp.asarray(live_pmap.slot_epoch)[oc, lc]
+        sb = jnp.asarray(live_pmap.slot_bucket)[oc, lc]
+        n_stale = jnp.sum(live & ((epoch < se) | (sb < 0)))
+    stream = stream._replace(
+        key=jnp.where(live, local, 0),
+        ver=jnp.where(live, epoch, stream.ver),
+    )
 
     def pack_tick(msgs: Msg, owner_row: jax.Array):
         # Stable sort by owning chain (parked NOPs sort last as chain C).
@@ -222,6 +266,7 @@ def route_stream(
         lanes=lanes,
         dropped=dropped_per_tick.sum().astype(jnp.int32),
         out_of_range=n_out_of_range.astype(jnp.int32),
+        stale=n_stale.astype(jnp.int32),
     )
 
 
@@ -262,7 +307,9 @@ def make_txn_workload(cfg: ChainConfig | ClusterConfig,
     from repro.core.txn import Txn
 
     cluster = as_cluster(cfg)
-    C, K = cluster.n_chains, cluster.chain.num_keys
+    # sample within the in-use key space: spare landing regions beyond
+    # keys_in_use carry no keys (mirrors make_schedule)
+    C, K = cluster.n_chains, cluster.keys_in_use
     kpt = min(twl.keys_per_txn, cluster.num_global_keys)
     rng = np.random.default_rng(twl.seed)
     txns = []

@@ -201,6 +201,199 @@ def cluster_read_engine(
     )(values, seqs, pending, keys)
 
 
+def _read_kernel_bucketed(
+    values_ref,   # [1, TK, V, W] int32 (chain-sliced block)
+    seqs_ref,     # [1, TK, V]    int32
+    pending_ref,  # [1, TK]       int32
+    slots_ref,    # [TB]          int32 register slot per query (map gather)
+    chains_ref,   # [TB]          int32 owning chain per query (map gather)
+    clean_val_ref,   # [TB, W] int32 out
+    clean_seq_ref,   # [TB]    int32 out
+    latest_val_ref,  # [TB, W] int32 out
+    latest_seq_ref,  # [TB]    int32 out
+    pending_out_ref, # [TB]    int32 out
+    *,
+    tk: int,
+):
+    """Partition-map read lookup: grid (C, key_tiles, query_tiles) over a
+    FLAT global-key batch.  The modulo chain-select of the home map is
+    replaced by the bucket-gather the caller performed (``chains``/
+    ``slots`` come from the PartitionMap tables), and the chain grid row
+    contributes only to the queries it currently owns - so a rebalanced
+    bucket's queries are served from wherever the map says it lives."""
+    c = pl.program_id(0)
+    kt = pl.program_id(1)
+
+    @pl.when((c == 0) & (kt == 0))
+    def _init():
+        clean_val_ref[...] = jnp.zeros_like(clean_val_ref)
+        clean_seq_ref[...] = jnp.zeros_like(clean_seq_ref)
+        latest_val_ref[...] = jnp.zeros_like(latest_val_ref)
+        latest_seq_ref[...] = jnp.zeros_like(latest_seq_ref)
+        pending_out_ref[...] = jnp.zeros_like(pending_out_ref)
+
+    # chain-mask the lookup: a slot of -1 matches no tile row, so foreign
+    # queries add exact zeros to every partial sum
+    mine = chains_ref[...] == c
+    keys = jnp.where(mine, slots_ref[...], -1)
+    cv, cs, lv, ls, pb = _read_tile(
+        values_ref[0], seqs_ref[0], pending_ref[0], keys, kt, tk=tk
+    )
+    clean_val_ref[...] += cv
+    clean_seq_ref[...] += cs
+    latest_val_ref[...] += lv
+    latest_seq_ref[...] += ls
+    pending_out_ref[...] += pb
+
+
+def bucketed_read_engine(
+    values: jax.Array,   # [C, K, V, W]
+    seqs: jax.Array,     # [C, K, V]
+    pending: jax.Array,  # [C, K]
+    slots: jax.Array,    # [B] register slot per query (PartitionMap gather)
+    chains: jax.Array,   # [B] owning chain per query (PartitionMap gather)
+    *,
+    tk: int = DEFAULT_TK,
+    tb: int = DEFAULT_TB,
+    interpret: bool = True,
+):
+    """Batched read lookup for a flat *global-key* batch resolved through
+    the versioned partition map (the bucket-gather that replaces the home
+    map's modulo): query i is served by chain ``chains[i]`` at register
+    ``slots[i]``, wherever the CP last migrated its bucket.  Returns
+    (clean_val [B,W], clean_seq [B], latest_val [B,W], latest_seq [B],
+    pending_of_key [B])."""
+    C, K, V, W = values.shape
+    B = slots.shape[0]
+    tk = min(tk, K)
+    tb = min(tb, B)
+    assert K % tk == 0 and B % tb == 0, (K, tk, B, tb)
+    assert chains.shape == slots.shape
+
+    grid = (C, K // tk, B // tb)
+    kernel = functools.partial(_read_kernel_bucketed, tk=tk)
+    out_shape = (
+        jax.ShapeDtypeStruct((B, W), jnp.int32),
+        jax.ShapeDtypeStruct((B,), jnp.int32),
+        jax.ShapeDtypeStruct((B, W), jnp.int32),
+        jax.ShapeDtypeStruct((B,), jnp.int32),
+        jax.ShapeDtypeStruct((B,), jnp.int32),
+    )
+    bspec_b = lambda: pl.BlockSpec((tb,), lambda c, kt, bt: (bt,))
+    bspec_bw = lambda: pl.BlockSpec((tb, W), lambda c, kt, bt: (bt, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tk, V, W), lambda c, kt, bt: (c, kt, 0, 0)),
+            pl.BlockSpec((1, tk, V), lambda c, kt, bt: (c, kt, 0)),
+            pl.BlockSpec((1, tk), lambda c, kt, bt: (c, kt)),
+            bspec_b(),
+            bspec_b(),
+        ],
+        out_specs=(bspec_bw(), bspec_b(), bspec_bw(), bspec_b(), bspec_b()),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(values, seqs, pending, slots, chains)
+
+
+def _write_kernel_bucketed(
+    rank_ref,     # [B] per-(chain, slot) within-batch rank
+    slots_ref,    # [B]
+    chains_ref,   # [B]
+    wvals_ref,    # [B, W]
+    wseqs_ref,    # [B]
+    active_ref,   # [B]
+    values_in_ref,   # [1, TK, V, W] (aliased)
+    seqs_in_ref,     # [1, TK, V]    (aliased)
+    pending_in_ref,  # [1, TK]       (aliased)
+    values_ref,   # [1, TK, V, W] out
+    seqs_ref,     # [1, TK, V]    out
+    pending_ref,  # [1, TK]       out
+    accepted_ref, # [B]           out
+    *,
+    tk: int,
+    num_versions: int,
+):
+    """Partition-map write engine: grid (C, key_tiles); each chain's grid
+    row applies only the batch entries the map routes to it."""
+    c = pl.program_id(0)
+    kt = pl.program_id(1)
+
+    @pl.when((c == 0) & (kt == 0))
+    def _init():
+        accepted_ref[...] = jnp.zeros_like(accepted_ref)
+
+    mine = (chains_ref[...] == c) & (active_ref[...] > 0)
+    v, s, p, ok = _write_tile(
+        rank_ref[...], slots_ref[...], wvals_ref[...], wseqs_ref[...],
+        mine.astype(jnp.int32), values_in_ref[0], seqs_in_ref[0],
+        pending_in_ref[0], kt, tk=tk, num_versions=num_versions,
+    )
+    values_ref[0] = v
+    seqs_ref[0] = s
+    pending_ref[0] = p
+    accepted_ref[...] += ok
+
+
+def bucketed_write_engine(
+    values: jax.Array,   # [C, K, V, W]
+    seqs: jax.Array,     # [C, K, V]
+    pending: jax.Array,  # [C, K]
+    slots: jax.Array,    # [B] register slot per write (PartitionMap gather)
+    chains: jax.Array,   # [B] owning chain per write (PartitionMap gather)
+    wvals: jax.Array,    # [B, W]
+    wseqs: jax.Array,    # [B]
+    active: jax.Array,   # [B] 0/1
+    rank: jax.Array,     # [B] within-batch same-(chain, slot) rank
+    *,
+    tk: int = DEFAULT_TK,
+    interpret: bool = True,
+):
+    """Append a flat *global-key* write batch resolved through the
+    versioned partition map: entry i lands on chain ``chains[i]`` at
+    register ``slots[i]``.  Returns (values', seqs', pending',
+    accepted [B])."""
+    C, K, V, W = values.shape
+    B = slots.shape[0]
+    tk = min(tk, K)
+    assert K % tk == 0
+    assert chains.shape == slots.shape
+
+    kernel = functools.partial(_write_kernel_bucketed, tk=tk, num_versions=V)
+    out_shape = (
+        jax.ShapeDtypeStruct((C, K, V, W), jnp.int32),
+        jax.ShapeDtypeStruct((C, K, V), jnp.int32),
+        jax.ShapeDtypeStruct((C, K), jnp.int32),
+        jax.ShapeDtypeStruct((B,), jnp.int32),
+    )
+    full_b = lambda: pl.BlockSpec((B,), lambda c, kt: (0,))
+    return pl.pallas_call(
+        kernel,
+        grid=(C, K // tk),
+        in_specs=[
+            full_b(),
+            full_b(),
+            full_b(),
+            pl.BlockSpec((B, W), lambda c, kt: (0, 0)),
+            full_b(),
+            full_b(),
+            pl.BlockSpec((1, tk, V, W), lambda c, kt: (c, kt, 0, 0)),
+            pl.BlockSpec((1, tk, V), lambda c, kt: (c, kt, 0)),
+            pl.BlockSpec((1, tk), lambda c, kt: (c, kt)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, tk, V, W), lambda c, kt: (c, kt, 0, 0)),
+            pl.BlockSpec((1, tk, V), lambda c, kt: (c, kt, 0)),
+            pl.BlockSpec((1, tk), lambda c, kt: (c, kt)),
+            full_b(),
+        ),
+        out_shape=out_shape,
+        input_output_aliases={6: 0, 7: 1, 8: 2},
+        interpret=interpret,
+    )(rank, slots, chains, wvals, wseqs, active, values, seqs, pending)
+
+
 # ---------------------------------------------------------------------------
 # WRITE engine
 # ---------------------------------------------------------------------------

@@ -76,6 +76,84 @@ def cluster_read_batch(store: Store, keys: jax.Array, *, is_tail: bool = False,
     return reply_val, reply_seq, decision
 
 
+# ---------------------------------------------------------------------------
+# Partition-map variants: flat global-key batches resolved through the
+# versioned PartitionMap (the bucket-gather replacing the home-map modulo).
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("cluster", "is_tail", "interpret"))
+def partitioned_read_batch(cluster, store: Store, gkeys: jax.Array, pmap, *,
+                           is_tail: bool = False, interpret: bool = True):
+    """NetCRAQ read decision for a flat batch of *global* keys under a live
+    partition map.
+
+    The owning chain and register slot of each query come from the map's
+    bucket tables (``cluster.key_to_chain/key_to_slot`` with ``pmap``) -
+    NOT from ``key % C`` arithmetic - so the same jitted call serves any
+    epoch of the map: a CP bucket migration re-runs it, never re-traces
+    it.  Keys outside the global key space have no owning register: they
+    are parked (chain -1, matching no grid row) and answer decision -1
+    with zero payload, never clamp-aliasing onto a victim bucket.
+    Returns (reply_val [B,W], reply_seq [B], decision [B], chains [B],
+    slots [B]) with ``craq_read_batch``'s decision codes.
+    """
+    in_range = (gkeys >= 0) & (gkeys < cluster.num_global_keys)
+    safe = jnp.where(in_range, gkeys, 0)
+    chains = jnp.asarray(cluster.key_to_chain(safe, pmap), jnp.int32)
+    chains = jnp.where(in_range, chains, -1)
+    slots = jnp.asarray(cluster.key_to_slot(safe, pmap), jnp.int32)
+    cv, cs, lv, ls, pend = _k.bucketed_read_engine(
+        store.values, store.seqs, store.pending, slots, chains,
+        interpret=interpret,
+    )
+    clean = pend == 0
+    if is_tail:
+        decision = jnp.where(clean, 0, 1)
+        reply_val = jnp.where(clean[..., None], cv, lv)
+        reply_seq = jnp.where(clean, cs, ls)
+    else:
+        decision = jnp.where(clean, 0, 2)
+        reply_val = cv
+        reply_seq = cs
+    decision = jnp.where(in_range, decision, -1)
+    return reply_val, reply_seq, decision, chains, slots
+
+
+@functools.partial(jax.jit, static_argnames=("cluster", "interpret"))
+def partitioned_write_batch(cluster, store: Store, gkeys, wvals, wseqs,
+                            active, pmap, *, interpret: bool = True):
+    """Append a flat *global-key* sequenced write batch under a live
+    partition map (serialization rank computed per (chain, slot) target
+    register, so two writes to the same global key serialize no matter
+    where its bucket currently lives).  Writes whose key falls outside
+    the global key space are dropped (accepted=False) - clamp-aliasing
+    them onto the last bucket would corrupt a victim register.  Returns
+    (store', accepted [B])."""
+    K = store.values.shape[1]
+    in_range = (gkeys >= 0) & (gkeys < cluster.num_global_keys)
+    safe = jnp.where(in_range, gkeys, 0)
+    active = active.astype(bool) & in_range
+    chains = jnp.asarray(cluster.key_to_chain(safe, pmap), jnp.int32)
+    chains = jnp.where(in_range, chains, -1)
+    slots = jnp.asarray(cluster.key_to_slot(safe, pmap), jnp.int32)
+    rank = batch_rank(chains * K + slots, active)
+    values, seqs, pending, accepted = _k.bucketed_write_engine(
+        store.values,
+        store.seqs,
+        store.pending,
+        slots,
+        chains,
+        wvals,
+        wseqs,
+        active.astype(jnp.int32),
+        rank,
+        interpret=interpret,
+    )
+    return (
+        store._replace(values=values, seqs=seqs, pending=pending),
+        accepted.astype(bool),
+    )
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def cluster_write_batch(store: Store, keys, wvals, wseqs, active, *,
                         interpret: bool = True):

@@ -32,6 +32,76 @@ def run_with_devices(code: str, n_devices: int = 8, timeout: int = 540) -> str:
 
 
 # ---------------------------------------------------------------------------
+# Partition-map strategies (used by the round-trip property test in
+# test_partition.py): arbitrary-but-legal epoch tables, not just the seed
+# modulo map.  A legal placement assigns every bucket a distinct
+# bucket-aligned register region on some chain.
+# ---------------------------------------------------------------------------
+def partition_regions(cluster):
+    """Every legal (chain, base) landing region of the cluster: bucket-
+    aligned, bucket-sized windows of each chain's physical register file
+    (spare-tail regions included)."""
+    bsz = cluster.bucket_slots
+    K = cluster.chain.num_keys
+    return [
+        (c, b)
+        for c in range(cluster.n_chains)
+        for b in range(0, K - bsz + 1, bsz)
+    ]
+
+
+def build_partition_map(cluster, placement, epoch: int = 0):
+    """``PartitionMap`` from an explicit bucket -> (chain, base) placement
+    (one distinct region per bucket) - the example source for property
+    tests over arbitrary epoch tables.
+
+    ``slot_epoch`` is stamped ``epoch`` on every slot whose occupancy
+    differs from the epoch-0 home map (the one-step history a real CP
+    would have recorded), so the data plane's and the router's stale
+    checks behave as if the placement were reached by live migrations.
+    """
+    import jax.numpy as jnp
+
+    from repro.core import PartitionMap
+
+    assert len(placement) == cluster.num_buckets
+    assert len(set(placement)) == len(placement), "regions must be distinct"
+    pm = PartitionMap.build(
+        owner=[c for c, _ in placement],
+        base=[b for _, b in placement],
+        epoch=epoch,
+        n_chains=cluster.n_chains,
+        num_keys=cluster.chain.num_keys,
+        bucket_slots=cluster.bucket_slots,
+    )
+    moved = pm.slot_bucket != cluster.default_partition().slot_bucket
+    return pm._replace(
+        slot_epoch=jnp.where(moved, jnp.int32(epoch), jnp.int32(0))
+    )
+
+
+def check_partition_round_trip(cluster, placement):
+    """The round-trip oracle shared by the seeded always-run test
+    (test_partition.py) and the hypothesis twin
+    (test_partition_properties.py): for a legal placement,
+    ``global_key(key_to_slot(g), key_to_chain(g)) == g`` for every key,
+    the occupancy table accounts for exactly the placed slots, and free
+    slots invert to -1."""
+    import numpy as np
+
+    pm = build_partition_map(cluster, placement, epoch=1)
+    g = np.arange(cluster.num_global_keys)
+    owner = cluster.key_to_chain(g, pm)
+    slot = cluster.key_to_slot(g, pm)
+    rt = np.asarray(cluster.global_key(slot, owner, pm))
+    np.testing.assert_array_equal(rt, g)
+    sb = np.asarray(pm.slot_bucket)
+    assert (sb >= 0).sum() == cluster.num_buckets * cluster.bucket_slots
+    for c, s in np.argwhere(sb < 0)[:8]:  # free slots invert to "no key"
+        assert int(cluster.global_key(int(s), int(c), pm)) == -1
+
+
+# ---------------------------------------------------------------------------
 # Shared transactional-serializability harness (used by the seeded fuzz in
 # test_txn.py and the hypothesis property test in
 # test_txn_serializability.py - one checker, two example sources).

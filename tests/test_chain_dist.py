@@ -18,6 +18,7 @@ cfg = ChainConfig(n_nodes=4, num_keys=16, num_versions=4, protocol="netcraq")
 dist = ChainDist(cfg, mesh, axis="chain")
 stores = dist.init_state()
 roles = dist.full_roles()
+pmap = dist.default_pmap()
 B = 8
 step = dist.make_step(B)
 
@@ -33,12 +34,12 @@ def inject(op, key, val, node):
 
 inbox = inject(OP_WRITE, 3, 99, 0)
 for _ in range(8):
-    stores, inbox, replies = step(stores, inbox, roles)
+    stores, inbox, replies = step(stores, inbox, roles, pmap)
 assert stores.values[:, 3, 0, 0].tolist() == [99]*4, stores.values[:, 3, 0, 0]
 assert stores.pending[:, 3].tolist() == [0]*4
 
 inbox = inject(OP_READ, 3, 0, 2)
-stores, inbox, replies = step(stores, inbox, roles)
+stores, inbox, replies = step(stores, inbox, roles, pmap)
 r = jax.device_get(replies)
 live = r.op != 0
 assert live.sum() == 1 and r.value[live][0, 0] == 99, r.value[live]
@@ -62,6 +63,7 @@ mesh = jax.make_mesh((4,), ("chain",))
 cfg = ChainConfig(n_nodes=4, num_keys=16, num_versions=4, protocol="netcraq")
 dist = ChainDist(cfg, mesh, axis="chain")
 stores = dist.init_state()
+pmap = dist.default_pmap()
 B = 8
 step = dist.make_step(B)
 
@@ -81,13 +83,13 @@ roles = jax.tree.map(lambda x: x[0], co.roles_table())  # [n] leaves
 
 inbox = inject(OP_WRITE, 3, 99, 0)
 for _ in range(8):
-    stores, inbox, replies = step(stores, inbox, roles)
+    stores, inbox, replies = step(stores, inbox, roles, pmap)
 assert stores.values[:, 3, 0, 0].tolist() == [99, 0, 99, 99], \\
     stores.values[:, 3, 0, 0]
 assert stores.pending[:, 3].tolist() == [0]*4
 
 inbox = inject(OP_READ, 3, 0, 2)
-stores, inbox, replies = step(stores, inbox, roles)
+stores, inbox, replies = step(stores, inbox, roles, pmap)
 r = jax.device_get(replies)
 live = r.op != 0
 assert live.sum() == 1 and r.value[live][0, 0] == 99, r.value[live]
@@ -111,6 +113,7 @@ dist = ChainDist(ClusterConfig(chain=cfg, n_chains=2), mesh,
                  axis="chain", group_axis="cgroup")
 stores = dist.init_state()
 roles = dist.full_roles()
+pmap = dist.default_pmap()
 B = 8
 step = dist.make_step(B)
 
@@ -128,13 +131,13 @@ def inject(op, key, val, node, chain):
 
 inbox = inject(OP_WRITE, 5, 123, 0, 1)
 for _ in range(8):
-    stores, inbox, replies = step(stores, inbox, roles)
+    stores, inbox, replies = step(stores, inbox, roles, pmap)
 assert stores.values[1, :, 5, 0, 0].tolist() == [123]*4, stores.values[1, :, 5, 0, 0]
 assert stores.values[0, :, 5, 0, 0].tolist() == [0]*4   # chain 0 untouched
 assert int(stores.pending.sum()) == 0
 
 inbox = inject(OP_READ, 5, 0, 2, 1)
-stores, inbox, replies = step(stores, inbox, roles)
+stores, inbox, replies = step(stores, inbox, roles, pmap)
 r = jax.device_get(replies)
 live = r.op != 0
 assert live.sum() == 1 and r.value[live][0, 0] == 123, r.value[live]

@@ -91,6 +91,97 @@ def test_kv_cluster_write_engine_matches_sequential_oracle(C, K, V, W, B,
         np.testing.assert_array_equal(np.asarray(g), np.asarray(e))
 
 
+def test_kv_bucketed_engines_match_cluster_engines_on_home_map():
+    """The map-driven (bucket-gather) kernels reduce to the per-chain
+    cluster kernels when every bucket sits at home: routing the same
+    queries both ways yields identical lookups and identical stores."""
+    C, K, V, W, B = 3, 64, 4, 4, 48
+    values = jnp.asarray(RNG.integers(0, 1 << 20, (C, K, V, W)), jnp.int32)
+    seqs = jnp.asarray(RNG.integers(-1, 100, (C, K, V)), jnp.int32)
+    pending = jnp.asarray(RNG.integers(0, V - 1, (C, K)), jnp.int32)
+    slots = jnp.asarray(RNG.integers(0, K, (B,)), jnp.int32)
+    chains = jnp.asarray(RNG.integers(0, C, (B,)), jnp.int32)
+    got = kv_k.bucketed_read_engine(values, seqs, pending, slots, chains,
+                                    tk=32, tb=16)
+    # reference: per-chain cluster engine on the gathered lanes
+    keys_c = jnp.tile(slots[None], (C, 1))
+    per_chain = kv_k.cluster_read_engine(values, seqs, pending, keys_c,
+                                         tk=32, tb=16)
+    for g, e in zip(got, per_chain):
+        np.testing.assert_array_equal(
+            np.asarray(g), np.asarray(e)[np.asarray(chains),
+                                         np.arange(B)])
+
+
+def test_kv_partitioned_ops_follow_a_migrated_map():
+    """partitioned_write_batch + partitioned_read_batch resolve global keys
+    through the live PartitionMap: after a bucket moves, the same global
+    keys write to and read from the new region, and a same-key collision
+    still serializes (per-(chain, slot) rank)."""
+    from repro.core import ChainConfig, ClusterConfig, PartitionMap
+    from repro.core.store import init_store
+
+    cl = ClusterConfig(
+        chain=ChainConfig(n_nodes=4, num_keys=16, num_versions=4),
+        n_chains=2, buckets_per_chain=2, spare_keys=8,
+    )  # keys_in_use=8, bsz=4, 16 global keys
+    for pm in (
+        cl.default_partition(),
+        # bucket 0 (chain 0 slots 0..3) migrated to chain 1's spare region
+        PartitionMap.build([1, 0, 1, 1], [8, 4, 0, 4], 1, n_chains=2,
+                           num_keys=16, bucket_slots=4),
+    ):
+        store = jax.vmap(lambda _: init_store(cl.chain))(jnp.arange(2))
+        B = 8
+        gkeys = jnp.asarray([0, 0, 2, 3, 5, 7, 9, 15], jnp.int32)
+        wvals = jnp.zeros((B, 4), jnp.int32).at[:, 0].set(
+            jnp.arange(1, B + 1) * 10)
+        wseqs = jnp.arange(1, B + 1, dtype=jnp.int32)
+        active = jnp.ones((B,), jnp.int32)
+        store2, acc = kv_ops.partitioned_write_batch(
+            cl, store, gkeys, wvals, wseqs, active, pm)
+        assert bool(np.asarray(acc).all())
+        rv, rs, dec, chains, slots = kv_ops.partitioned_read_batch(
+            cl, store2, gkeys, pm, is_tail=True)
+        np.testing.assert_array_equal(
+            np.asarray(chains), np.asarray(cl.key_to_chain(gkeys, pm)))
+        np.testing.assert_array_equal(
+            np.asarray(slots), np.asarray(cl.key_to_slot(gkeys, pm)))
+        got = np.asarray(rv[:, 0])
+        # the duplicate g=0 serialized: the tail's latest is the 2nd write
+        assert got[0] == got[1] == 20
+        np.testing.assert_array_equal(got[2:], np.arange(3, B + 1) * 10)
+
+
+def test_kv_partitioned_ops_park_out_of_range_keys():
+    """A key outside the global key space must not clamp-alias onto a
+    victim bucket: writes drop (accepted=False, stores untouched), reads
+    answer decision -1 with zero payload."""
+    from repro.core import ChainConfig, ClusterConfig
+    from repro.core.store import init_store
+
+    cl = ClusterConfig(
+        chain=ChainConfig(n_nodes=4, num_keys=16, num_versions=4),
+        n_chains=2, buckets_per_chain=2, spare_keys=8,
+    )  # 16 global keys
+    pm = cl.default_partition()
+    store = jax.vmap(lambda _: init_store(cl.chain))(jnp.arange(2))
+    gkeys = jnp.asarray([0, 16, -1, 1 << 20], jnp.int32)
+    wvals = jnp.zeros((4, 4), jnp.int32).at[:, 0].set(99)
+    wseqs = jnp.ones((4,), jnp.int32)
+    active = jnp.ones((4,), jnp.int32)
+    store2, acc = kv_ops.partitioned_write_batch(
+        cl, store, gkeys, wvals, wseqs, active, pm)
+    assert np.asarray(acc).tolist() == [True, False, False, False]
+    assert int(store2.pending.sum()) == 1  # only g=0's dirty append landed
+    rv, rs, dec, chains, slots = kv_ops.partitioned_read_batch(
+        cl, store2, gkeys, pm, is_tail=True)
+    assert int(rv[0, 0]) == 99
+    assert np.asarray(dec).tolist()[1:] == [-1, -1, -1]
+    assert np.asarray(rv[1:]).sum() == 0
+    assert np.asarray(chains).tolist()[1:] == [-1, -1, -1]
+
+
 def test_kv_cluster_ops_integration_with_store():
     """cluster_read/write_batch on a [C, ...]-stacked Store: chains stay
     disjoint (a write batch on chain 0 never dirties chain 1)."""

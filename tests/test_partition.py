@@ -1,0 +1,305 @@
+"""Versioned partition map + live key-range rebalancing semantics.
+
+Pins down the refactor of "who owns key g" from compiled-in modulo
+arithmetic to the data-driven ``PartitionMap``:
+
+* default (epoch-0) map == the seed modulo map, and the coordinate
+  round-trip holds for *arbitrary* legal epoch tables (hypothesis);
+* a C=1 single-bucket cluster still reproduces the seed engine
+  bit-for-bit through the new machinery (the PR 1 invariant);
+* live migration: committed values survive the move, fresh clients read
+  from the new owner, stale clients NACK-redirect, untouched buckets
+  keep serving stale clients, zero recompiles, the lock-table version
+  column moves with its bucket;
+* CP guard rails: no landing region / double-begin / undrained locks.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from helpers import (build_partition_map, check_partition_round_trip,
+                     partition_regions)
+from repro.core import (
+    ChainConfig,
+    ChainSim,
+    ClusterConfig,
+    Coordinator,
+    WorkloadConfig,
+    make_schedule,
+)
+from repro.core.types import (
+    CLIENT_BASE,
+    Msg,
+    OP_READ,
+    OP_READ_REPLY,
+    OP_STALE_NACK,
+    OP_WRITE,
+)
+
+
+def _cluster(C=2, num_keys=12, spare=4, bpc=2, n_nodes=3):
+    return ClusterConfig(
+        chain=ChainConfig(n_nodes=n_nodes, num_keys=num_keys, num_versions=4),
+        n_chains=C,
+        buckets_per_chain=bpc,
+        spare_keys=spare,
+    )
+
+
+def _inject_one(sim, op, slot, val, node, chain, qid, ver=0):
+    m = Msg.empty(sim.c_in)
+    m = jax.tree.map(
+        lambda x: jnp.tile(x[None, None], (sim.C, sim.n) + (1,) * x.ndim), m
+    )
+    return m._replace(
+        op=m.op.at[chain, node, 0].set(op),
+        key=m.key.at[chain, node, 0].set(slot),
+        value=m.value.at[chain, node, 0, 0].set(val),
+        src=m.src.at[chain, node, 0].set(CLIENT_BASE + 1),
+        client=m.client.at[chain, node, 0].set(CLIENT_BASE + 1),
+        dst=m.dst.at[chain, node, 0].set(node),
+        qid=m.qid.at[chain, node, 0].set(qid),
+        ver=m.ver.at[chain, node, 0].set(ver),
+    )
+
+
+def _drain(sim, state, ticks):
+    empty = sim.empty_injection()
+    for _ in range(ticks):
+        state = sim.tick(state, empty)
+    return state
+
+
+def _replies(state):
+    r = state.replies.merged()
+    return {int(q): (int(op), int(v))
+            for q, op, v in zip(r.qid, r.op, r.value0)}
+
+
+# ---------------------------------------------------------------------------
+# the map itself
+# ---------------------------------------------------------------------------
+def test_default_map_matches_home_arithmetic():
+    """Epoch 0 == the seed modulo map: with and without an explicit pmap,
+    every coordinate function agrees, and the round-trip closes."""
+    cl = _cluster(C=3, num_keys=10, spare=2, bpc=2)
+    pm = cl.default_partition()
+    g = np.arange(cl.num_global_keys)
+    np.testing.assert_array_equal(np.asarray(cl.key_to_chain(g, pm)), g % 3)
+    np.testing.assert_array_equal(np.asarray(cl.key_to_slot(g, pm)), g // 3)
+    np.testing.assert_array_equal(
+        np.asarray(cl.key_to_chain(g)), np.asarray(cl.key_to_chain(g, pm)))
+    np.testing.assert_array_equal(
+        np.asarray(cl.local_key(g)), np.asarray(cl.key_to_slot(g, pm)))
+    rt = cl.global_key(cl.key_to_slot(g, pm), cl.key_to_chain(g, pm), pm)
+    np.testing.assert_array_equal(np.asarray(rt), g)
+    # spare-tail slots are free: the inverse reports no key there
+    spare_slot = cl.keys_in_use  # first spare register of each chain
+    for c in range(3):
+        assert int(cl.global_key(spare_slot, c, pm)) == -1
+    # the Coordinator serves the same (host-side) map
+    co = Coordinator(cl)
+    assert [co.key_to_chain(int(k)) for k in g] == (g % 3).tolist()
+    assert [co.local_key(int(k)) for k in g] == (g // 3).tolist()
+
+
+def test_round_trip_on_a_fully_scrambled_table():
+    """A handwritten worst case: every bucket placed on a foreign chain in
+    a spare region - the round-trip must still close for every key."""
+    cl = _cluster(C=2, num_keys=12, spare=4, bpc=2)  # bsz=4, G=4
+    # regions: (chain, base) with base in {0, 4, 8}; scramble all buckets
+    placement = [(1, 8), (1, 0), (0, 4), (0, 8)]
+    pm = build_partition_map(cl, placement, epoch=3)
+    g = np.arange(cl.num_global_keys)
+    owner = np.asarray(cl.key_to_chain(g, pm))
+    slot = np.asarray(cl.key_to_slot(g, pm))
+    # ownership follows the table, not the modulo
+    np.testing.assert_array_equal(
+        owner, np.asarray([placement[b][0] for b in np.asarray(cl.bucket_of(g))]))
+    # (chain, slot) is a bijection over the key space
+    assert len(set(zip(owner.tolist(), slot.tolist()))) == cl.num_global_keys
+    rt = np.asarray(cl.global_key(slot, owner, pm))
+    np.testing.assert_array_equal(rt, g)
+
+
+def test_partition_round_trip_on_seeded_random_tables():
+    """Always-run twin of the hypothesis property test (which lives in
+    test_partition_properties.py so its dev-dependency skip cannot take
+    this module down with it): 40 seeded random placements."""
+    cl = _cluster(C=3, num_keys=12, spare=4, bpc=2)  # bsz=4, G=6
+    regions = partition_regions(cl)  # 9 legal regions for 6 buckets
+    rng = np.random.default_rng(11)
+    for _ in range(40):
+        placement = [regions[i] for i in
+                     rng.permutation(len(regions))[: cl.num_buckets]]
+        check_partition_round_trip(cl, placement)
+
+
+# ---------------------------------------------------------------------------
+# C=1 seed equivalence through the refactor (the PR 1 invariant)
+# ---------------------------------------------------------------------------
+def test_single_chain_one_bucket_cluster_reproduces_seed_engine():
+    """A C=1 cluster with the trivial one-bucket map runs the seed
+    single-chain engine bit-for-bit - metrics, stores and reply logs -
+    even with the map explicitly (re)installed."""
+    cfg = ChainConfig(n_nodes=4, num_keys=32, num_versions=4)
+    cl = ClusterConfig(chain=cfg, n_chains=1, buckets_per_chain=1)
+    assert cl.bucket_slots == 32 and cl.num_buckets == 1
+    wl = WorkloadConfig(ticks=4, queries_per_tick=4, write_fraction=0.3,
+                        seed=5)
+    sim = ChainSim(cl, inject_capacity=4, route_capacity=64,
+                   reply_capacity=1024)
+    st_legacy = sim.run(sim.init_state(), make_schedule(cfg, wl),
+                        extra_ticks=12)
+    state = Coordinator(cl).install_partition(sim.init_state())
+    st_cluster = sim.run(state, make_schedule(cl, wl), extra_ticks=12)
+    assert st_legacy.metrics.asdict() == st_cluster.metrics.asdict()
+    for a, b in zip(st_legacy.stores, st_cluster.stores):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(st_legacy.replies, st_cluster.replies):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    m = st_cluster.metrics.asdict()
+    assert m["replies"] == m["reads_in"] + m["writes_in"]
+    assert m["drops"] == 0 and m["stale_routes"] == 0
+
+
+# ---------------------------------------------------------------------------
+# live migration on a running engine
+# ---------------------------------------------------------------------------
+def test_live_migration_moves_bucket_and_redirects_stale_clients():
+    cl = _cluster(C=2, num_keys=8, spare=4, bpc=2, n_nodes=3)  # bsz=2
+    co = Coordinator(cl)
+    sim = ChainSim(cl, inject_capacity=4, route_capacity=64,
+                   reply_capacity=512)
+    state = sim.init_state()
+
+    # commit g=0 (bucket 0: chain 0 slot 0) and g=1 (chain 1 slot 0)
+    state = sim.tick(state, _inject_one(sim, OP_WRITE, 0, 777, 0, 0, qid=1))
+    state = sim.tick(state, _inject_one(sim, OP_WRITE, 0, 888, 0, 1, qid=2))
+    state = _drain(sim, state, 8)
+    assert int(state.stores.pending.sum()) == 0
+    compiles0 = ChainSim.tick._cache_size()
+
+    # freeze -> (writes NACK, reads serve) -> copy+publish
+    src, dst = co.begin_rebalance(0, 1)
+    assert (src, dst) == (0, 1)
+    state = co.install_roles(state)
+    state = _drain(sim, state, 2)
+    state = co.complete_rebalance(state)
+    assert co.partition_epoch == 1
+    assert co.bucket_placement(0) == (1, cl.keys_in_use)  # landing region
+    assert co.key_to_chain(0) == 1 and co.local_key(0) == cl.keys_in_use
+
+    # fresh client reads g=0 at its new home; untouched g=1 still serves a
+    # STALE client (its bucket never moved -> slot_epoch stayed 0)
+    state = sim.tick(state, _inject_one(
+        sim, OP_READ, cl.keys_in_use, 0, 2, 1, qid=3, ver=1))
+    state = sim.tick(state, _inject_one(sim, OP_READ, 0, 0, 1, 1, qid=4,
+                                        ver=0))
+    state = _drain(sim, state, 6)
+    # stale client still aiming at the OLD owner region NACKs
+    state = sim.tick(state, _inject_one(sim, OP_READ, 0, 0, 1, 0, qid=5,
+                                        ver=0))
+    # fresh client aiming at a free slot (nobody owns it) NACKs too
+    state = sim.tick(state, _inject_one(sim, OP_READ, 0, 0, 1, 0, qid=6,
+                                        ver=1))
+    state = _drain(sim, state, 6)
+
+    recs = _replies(state)
+    assert recs[3] == (OP_READ_REPLY, 777)
+    assert recs[4] == (OP_READ_REPLY, 888)
+    assert recs[5][0] == OP_STALE_NACK and recs[6][0] == OP_STALE_NACK
+    m = state.metrics.asdict()
+    assert m["stale_routes"] == 2
+    assert state.metrics.per_chain()["migration_moves"] == [1, 1]
+    assert ChainSim.tick._cache_size() == compiles0, (
+        "migration recompiled the data path"
+    )
+    # the freed region was reset: no key, clean registers
+    assert int(cl.global_key(0, 0, state.pmap)) == -1
+    np.testing.assert_array_equal(
+        np.asarray(state.stores.values)[0, :, 0:2], 0)
+
+
+def test_migration_freeze_nacks_writes_and_preserves_reads():
+    # keys_in_use=4, bpc=1 -> one 4-slot bucket per chain, one 4-slot
+    # landing region in the spare tail
+    cl = _cluster(C=2, num_keys=8, spare=4, bpc=1, n_nodes=3)
+    co = Coordinator(cl)
+    sim = ChainSim(cl, inject_capacity=4, route_capacity=64,
+                   reply_capacity=512)
+    state = sim.init_state()
+    state = sim.tick(state, _inject_one(sim, OP_WRITE, 2, 111, 0, 0, qid=1))
+    state = _drain(sim, state, 8)
+
+    co.begin_rebalance(0, 1)
+    state = co.install_roles(state)
+    # during the freeze: writes to the source chain NACK, reads serve
+    state = sim.tick(state, _inject_one(sim, OP_WRITE, 3, 222, 0, 0, qid=2))
+    state = sim.tick(state, _inject_one(sim, OP_READ, 2, 0, 1, 0, qid=3))
+    state = _drain(sim, state, 6)
+    recs = _replies(state)
+    from repro.core.types import OP_WRITE_NACK
+    assert recs[2][0] == OP_WRITE_NACK
+    assert recs[3] == (OP_READ_REPLY, 111)
+    state = co.complete_rebalance(state)
+    # committed value moved; the NACKed write never landed anywhere
+    base = co.bucket_placement(0)[1]
+    assert int(np.asarray(state.stores.values)[1, -1, base + 2, 0, 0]) == 111
+    view_vals = np.asarray(state.stores.values)
+    assert (view_vals[:, :, :, 0, 0] == 222).sum() == 0
+
+
+def test_rebalance_guard_rails():
+    cl = _cluster(C=2, num_keys=8, spare=0, bpc=2, n_nodes=3)
+    co = Coordinator(cl)
+    with pytest.raises(AssertionError, match="free landing region"):
+        co.begin_rebalance(0, 1)
+
+    cl2 = _cluster(C=2, num_keys=8, spare=4, bpc=2, n_nodes=3)
+    co2 = Coordinator(cl2)
+    sim = ChainSim(cl2, inject_capacity=4, route_capacity=64,
+                   reply_capacity=128)
+    state = sim.init_state()
+    co2.begin_rebalance(0, 1)
+    with pytest.raises(AssertionError, match="still open"):
+        co2.begin_rebalance(1, 1)
+    # the chain-wide freeze flag is shared with node recovery: opening a
+    # recovery window over the migration's freeze would let whichever
+    # completes first silently unfreeze the other's copy window
+    with pytest.raises(AssertionError, match="migration"):
+        co2.begin_recovery(0)
+    # an undrained lock on the source chain refuses the copy
+    locked = state._replace(
+        locks=state.locks._replace(holder=state.locks.holder.at[0, 1].set(9)))
+    with pytest.raises(AssertionError, match="locks"):
+        co2.complete_rebalance(locked)
+    # once drained, the same move completes and unfreezes the source
+    state = co2.complete_rebalance(state)
+    assert co2.partition_epoch == 1
+    assert not co2.chains[0].writes_frozen
+    # and with the migration closed a recovery window opens normally
+    co2.begin_recovery(0)
+    assert co2.chains[0].writes_frozen
+    # ... whose freeze in turn blocks a new migration on that chain
+    with pytest.raises(AssertionError, match="frozen"):
+        co2.begin_rebalance(1, 1)
+
+
+def test_migration_carries_lock_version_column():
+    """The per-key commit-version counter (the txn snapshot coordinate)
+    travels with its bucket and the freed region resets to zero."""
+    cl = _cluster(C=2, num_keys=8, spare=4, bpc=2, n_nodes=3)  # bsz=2
+    co = Coordinator(cl)
+    sim = ChainSim(cl, inject_capacity=4, route_capacity=64,
+                   reply_capacity=128)
+    state = sim.init_state()
+    ver = state.locks.version.at[0, 0].set(7).at[0, 1].set(5)
+    state = state._replace(locks=state.locks._replace(version=ver))
+    co.begin_rebalance(0, 1)
+    state = co.complete_rebalance(co.install_roles(state))
+    base = co.bucket_placement(0)[1]
+    v = np.asarray(state.locks.version)
+    assert v[1, base] == 7 and v[1, base + 1] == 5
+    assert v[0, 0] == 0 and v[0, 1] == 0

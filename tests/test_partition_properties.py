@@ -1,0 +1,35 @@
+"""Hypothesis-driven partition-map round-trip property (core/types.py).
+
+The acceptance criterion for the versioned partition map: for ANY legal
+placement of buckets onto bucket-aligned register regions - not just the
+seed modulo map - the coordinate round-trip
+``global_key(key_to_slot(g), key_to_chain(g)) == g`` closes for every
+global key, the occupancy table accounts for exactly the placed slots,
+and free regions invert to "no key".  The checker (and a seeded
+always-run twin) lives in tests/helpers.py / tests/test_partition.py;
+this module only contributes the example source, so it skips alone when
+the hypothesis dev dependency is absent.
+"""
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the hypothesis dev dependency"
+)
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from helpers import check_partition_round_trip, partition_regions  # noqa: E402
+from repro.core import ChainConfig, ClusterConfig  # noqa: E402
+
+_PROP_CLUSTER = ClusterConfig(
+    chain=ChainConfig(n_nodes=3, num_keys=12, num_versions=4),
+    n_chains=3,
+    buckets_per_chain=2,
+    spare_keys=4,
+)  # bsz=4, G=6 buckets
+_REGIONS = partition_regions(_PROP_CLUSTER)  # 9 legal regions for 6 buckets
+
+
+@settings(max_examples=150, deadline=None)
+@given(perm=st.permutations(_REGIONS))
+def test_partition_round_trip_holds_for_arbitrary_epoch_tables(perm):
+    check_partition_round_trip(_PROP_CLUSTER, perm[: _PROP_CLUSTER.num_buckets])

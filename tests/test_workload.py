@@ -128,6 +128,71 @@ def test_routed_stream_full_drop_stream():
     assert not (np.asarray(routed.lanes.op) != OP_NOP).any()
 
 
+def test_routed_stream_counts_stale_epochs_during_migration():
+    """Adversarial stale-client routing: with the client's cached map one
+    epoch behind the live map, every live in-range query whose bucket
+    moved is counted in ``RoutedStream.stale`` EXACTLY - not silently
+    served by the old owner - while it still packs to the old owner's
+    lanes with the stale epoch stamped, so the engine can NACK it.
+    Out-of-range keys and NOPs never count as stale."""
+    from helpers import build_partition_map
+
+    cl = ClusterConfig(
+        chain=ChainConfig(n_nodes=4, num_keys=12, num_versions=4),
+        n_chains=3, buckets_per_chain=2, spare_keys=4,
+    )  # keys_in_use=8, bsz=4, G=6, 24 global keys
+    b = np.arange(cl.num_buckets)
+    home = list(zip(b // 2, (b % 2) * 4))
+    old_pm = build_partition_map(cl, home, epoch=0)
+    # live map: bucket 0 migrated from chain 0 to chain 2's spare region
+    moved = list(home)
+    moved[0] = (2, 8)
+    live_pm = build_partition_map(cl, moved, epoch=1)
+
+    rng = np.random.default_rng(3)
+    T, Q = 3, 32
+    keys = rng.integers(-4, 30, size=(T, Q))
+    ops = rng.choice([OP_READ, OP_WRITE, OP_NOP], size=(T, Q),
+                     p=[0.5, 0.3, 0.2])
+    stream = _stream(ops, keys)
+    live = (ops != OP_NOP) & (keys >= 0) & (keys < cl.num_global_keys)
+    moved_keys = [g for g in range(cl.num_global_keys)
+                  if int(cl.bucket_of(g)) == 0]
+    in_moved_bucket = live & np.isin(keys, moved_keys)
+    expected_stale = int(in_moved_bucket.sum())
+    assert expected_stale > 0  # the draw must exercise the moved bucket
+
+    routed = route_stream(cl, stream, queries_per_node=Q, pmap=old_pm,
+                          live_pmap=live_pm)
+    assert int(routed.stale) == expected_stale
+    lanes = jax.tree.map(np.asarray, routed.lanes)
+    packed = lanes.op != OP_NOP
+    # stale queries still land on the OLD owner (chain 0), stamped epoch 0
+    moved_qids = set(np.asarray(stream.qid)[in_moved_bucket].tolist())
+    packed_chains = np.broadcast_to(
+        np.arange(3)[None, :, None, None], lanes.op.shape)
+    for q, c, v in zip(lanes.qid[packed], packed_chains[packed],
+                       lanes.ver[packed]):
+        assert int(v) == 0
+        if int(q) in moved_qids:
+            assert int(c) == 0
+    # a fresh client (live map) routes the same stream with zero stale and
+    # sends the moved bucket to its new owner with the new epoch
+    fresh = route_stream(cl, stream, queries_per_node=Q, pmap=live_pm,
+                         live_pmap=live_pm)
+    assert int(fresh.stale) == 0
+    lanes2 = jax.tree.map(np.asarray, fresh.lanes)
+    packed2 = lanes2.op != OP_NOP
+    for q, c, v in zip(lanes2.qid[packed2], packed_chains[packed2],
+                       lanes2.ver[packed2]):
+        assert int(v) == 1
+        if int(q) in moved_qids:
+            assert int(c) == 2
+    # identical loss accounting either way (staleness is not loss)
+    assert int(fresh.dropped) == int(routed.dropped)
+    assert int(fresh.out_of_range) == int(routed.out_of_range)
+
+
 # ---------------------------------------------------------------------------
 # transactional generator knobs
 # ---------------------------------------------------------------------------
@@ -157,3 +222,17 @@ def test_make_txn_workload_respects_knobs():
         n_txns=10, keys_per_txn=2, cross_chain_fraction=1.0, seed=3))
     assert all(len({int(cl.key_to_chain(k)) for k in t.keys}) == 2
                for t in all_cross)
+
+
+def test_make_txn_workload_stays_inside_spare_key_space():
+    """With spare landing regions the global key space shrinks below
+    C * num_keys; the generator must never emit a key without an owning
+    register (it would alias onto a victim bucket or crash the planner)."""
+    cl = ClusterConfig(
+        chain=ChainConfig(n_nodes=4, num_keys=16, num_versions=4),
+        n_chains=2, buckets_per_chain=2, spare_keys=8,
+    )  # 16 global keys, not 32
+    txns = make_txn_workload(cl, TxnWorkloadConfig(
+        n_txns=60, keys_per_txn=3, cross_chain_fraction=0.5, seed=2))
+    keys = [k for t in txns for k in t.keys]
+    assert 0 <= min(keys) and max(keys) < cl.num_global_keys
