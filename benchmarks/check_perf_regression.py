@@ -1,0 +1,170 @@
+"""Perf-trajectory guard: fresh BENCH_*.json vs the committed baseline.
+
+ROADMAP's "as fast as the hardware allows" is only meaningful against a
+recorded trajectory.  ``benchmarks/perf_baseline.json`` pins the reference
+numbers (regenerate with ``python -m benchmarks.check_perf_regression
+--update`` after an *intentional* perf change and commit the result);
+nightly CI runs the harness, then this checker, and fails when a guarded
+metric regressed by more than ``tolerance`` (default 1.5x - wide enough
+for runner-to-runner variance, tight enough to catch a superlinear
+fabric sneaking back in).
+
+Guarded metrics:
+
+* ``BENCH_tick_cost.json``: the SUM of us_per_tick over the whole
+  *segmented*-fabric sweep (the production engine; the dense arm is the
+  frozen pre-PR baseline and only its speedup ratio matters).  The sweep
+  total is the guard, not per-config points: single configs on shared CI
+  hosts show throttling-window noise near the tolerance itself, while
+  the total - ~30 timed windows spread over many minutes - averages it
+  out.  Per-config numbers are still recorded in the BENCH file and
+  printed here as unguarded context.  Plus the headline dense/segmented
+  speedup at C=16, n=8 (must not drop below the figure's own 3x floor -
+  a ratio, so host-speed independent).
+* ``BENCH_engine.json``: us_per_query of both protocol engines.  These
+  double as the same-run host-speed probe: the tick-cost tolerance is
+  scaled by the (clamped) engine-metric ratio to the pinned values, so a
+  systematically slower/faster runner class shifts probe and subject
+  together instead of failing every absolute gate with no code change.
+
+Usage:
+    python -m benchmarks.check_perf_regression            # check (CI)
+    python -m benchmarks.check_perf_regression --update   # re-pin baseline
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+BASELINE = os.path.join(os.path.dirname(__file__), "perf_baseline.json")
+
+
+def _rows(bench_path: str) -> dict:
+    with open(bench_path) as f:
+        payload = json.load(f)
+    return {r["name"]: r for r in payload["rows"]}
+
+
+def collect(out_dir: str = ".") -> dict:
+    """Extract the guarded metrics from fresh BENCH_*.json records."""
+    metrics = {}
+    tick = _rows(os.path.join(out_dir, "BENCH_tick_cost.json"))
+    sweep_total = 0.0
+    for name, row in tick.items():
+        if name.endswith("/segmented"):
+            sweep_total += row["data"]["us_per_tick"]
+    metrics["tick_cost/segmented_sweep_total:us"] = sweep_total
+    head = tick["tick_cost/headline_speedup"]["data"]
+    # a ratio: larger is better, guard the floor not a multiple
+    metrics["tick_cost/headline_speedup:min"] = head["speedup"]
+    engine = _rows(os.path.join(out_dir, "BENCH_engine.json"))
+    for name, row in engine.items():
+        metrics[f"{name}:us_per_query"] = row["data"]["us_per_query"]
+    return metrics
+
+
+def context(out_dir: str = ".") -> dict:
+    """Unguarded per-config context printed next to the verdicts."""
+    tick = _rows(os.path.join(out_dir, "BENCH_tick_cost.json"))
+    return {
+        name: row["data"]["us_per_tick"]
+        for name, row in tick.items() if name.endswith("/segmented")
+    }
+
+
+def _host_factor(base: dict, fresh: dict) -> float:
+    """How much slower/faster this host is than the pinning host, probed
+    from the engine us_per_query metrics measured in the SAME run.  The
+    tick-cost tolerance is scaled by it (clamped to [0.5, 2] so a truly
+    broken engine can't normalize its own regression away): a runner
+    class change then shifts both probe and subject together instead of
+    turning nightly red with zero code change.  The engine metrics
+    themselves stay absolute - they ARE the probe; if the host class
+    changes for good, re-pin with --update from a CI-runner artifact
+    (the failure message says so)."""
+    ratios = [
+        fresh[name] / ref
+        for name, ref in base["metrics"].items()
+        if name.endswith(":us_per_query") and name in fresh
+    ]
+    if not ratios:
+        return 1.0
+    # geometric mean: one noisy probe cannot widen the guard the way a
+    # max (or upper "median" of two) would
+    gm = 1.0
+    for r in ratios:
+        gm *= r
+    gm **= 1.0 / len(ratios)
+    return min(max(gm, 0.5), 2.0)
+
+
+def check(out_dir: str = ".") -> int:
+    with open(BASELINE) as f:
+        base = json.load(f)
+    tol = base["tolerance"]
+    fresh = collect(out_dir)
+    host = _host_factor(base, fresh)
+    print(f"host speed factor vs pinning host: {host:.2f}x "
+          "(engine us_per_query probe; scales the tick-cost tolerance)")
+    failures, missing = [], []
+    for name, ref in base["metrics"].items():
+        if name not in fresh:
+            missing.append(name)
+            continue
+        val = fresh[name]
+        if name.endswith(":min"):
+            ok = val >= base["floors"][name]
+            verdict = f">= {base['floors'][name]}"
+        else:
+            eff = tol * (host if name.startswith("tick_cost/") else 1.0)
+            ok = val <= eff * ref
+            verdict = f"<= {eff:.2f}x baseline {ref:.1f}"
+        status = "ok" if ok else "REGRESSION"
+        print(f"{status:10s} {name}: {val:.2f} (want {verdict})")
+        if not ok:
+            failures.append(name)
+    for name in fresh:
+        if name not in base["metrics"]:
+            print(f"unguarded  {name}: {fresh[name]:.2f} (not in baseline - "
+                  "run --update to pin it)")
+    for name, val in context(out_dir).items():
+        print(f"context    {name}: {val:.0f} us/tick")
+    if missing:
+        print(f"MISSING baseline metrics not produced: {missing}")
+        failures += missing
+    if failures:
+        print(f"\n{len(failures)} perf regression(s) vs "
+              "benchmarks/perf_baseline.json.  If the RUNNER class changed "
+              "(not the code), re-pin from this run's BENCH artifacts: "
+              "python -m benchmarks.check_perf_regression --update")
+        return 1
+    print("\nperf trajectory clean")
+    return 0
+
+
+def update(out_dir: str = ".") -> None:
+    fresh = collect(out_dir)
+    floors = {k: round(v, 2) for k, v in fresh.items() if k.endswith(":min")}
+    payload = {
+        "comment": ("committed perf baseline - regenerate with "
+                    "`python -m benchmarks.check_perf_regression --update` "
+                    "after an intentional perf change"),
+        "tolerance": 1.5,
+        "floors": floors,
+        "metrics": {k: round(v, 2) for k, v in fresh.items()},
+    }
+    # ratio floors guard an absolute minimum, not a baseline multiple:
+    # pin them at the figure's own target, not at the measured value
+    payload["floors"]["tick_cost/headline_speedup:min"] = 3.0
+    with open(BASELINE, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"baseline re-pinned at {BASELINE} ({len(fresh)} metrics)")
+
+
+if __name__ == "__main__":
+    if "--update" in sys.argv:
+        update()
+    else:
+        sys.exit(check())

@@ -13,6 +13,22 @@ Measured vs modeled split (EXPERIMENTS.md documents this per figure):
 Queueing (Fig 4) uses M/D/1 waiting time per visited node with the
 protocol's routing deciding each node's utilisation - under CR all reads
 hit the tail (the hot spot), under CRAQ load spreads.
+
+Tick cost (the engine's own trajectory)
+---------------------------------------
+``BENCH_tick_cost.json`` (benchmarks/fig_tick_cost.py) records MEASURED
+wall-clock us/tick of the cluster engine itself over C x n x load, for
+both routers: ``segmented`` (production - ONE sort of the flat outbox
+keyed by (destination, original index), O(M log M) per chain) and
+``dense`` (the frozen pre-segmented engine - [n, M] delivery matrix +
+per-node argsort + O(B^2) txn ranking + scatter-per-field reply logging,
+O(n * M log M)).  Row ``data`` fields: ``fabric``, ``n_chains``,
+``n_nodes``, ``q_per_node``, ``us_per_tick``, ``ticks_per_sec``; the
+``.../speedup`` rows carry the dense/segmented ratio and
+``tick_cost/headline_speedup`` pins the C=16, n=8 acceptance target
+(>= 3x).  Nightly CI diffs these records (and BENCH_engine
+us_per_query) against benchmarks/perf_baseline.json and fails on a
+>1.5x regression - see benchmarks/check_perf_regression.py.
 """
 from __future__ import annotations
 
@@ -97,13 +113,18 @@ def measure_engine_us_per_query(proto: str = "netcraq", n_nodes: int = 4,
 
 
 def replies_stats(state):
-    """Reply-log view for analysis - merges per-chain logs into one."""
+    """Reply-log view for analysis - merges per-chain logs into one.
+
+    ``ticks_in_flight`` is t_done - t_inject per reply; in the
+    tick-synchronous engine one tick in flight == one pipeline pass
+    (KV or relay - the figures split the two via the protocol's routing).
+    """
     r = state.replies.merged()
     n = int(r.cursor)
     return {
         "n": n,
         "hops": np.asarray(r.hops),
-        "procs": np.asarray(r.procs),
+        "ticks_in_flight": np.asarray(r.ticks_in_flight),
         "op": np.asarray(r.op),
     }
 

@@ -24,17 +24,18 @@ def run(n_nodes: int = 4):
             cfg, sim, state = run_workload(proto, n_nodes, entry=entry)
             st = replies_stats(state)
             reads = st["op"] == OP_READ_REPLY
-            procs = float(st["procs"][reads].mean())
-            # relay passes (CR reply retracing) = total passes minus the
+            # one tick in flight == one pipeline pass (see replies_stats);
+            # relay passes (CR reply retracing) = total minus the
             # forward-path KV passes
-            kv_passes = min(procs, dist + 1.0)
-            relay = max(procs - kv_passes, 0.0)
+            passes = float(st["ticks_in_flight"][reads].mean())
+            kv_passes = min(passes, dist + 1.0)
+            relay = max(passes - kv_passes, 0.0)
             qps = throughput_qps(cfg, kv_passes, relay)
             qps_by_distance.append(qps)
             rows.append(BenchRow(
                 name=f"fig3/{proto}/dist{dist}",
                 us_per_call=1e6 / qps,
-                derived=f"qps={qps:,.0f};procs={procs:.1f}",
+                derived=f"qps={qps:,.0f};passes={passes:.1f}",
             ))
         table[proto] = qps_by_distance
     # headline: head-directed read speedup (paper: 4.08x on 4 nodes)

@@ -24,16 +24,17 @@ def run(n_nodes: int = 4, loads=(1_000, 5_000, 10_000, 20_000, 50_000)):
         st = replies_stats(state)
         reads = st["op"] == OP_READ_REPLY
         hops = float(st["hops"][reads].mean())
-        procs = float(st["procs"][reads].mean())
+        # one tick in flight == one pipeline pass (see replies_stats)
+        passes = float(st["ticks_in_flight"][reads].mean())
         tp = t_pass_us(cfg.header_bytes)
-        base_us = hops * T_HOP_US + procs * tp
+        base_us = hops * T_HOP_US + passes * tp
         latencies[proto] = []
         for lam in loads:
             # BMv2 testbed: all emulated switches share one host CPU, so a
             # query's total pipeline passes all compete for it.  CR burns
             # ~2n-1 passes per read; CRAQ burns 1 - CR saturates the host
             # an order of magnitude earlier (the paper's Fig 4 cliff).
-            kv_passes = procs if proto == "netchain" else 1.0
+            kv_passes = passes if proto == "netchain" else 1.0
             wait = md1_wait_us(lam, kv_passes * tp)
             lat = base_us + wait
             latencies[proto].append(lat)

@@ -21,10 +21,11 @@ def run(lengths=(4, 5, 6, 7, 8)):
             cfg, sim, state = run_workload(proto, n_nodes, entry=0)
             st = replies_stats(state)
             reads = st["op"] == OP_READ_REPLY
-            procs = float(st["procs"][reads].mean())
+            # one tick in flight == one pipeline pass (see replies_stats)
+            passes = float(st["ticks_in_flight"][reads].mean())
             dist = n_nodes - 1
-            kv_passes = min(procs, dist + 1.0)
-            relay = max(procs - kv_passes, 0.0)
+            kv_passes = min(passes, dist + 1.0)
+            relay = max(passes - kv_passes, 0.0)
             q = throughput_qps(cfg, kv_passes, relay)
             qps[proto].append(q)
             rows.append(BenchRow(

@@ -34,13 +34,16 @@ def _fixed_per_chain(chains=(1, 2, 4, 8), proto="netcraq"):
         st = replies_stats(state)
         m = state.metrics.asdict()
         reads = st["op"] == OP_READ_REPLY
-        procs = float(st["procs"][reads].mean()) if reads.any() else 1.0
-        # KV passes vs free reply relays, as in fig3/fig6: reads spread
-        # uniformly, so a CR read visits mean-distance-to-tail + 1 pipelines
-        # ((n-1)/2 + 1); the rest of the measured ticks are IP reply relays.
+        passes = (
+            float(st["ticks_in_flight"][reads].mean()) if reads.any() else 1.0
+        )
+        # KV passes vs free reply relays, as in fig3/fig6 (one tick in
+        # flight == one pipeline pass): reads spread uniformly, so a CR
+        # read visits mean-distance-to-tail + 1 pipelines ((n-1)/2 + 1);
+        # the rest of the measured ticks are IP reply relays.
         exp_kv = (cluster.n_nodes - 1) / 2 + 1
-        kv_passes = min(procs, exp_kv)
-        relay = max(procs - kv_passes, 0.0)
+        kv_passes = min(passes, exp_kv)
+        relay = max(passes - kv_passes, 0.0)
         # aggregate service-limited throughput: C independent pipelines
         agg_qps = C * throughput_qps(cluster.chain, kv_passes, relay)
         if base is None:

@@ -1,0 +1,129 @@
+"""Engine tick cost: segmented-sort fabric vs the pre-PR dense router.
+
+The simulator itself must be scale-friendly, or the cost of *simulating*
+the paper's scale-free design grows superlinearly in cluster size and caps
+the C x n x q sweeps we can run (TurboKV-style multi-switch scenarios need
+C >> 8).  The pre-segmented engine's tick was O(C * n * M log M): a dense
+[n, M] delivery matrix plus a per-node argsort over the whole flat outbox,
+an O(B^2) same-key bitmatrix in the head's transaction stage and
+scatter-per-field reply logging.  The rewrite
+(``core/chain.py::segmented_route`` + friends) is O(C * M log M): one
+segmented sort keyed by (destination, original index), binary-searched
+inbox placement, sort-based ranking, pointer-gather logging - bit-identical
+outputs (property-tested in tests/test_fabric.py).
+
+This figure measures MEASURED wall-clock us/tick of both engines over
+C in {1, 4, 16, 64} x n in {4, 8} x load q in {8, 32}, and asserts the
+headline: >= 3x (``TARGET_SPEEDUP``) at C=16, n=8, at every measured
+load.  ``BENCH_tick_cost.json`` is
+the perf trajectory every future PR is measured against - nightly CI
+compares it (and the engine us_per_query) to the committed baseline in
+``benchmarks/perf_baseline.json`` and fails on a >1.5x regression
+(benchmarks/check_perf_regression.py).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks.common import BenchRow
+from repro.core import ChainConfig, ChainSim, ClusterConfig, WorkloadConfig
+from repro.core.workload import make_schedule
+
+TARGET_SPEEDUP = 3.0       # acceptance headline at C=16, n=8
+HEADLINE = (16, 8)         # (C, n) combo the assertion pins
+
+SWEEP_C = (1, 4, 16, 64)
+SWEEP_N = (4, 8)
+SWEEP_Q = (8, 32)
+
+
+def measure_tick_us(fabric: str, C: int, n: int, q: int, *,
+                    repeats: int = 3, iters: int = 8,
+                    route_capacity: int = 256) -> float:
+    """Median-of-``repeats`` wall-clock microseconds per jitted cluster
+    tick under a mixed read/write load (median tames scheduler noise on
+    shared CI hosts; the tick is compiled and warmed before timing)."""
+    cluster = ClusterConfig(
+        chain=ChainConfig(n_nodes=n, num_keys=64, num_versions=6),
+        n_chains=C,
+    )
+    sim = ChainSim(cluster, inject_capacity=q, route_capacity=route_capacity,
+                   reply_capacity=4096, fabric=fabric)
+    state = sim.init_state()
+    wl = WorkloadConfig(ticks=1, queries_per_tick=q, write_fraction=0.2,
+                        entry_node=None, seed=0)
+    inj = jax.tree.map(lambda x: x[0], make_schedule(cluster, wl))
+    state = sim.tick(state, inj)  # compile + warm
+    jax.block_until_ready(state.metrics.packets)
+    samples = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            state = sim.tick(state, inj)
+        jax.block_until_ready(state.metrics.packets)
+        samples.append((time.perf_counter() - t0) / iters * 1e6)
+    samples.sort()
+    return samples[len(samples) // 2]
+
+
+def run() -> list[BenchRow]:
+    rows = []
+    speedups = {}
+    for n in SWEEP_N:
+        for C in SWEEP_C:
+            for q in SWEEP_Q:
+                # keep the giant configs affordable: the dense arm at C=64
+                # is exactly the superlinear blowup this figure documents
+                iters = 8 if C <= 16 else 3
+                us = {}
+                for fabric in ("dense", "segmented"):
+                    us[fabric] = measure_tick_us(fabric, C, n, q, iters=iters)
+                    rows.append(BenchRow(
+                        name=f"tick_cost/C{C}_n{n}_q{q}/{fabric}",
+                        us_per_call=us[fabric],
+                        derived=(f"{1e6 / us[fabric]:,.1f} ticks/s;"
+                                 f"{C * n * q / us[fabric]:,.2f} q/us"),
+                        data={
+                            "fabric": fabric,
+                            "n_chains": C, "n_nodes": n, "q_per_node": q,
+                            "us_per_tick": us[fabric],
+                            "ticks_per_sec": 1e6 / us[fabric],
+                        },
+                    ))
+                speedup = us["dense"] / us["segmented"]
+                speedups[(C, n, q)] = speedup
+                rows.append(BenchRow(
+                    name=f"tick_cost/C{C}_n{n}_q{q}/speedup",
+                    us_per_call=0.0,
+                    derived=f"{speedup:.2f}x dense/segmented",
+                    data={"n_chains": C, "n_nodes": n, "q_per_node": q,
+                          "speedup": speedup},
+                ))
+                print(f"tick_cost C={C} n={n} q={q}: "
+                      f"dense {us['dense']:.0f}us "
+                      f"segmented {us['segmented']:.0f}us "
+                      f"({speedup:.2f}x)", flush=True)
+
+    C, n = HEADLINE
+    # min over the load sweep: the target must hold at EVERY measured
+    # load of the headline config, not just the friendliest one
+    head = min(speedups[(C, n, q)] for q in SWEEP_Q)
+    assert head >= TARGET_SPEEDUP, (
+        f"segmented fabric speedup {head:.2f}x at C={C}, n={n} misses the "
+        f"{TARGET_SPEEDUP}x target - the engine regressed"
+    )
+    rows.append(BenchRow(
+        name="tick_cost/headline_speedup",
+        us_per_call=0.0,
+        derived=f"{head:.2f}x at C={C},n={n} (target {TARGET_SPEEDUP}x)",
+        data={"speedup": head, "target": TARGET_SPEEDUP,
+              "n_chains": C, "n_nodes": n},
+    ))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

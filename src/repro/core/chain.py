@@ -9,6 +9,16 @@ fabric only ever delivers within a chain; a single-chain cluster reproduces
 the seed engine's counts bit-for-bit.  This is the engine behind the
 paper-figure benchmarks and the consistency tests.
 
+The routing fabric is a **single segmented stable sort** of the flat
+per-chain outbox keyed by ``(destination, original index)``
+(``segmented_route``): O(M log M) per tick instead of the original
+delivery-matrix router's O(n * M log M), with bit-identical inboxes, drop
+counts and hop/packet accounting (the original is kept as ``dense_route``,
+the equivalence oracle and benchmark baseline - see
+benchmarks/fig_tick_cost.py).  ``tick`` donates the state buffers and
+``run`` drains through one fused ``lax.scan``, so a tick allocates no new
+cluster state and the drain pays one dispatch, not sixteen.
+
 ``ChainDist`` - the production engine: one chain node per device along a
 named mesh axis under ``shard_map``.  Write propagation uses
 ``jax.lax.ppermute`` (one ICI hop per chain hop, exactly the paper's
@@ -202,6 +212,278 @@ def full_roles_table(n_nodes: int, n_chains: int) -> Roles:
     )
 
 
+# ---------------------------------------------------------------------------
+# Routing fabric
+# ---------------------------------------------------------------------------
+# Both fabrics implement the same delivery contract over a flat [M] outbox:
+# a live unicast message lands in its destination's inbox, a MULTICAST
+# message lands in every live node's inbox except its sender's (multicast
+# copies carry their per-recipient hop cost in ``extra``), each inbox keeps
+# its deliveries in flat-outbox order (per-destination FIFO) truncated to
+# ``c_route`` slots, and per-node overflow is counted.  They return
+# ``(routed [n, c_route], dropped [n], mcast_copies, mcast_hop_sum)`` with
+# bit-identical contents - ``dense_route`` is the original O(n*M log M)
+# reference (one delivery matrix plus a per-node argsort over the whole
+# outbox), ``segmented_route`` the O(M log M) production fabric (one
+# segmented sort; see its docstring).  Contract: ``c_route <= M`` (the
+# engine's outbox is always several times wider than the inbox it
+# re-fills).  The equivalence is property-tested in tests/test_fabric.py
+# and benchmarked in benchmarks/fig_tick_cost.py.
+
+def fabric_masks(flat: Msg, alive: jax.Array):
+    """Classify a flat outbox: (is_unicast, is_mcast, is_exit, dead_letters).
+
+    ``dead_letters`` are lost traffic: unicast addressed to a dead node, or
+    orphaned entirely (dst == NOWHERE, e.g. a CR reply retracing past a dead
+    entry node runs off the head) - they must show up in drop accounting.
+    """
+    n = alive.shape[0]
+    live = flat.op != OP_NOP
+    in_range = (flat.dst >= 0) & (flat.dst < n)
+    dst_alive = alive[jnp.clip(flat.dst, 0, n - 1)]
+    is_mcast = live & (flat.dst == MULTICAST)
+    is_exit = live & (flat.dst == TO_CLIENT)
+    is_unicast = live & in_range & dst_alive
+    dead_letters = (live & in_range & ~dst_alive) | (
+        live & ~in_range & ~is_mcast & ~is_exit
+    )
+    return is_unicast, is_mcast, is_exit, dead_letters
+
+
+def dense_route(flat: Msg, alive: jax.Array, chain_pos: jax.Array,
+                c_route: int):
+    """The pre-segmented reference fabric: materialize the full [n, M]
+    delivery matrix, then per node gather + ``argsort(~mask, stable=True)``
+    compaction.  Kept as the equivalence oracle for the property tests and
+    the old-vs-new baseline in benchmarks/fig_tick_cost.py - the production
+    engine uses ``segmented_route``.
+    """
+    n = alive.shape[0]
+    is_unicast, is_mcast, _, _ = fabric_masks(flat, alive)
+    node_ids = jnp.arange(n, dtype=jnp.int32)[:, None]
+    # per-destination delivery masks [n, M]; multicast (the PRE) fans out
+    # only to the chain's *live* members (the CP pruned the group)
+    deliver = (
+        (is_unicast & (flat.dst[None, :] == node_ids))
+        | (is_mcast[None, :] & (flat.src[None, :] != node_ids))
+    ) & alive[:, None]
+    pos_of = lambda i: chain_pos[jnp.clip(i, 0, n - 1)]
+    mcast_hops = jnp.abs(chain_pos[:, None] - pos_of(flat.src)[None, :])
+    mcast_deliver = deliver & is_mcast[None, :]
+    mcast_copies = jnp.sum(mcast_deliver)
+    mcast_hop_sum = jnp.sum(jnp.where(mcast_deliver, mcast_hops, 0))
+
+    def gather_for(node_id):
+        m = deliver[node_id]
+        hop_add = jnp.where(is_mcast, mcast_hops[node_id], 0)
+        msg = flat._replace(extra=flat.extra + hop_add).mask(m)
+        order = jnp.argsort(~m, stable=True)
+        msg = jax.tree.map(lambda x: x[order][:c_route], msg)
+        dropped = jnp.maximum(m.sum() - c_route, 0)
+        return msg, dropped
+
+    routed, dropped = jax.vmap(gather_for)(node_ids[:, 0])
+    return routed, dropped, mcast_copies, mcast_hop_sum
+
+
+def segmented_route(flat: Msg, alive: jax.Array, chain_pos: jax.Array,
+                    c_route: int, mcast_lane: int | None = None):
+    """The production fabric: ONE stable sort of the flat [M] outbox keyed
+    by ``(destination segment, original index)`` replaces the [n, M]
+    delivery matrix and the n per-node argsorts - O(M log M) total.
+
+    The composite key puts every unicast message in its destination's
+    segment, every MULTICAST message in one shared segment and everything
+    else (exits, dead letters, NOPs) in a sink, with the original flat
+    index as the tie-break - so after one sort the per-destination runs are
+    contiguous *and* in flat-outbox order (the same per-destination FIFO
+    the dense fabric's ``argsort(~mask, stable=True)`` produced).  Unicast
+    runs scatter straight into the ``[n, c_route]`` inbox; their slot also
+    counts the multicast messages delivered ahead of them (a searchsorted
+    against the multicast segment), so the interleaving is exact.
+
+    Multicast is the one genuinely one-to-many part: its copies are
+    materialized from a bounded ``mcast_lane`` slice of the multicast
+    segment (hop accounting batched per copy through the same segment
+    arithmetic).  A lane of ``c_route + max_per_source`` is exact, because
+    a copy can only displace lane entries from its own source's exclusion:
+    the engine passes ``c_route + M // n`` (every outbox message carries
+    ``src == emitting node``, so one source contributes at most its own
+    outbox width).  Callers feeding adversarial ``src`` fields (the
+    property tests) pass ``mcast_lane=M``.  Drop counts never depend on the
+    lane - they come from exact segment-length arithmetic.
+    """
+    n = alive.shape[0]
+    M = flat.op.shape[0]
+    L = M if mcast_lane is None else min(M, mcast_lane)
+    is_unicast, is_mcast, _, _ = fabric_masks(flat, alive)
+    idx = jnp.arange(M, dtype=jnp.int32)
+    i32 = jnp.int32
+
+    # ---- the one sort: segment = dst | mcast(n) | sink(n+1) --------------
+    # The composite key already carries the payload: its low half IS the
+    # original index, so a plain value sort replaces an argsort (the
+    # (key, iota) pair sort costs several times more on most backends)
+    # and ``skey % M`` recovers the permutation.
+    seg = jnp.where(is_unicast, flat.dst, jnp.where(is_mcast, n, n + 1))
+    key = seg.astype(i32) * M + idx
+    skey = jnp.sort(key)      # unique keys -> total (stable) order
+    order = skey % M
+    # segment boundaries: [seg_start[i], seg_start[i+1]) is node i's
+    # unicast run; [seg_start[n], seg_start[n+1]) is the multicast run.
+    seg_start = jnp.searchsorted(
+        skey, jnp.arange(n + 2, dtype=i32) * M
+    ).astype(i32)
+    m_mc = seg_start[n + 1] - seg_start[n]
+
+    # ---- per-source multicast index (for the src != node exclusion) ------
+    src_ok = (flat.src >= 0) & (flat.src < n)
+    src_key = jnp.where(
+        is_mcast & src_ok, flat.src.astype(i32) * M + idx, i32(n) * M
+    )
+    src_key = jnp.sort(src_key)
+    src_start = jnp.searchsorted(
+        src_key, jnp.arange(n + 1, dtype=i32) * M
+    ).astype(i32)
+
+    # counts by segment arithmetic (no delivery matrix anywhere):
+    #   mcast with original index < f            -> 1D prefix count
+    #   mcast with original index < f, src == i  -> searchsorted(src seg i)
+    #   unicast to i with original index < f     -> searchsorted(uni seg i)
+    mc_cum = jnp.cumsum(is_mcast.astype(i32))
+
+    def mc_before(f):
+        return mc_cum[f] - is_mcast[f].astype(i32)
+
+    def mc_src_before(i, f):
+        return jnp.searchsorted(src_key, i * M + f).astype(i32) - src_start[i]
+
+    def uni_before(i, f):
+        return jnp.searchsorted(skey, i * M + f).astype(i32) - seg_start[i]
+
+    # The inbox is built WITHOUT any batch scatter: each delivery's slot
+    # is strictly increasing along its run, so the (row, slot) -> source
+    # map is itself a sorted sequence and every output slot can *binary
+    # search* its source instead (scatters serialize on most backends;
+    # searches and gathers vectorize).
+
+    # ---- unicast placement: slot of sorted entry j in its row ------------
+    j = jnp.arange(M, dtype=i32)
+    sdst = skey // M          # segment of sorted slot j
+    sidx = skey % M           # original flat index of sorted slot j
+    is_uni_j = sdst < n
+    dc = jnp.clip(sdst, 0, n - 1)
+    pos_u = (j - seg_start[dc]) + mc_before(sidx) - mc_src_before(dc, sidx)
+    # (row, slot) placement key; strictly increasing over unicast entries
+    # (rows ascend, slots ascend within a row), sink for everything else -
+    # non-unicast sorted entries already sit at the tail, keeping it sorted
+    S = M + 1
+    place_u = jnp.where(is_uni_j, dc * S + jnp.minimum(pos_u, M), n * S)
+
+    # ---- multicast placement: bounded lane, one copy per (node, entry) ---
+    lane = jnp.arange(L, dtype=i32)
+    p = jnp.clip(seg_start[n] + lane, 0, max(M - 1, 0))
+    lane_live = lane < m_mc
+    lane_idx = skey[p] % M
+    lane_src = flat.src[order[p]]
+    rows = jnp.arange(n, dtype=i32)[:, None]              # [n, 1]
+    deliver_m = lane_live[None, :] & alive[:, None] & (lane_src[None, :] != rows)
+    pos_m = (
+        uni_before(rows, lane_idx[None, :])
+        + lane[None, :]
+        - mc_src_before(rows, lane_idx[None, :])
+    )
+    # Delivered copies' slots ascend within a row, but skipped lane entries
+    # (the sender's own row, dead rows, beyond-m_mc padding) intersperse -
+    # a suffix-min sweep replaces each skipped entry with its next
+    # delivered successor's slot, restoring a searchable monotone array
+    # while remembering which lane entry actually owns the slot.
+    big = i32(M)
+    rev = lambda x: jnp.flip(x, axis=-1)
+    mono_m = rev(jax.lax.cummin(
+        rev(jnp.where(deliver_m, jnp.minimum(pos_m, M), big)), axis=1
+    ))                                                    # [n, L]
+    next_del = rev(jax.lax.cummin(
+        rev(jnp.where(deliver_m, lane[None, :], i32(L))), axis=1
+    ))                                                    # [n, L]
+    place_m = (rows * S + mono_m).reshape(-1)
+
+    # ---- materialize: every inbox slot binary-searches its source --------
+    slot_key = (jnp.arange(n, dtype=i32)[:, None] * S
+                + jnp.arange(c_route, dtype=i32)[None, :]).reshape(-1)
+    ju = jnp.clip(jnp.searchsorted(place_u, slot_key).astype(i32), 0, M - 1)
+    jm = jnp.clip(
+        jnp.searchsorted(place_m, slot_key).astype(i32), 0, n * L - 1
+    )
+    hit_u = place_u[ju] == slot_key
+    hit_m = place_m[jm] == slot_key
+    lane_of = jnp.clip(next_del.reshape(-1)[jm], 0, L - 1)
+    # a slot is filled by exactly one delivery: its unicast entry or its
+    # multicast lane copy (positions within a row are a permutation)
+    src_sorted_pos = jnp.where(hit_u, ju, p[lane_of])
+    fidx = order[src_sorted_pos]              # flat-outbox index per slot
+    filled = hit_u | hit_m
+    routed: Msg = jax.tree.map(lambda x: x[fidx], flat).mask(filled)
+    routed = jax.tree.map(
+        lambda x: x.reshape((n, c_route) + x.shape[1:]), routed
+    )
+    # multicast copies accumulate their per-recipient hop cost; delivered
+    # copies are exactly the slots that gathered a MULTICAST-dst message
+    # (sentinel slots gathered dst == NOWHERE)
+    copy_hop = jnp.abs(
+        chain_pos[:, None]
+        - chain_pos[jnp.clip(routed.src, 0, n - 1)]
+    )
+    routed = routed._replace(
+        extra=routed.extra
+        + jnp.where(routed.dst == MULTICAST, copy_hop, 0)
+    )
+
+    # ---- exact counters from segment lengths (lane-independent) ----------
+    uni_cnt = seg_start[1:n + 1] - seg_start[:n]          # [n]
+    src_cnt = src_start[1:n + 1] - src_start[:n]          # [n]
+    deliver_cnt = uni_cnt + jnp.where(alive, m_mc - src_cnt, 0)
+    dropped = jnp.maximum(deliver_cnt - c_route, 0)
+
+    n_alive = alive.sum()
+    src_alive = src_ok & alive[jnp.clip(flat.src, 0, n - 1)]
+    mcast_copies = jnp.sum(
+        jnp.where(is_mcast, n_alive - src_alive.astype(i32), 0)
+    )
+    # hop total per multicast message: sum over live recipients of
+    # |chain_pos[i] - chain_pos[src]| (the sender's own term is zero, so no
+    # exclusion correction is needed)
+    hop_to_all = jnp.sum(
+        jnp.where(alive[None, :],
+                  jnp.abs(chain_pos[None, :] - chain_pos[:, None]), 0),
+        axis=1,
+    )                                                     # [n] by source
+    mcast_hop_sum = jnp.sum(
+        jnp.where(is_mcast, hop_to_all[jnp.clip(flat.src, 0, n - 1)], 0)
+    )
+    return routed, dropped, mcast_copies, mcast_hop_sum
+
+
+def pack_lanes(msgs: list[Msg]) -> Msg:
+    """Concatenate [n, w_k] message lanes along axis 1 by writing each lane
+    into one pre-allocated [n, sum(w_k)] buffer (replaces the per-field
+    ``jnp.concatenate`` chains on the tick's hot path; layout - and thus
+    the fabric's flat-index FIFO order - is identical)."""
+    total = sum(m.op.shape[1] for m in msgs)
+
+    def pack(*cols):
+        buf = jnp.zeros(
+            cols[0].shape[:1] + (total,) + cols[0].shape[2:], cols[0].dtype
+        )
+        off = 0
+        for c in cols:
+            buf = jax.lax.dynamic_update_slice_in_dim(buf, c, off, axis=1)
+            off += c.shape[1]
+        return buf
+
+    return jax.tree.map(pack, *msgs)
+
+
 class ChainSim:
     """Cluster simulator with exact traffic accounting.
 
@@ -216,7 +498,9 @@ class ChainSim:
         inject_capacity: int = 64,
         route_capacity: int = 256,
         reply_capacity: int = 4096,
+        fabric: str = "segmented",
     ):
+        assert fabric in ("segmented", "dense"), fabric
         self.cluster = as_cluster(cfg)
         self.cfg = self.cluster.chain
         self.C = self.cluster.n_chains
@@ -225,6 +509,12 @@ class ChainSim:
         self.c_route = route_capacity
         self.capacity = inject_capacity + route_capacity
         self.reply_capacity = reply_capacity
+        # "segmented" (default) is the O(M log M) production fabric;
+        # "dense" is the faithful pre-segmented engine - the [n, M]-matrix
+        # router plus its O(B^2) txn-stage ranking and scatter-per-field
+        # reply logging - kept as the bit-identical reference baseline
+        # (see benchmarks/fig_tick_cost.py)
+        self.fabric = fabric
         self.node_step = NODE_STEPS[self.cfg.protocol]
 
     # -- state ------------------------------------------------------------
@@ -315,9 +605,7 @@ class ChainSim:
             extra=injected.extra + inj_live.astype(jnp.int32)
         )
         n_injected = inj_live.sum()
-        full_inbox = jax.tree.map(
-            lambda a, b: jnp.concatenate([a, b], axis=1), injected, inbox
-        )
+        full_inbox = pack_lanes([injected, inbox])
         # Pipeline passes are counted on arrival (pre-stage): a PREPARE
         # resolved by the lock stage is one match-action pass like any
         # other query.
@@ -345,19 +633,18 @@ class ChainSim:
         # (lock edits + ACK/NACK replies), validated COMMITs pass through
         # to the node step as write-like ops.
         new_locks, full_inbox, txn_out, txn_counts = txn_lib.head_txn_stage(
-            locks, roles, stores, full_inbox
+            locks, roles, stores, full_inbox,
+            dense_rank=self.fabric == "dense",
         )
 
         # Process: vmapped match-action pipeline pass on every node.
         new_stores, outbox = jax.vmap(
-            functools.partial(self.node_step, cfg)
+            functools.partial(self.node_step, cfg,
+                              dense_rank=self.fabric == "dense")
         )(stores, roles, full_inbox)
         # The lock stage's and the stale stage's replies join the node
         # outboxes on the fabric (packet-accounted like any other reply).
-        outbox = jax.tree.map(
-            lambda a, b, c: jnp.concatenate([a, b, c], axis=1),
-            outbox, txn_out, stale_out,
-        )
+        outbox = pack_lanes([outbox, txn_out, stale_out])
         # A dead node emits nothing (its inbox is already empty; this pins
         # the invariant even if a node_step ever emitted unsolicited).
         outbox = jax.vmap(Msg.mask)(
@@ -368,51 +655,16 @@ class ChainSim:
         flat: Msg = jax.tree.map(
             lambda x: x.reshape((-1,) + x.shape[2:]), outbox
         )  # [M]
-        src_pos = flat.src
-        live = flat.op != OP_NOP
-
-        dst_alive = alive[jnp.clip(flat.dst, 0, n - 1)]
-        in_range = (flat.dst >= 0) & (flat.dst < n)
-        is_mcast = live & (flat.dst == MULTICAST)
-        is_exit = live & (flat.dst == TO_CLIENT)
-        is_unicast = live & in_range & dst_alive
-        # undeliverable: unicast addressed to a node that died in flight,
-        # or orphaned entirely (dst == NOWHERE: e.g. a CR reply retracing
-        # past a dead entry node runs off the head) - both are lost traffic
-        # and must show up in the drop accounting
-        dead_letters = (live & in_range & ~dst_alive) | (
-            live & ~in_range & ~is_mcast & ~is_exit
-        )
-
-        # per-destination delivery masks [n, M]; multicast (the PRE) fans
-        # out only to the chain's *live* members (the CP pruned the group)
-        node_ids = jnp.arange(n, dtype=jnp.int32)[:, None]
-        deliver = (
-            (is_unicast & (flat.dst[None, :] == node_ids))
-            | (is_mcast[None, :] & (src_pos[None, :] != node_ids))
-        ) & alive[:, None]
+        is_unicast, is_mcast, is_exit, dead_letters = fabric_masks(flat, alive)
 
         # link-traversal accounting in live-chain coordinates: a message
         # travels |chain_pos[dst] - chain_pos[src]| live hops - a failed
         # node is spliced out of the forwarding path, not traversed.
         pos_of = lambda i: chain_pos[jnp.clip(i, 0, n - 1)]
         uni_hops = jnp.abs(pos_of(flat.dst) - pos_of(flat.src))
-        mcast_hops = jnp.abs(chain_pos[:, None] - pos_of(flat.src)[None, :])  # [n, M]
-        packets = (
-            jnp.sum(jnp.where(is_unicast, uni_hops, 0))
-            + jnp.sum(jnp.where(deliver & is_mcast[None, :], mcast_hops, 0))
-            + jnp.sum(is_exit)  # final leg to the client
-            + n_injected        # client -> entry-node leg
-        )
-        msg_bytes = cfg.header_bytes + cfg.payload_bytes
-        msgs = (
-            jnp.sum(is_unicast)
-            + jnp.sum(deliver & is_mcast[None, :])
-            + jnp.sum(is_exit)
-            + n_injected
-        )
 
-        # accumulate hop counts onto messages for latency tracking
+        # accumulate hop counts onto messages for latency tracking (the
+        # fabric adds the per-recipient multicast hops on each copy)
         flat = flat._replace(
             extra=flat.extra
             + jnp.where(is_unicast, uni_hops, 0)
@@ -420,16 +672,33 @@ class ChainSim:
         )
 
         # ---------------- per-node inbox build (capacity-limited) --------
-        def gather_for(node_id):
-            m = deliver[node_id]
-            hop_add = jnp.where(is_mcast, mcast_hops[node_id], 0)
-            msg = flat._replace(extra=flat.extra + hop_add).mask(m)
-            order = jnp.argsort(~m, stable=True)
-            msg = jax.tree.map(lambda x: x[order][: self.c_route], msg)
-            dropped = jnp.maximum(m.sum() - self.c_route, 0)
-            return msg, dropped
+        M = flat.op.shape[0]
+        if self.fabric == "dense":
+            routed, dropped, mcast_copies, mcast_hop_sum = dense_route(
+                flat, alive, chain_pos, self.c_route
+            )
+        else:
+            # every outbox message carries src == emitting node, so one
+            # source contributes at most its own outbox width to the
+            # multicast stream - c_route + M // n is an exact lane bound
+            routed, dropped, mcast_copies, mcast_hop_sum = segmented_route(
+                flat, alive, chain_pos, self.c_route,
+                mcast_lane=self.c_route + M // n,
+            )
 
-        routed, dropped = jax.vmap(gather_for)(node_ids[:, 0])
+        packets = (
+            jnp.sum(jnp.where(is_unicast, uni_hops, 0))
+            + mcast_hop_sum
+            + jnp.sum(is_exit)  # final leg to the client
+            + n_injected        # client -> entry-node leg
+        )
+        msg_bytes = cfg.header_bytes + cfg.payload_bytes
+        msgs = (
+            jnp.sum(is_unicast)
+            + mcast_copies
+            + jnp.sum(is_exit)
+            + n_injected
+        )
 
         # ---------------- exits -> reply log ----------------
         exits = flat.mask(is_exit)
@@ -445,7 +714,8 @@ class ChainSim:
             | (exits.op == OP_STALE_NACK)
             | ((exits.op == OP_TXN_REPLY) & (exits.seq < 0))
         )
-        new_replies = replies.append(exits, t + 1)
+        new_replies = replies.append(exits, t + 1,
+                                     dense=self.fabric == "dense")
 
         new_metrics = Metrics(
             packets=metrics.packets + packets,
@@ -487,14 +757,21 @@ class ChainSim:
         return injected
 
     # -- one tick of the whole cluster -------------------------------------
-    @functools.partial(jax.jit, static_argnums=0)
+    @functools.partial(jax.jit, static_argnums=0, donate_argnums=1)
     def tick(self, state: SimState, injected: Msg) -> SimState:
         """injected: [C, n, c_in] client queries addressed to their entry
         node within their key's owning chain (see workload.make_schedule).
 
         Membership (``state.roles``) and the partition map (``state.pmap``)
         are traced leaves: the CP may swap either between ticks without
-        triggering a recompile."""
+        triggering a recompile.
+
+        The input ``state`` is DONATED: its buffers are reused for the
+        output (ticking a [C, n, ...] cluster allocates no new state), so
+        callers must follow the ``state = sim.tick(state, inj)`` rebinding
+        pattern and never touch the pre-tick state object again.  Host-side
+        readers (metrics, reply cursors, CP assertions) read the *returned*
+        state; the CP's own truth lives outside the state pytree."""
         injected = self._lift(injected)
         # The per-chain view of the map: the [C, K] slot tables vmap over
         # the chain axis; the bucket columns and epoch are shared.
@@ -517,9 +794,22 @@ class ChainSim:
         )
 
     # -- run a schedule -----------------------------------------------------
+    @functools.partial(jax.jit, static_argnums=(0, 2), donate_argnums=1)
+    def drain(self, state: SimState, ticks: int) -> SimState:
+        """Tick ``ticks`` empty injections as one fused ``lax.scan`` (the
+        old host-side drain loop paid per-tick dispatch; the scan is one
+        device program).  ``state`` is donated, like ``tick``'s."""
+        empty = self.empty_injection()
+
+        def body(st, _):
+            return self.tick(st, empty), None
+
+        state, _ = jax.lax.scan(body, state, None, length=ticks)
+        return state
+
     def run(self, state: SimState, schedule: Msg, extra_ticks: int = 16) -> SimState:
         """schedule: [T, C, n, c_in] (or legacy [T, n, c_in]) injection per
-        tick; then drain."""
+        tick; then drain.  ``state`` is donated (see ``tick``)."""
         if schedule.op.ndim == 3:
             assert self.C == 1, (
                 f"schedule lacks the chain axis but cluster has C={self.C}"
@@ -530,13 +820,8 @@ class ChainSim:
             return self.tick(st, inj), None
 
         state, _ = jax.lax.scan(body, state, schedule)
-        drain = jax.vmap(
-            lambda _: jax.vmap(
-                lambda __: Msg.empty(self.c_in, self.cfg.value_words)
-            )(jnp.arange(self.n))
-        )(jnp.arange(self.C))
-        for _ in range(extra_ticks):
-            state = self.tick(state, drain)
+        if extra_ticks:
+            state = self.drain(state, extra_ticks)
         return state
 
 

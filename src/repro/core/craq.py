@@ -48,10 +48,13 @@ from repro.core.types import (
 )
 
 
-def node_step(cfg: ChainConfig, store: Store, roles: Roles, inbox: Msg):
+def node_step(cfg: ChainConfig, store: Store, roles: Roles, inbox: Msg,
+              dense_rank: bool = False):
     """Process one inbox batch on one node. Returns (store', outbox).
 
     outbox has 3*B slots: [replies | forwards | acks+write-replies].
+    ``dense_rank`` selects the O(B^2) same-key write ranking of the
+    pre-segmented engine (the ``fabric="dense"`` benchmark baseline).
     """
     del cfg
     B = inbox.batch
@@ -104,13 +107,15 @@ def node_step(cfg: ChainConfig, store: Store, roles: Roles, inbox: Msg):
     # ---------------- WRITE path ----------------
     # Entry node stamps client writes with per-key monotone sequence numbers.
     needs_seq = is_write & (inbox.seq < 0)
-    new_store, stamped = store_lib.assign_seqs(new_store, inbox.key, needs_seq)
+    new_store, stamped = store_lib.assign_seqs(new_store, inbox.key, needs_seq,
+                                               dense_rank=dense_rank)
     wseq = jnp.where(needs_seq, stamped, inbox.seq)
 
     if_tail_commit = is_write & is_tail
     if_appended = is_write & ~is_tail
     new_store, accepted = store_lib.append_dirty(
-        new_store, inbox.key, inbox.value, wseq, if_appended
+        new_store, inbox.key, inbox.value, wseq, if_appended,
+        dense_rank=dense_rank,
     )
     # Tail: commit directly (clean_write, Algorithm 1 l.27-28).
     new_store = store_lib.commit(

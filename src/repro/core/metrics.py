@@ -88,7 +88,16 @@ class ReplyLog(NamedTuple):
     t_inject: jax.Array  # [R] int32
     t_done: jax.Array    # [R] int32
     hops: jax.Array      # [R] int32 link traversals along this query's path
-    procs: jax.Array     # [R] int32 KV pipeline passes along the path
+    ticks_in_flight: jax.Array  # [R] int32 ticks between injection and exit
+                                #     (t_done - t_inject).  In the tick-
+                                #     synchronous engine a live message is
+                                #     processed by exactly one node per
+                                #     tick, so this doubles as the total
+                                #     pipeline-pass count (KV + relay) the
+                                #     benchmarks split via the protocol's
+                                #     routing - it is NOT a pure KV-pass
+                                #     counter (the old field name, `procs`,
+                                #     claimed it was).
     cursor: jax.Array    # [] int32 next free slot
 
     @staticmethod
@@ -130,27 +139,76 @@ class ReplyLog(NamedTuple):
 
         return ReplyLog(*[cat(f) for f in self[:-1]], cursor=np.int32(cur.sum()))
 
-    def append(self, exits, t_done) -> "ReplyLog":
-        """Scatter exiting replies (masked Msg-like fields) into the log."""
+    def append(self, exits, t_done, dense: bool = False) -> "ReplyLog":
+        """Record exiting replies (masked Msg-like fields) into the log.
+
+        Default path scatters ONE int32 pointer per landing slot and then
+        gathers every field through it (an [M] batch is mostly NOPs; nine
+        per-field scatters of the whole batch were a top tick cost -
+        scatters serialize on most backends, gathers vectorize).
+        ``dense=True`` keeps the original scatter-per-field write (the
+        pre-segmented engine, benchmarked as the ``fabric="dense"``
+        baseline).  Both produce bit-identical logs.
+        """
         live = exits.live()
         rank = jnp.cumsum(live.astype(jnp.int32)) - 1
         slot = self.cursor + rank
         cap = self.qid.shape[0]
         ok = live & (slot < cap)
         tgt = jnp.where(ok, slot, cap)  # overflow scatters OOB -> dropped
+        new_cursor = jnp.minimum(self.cursor + live.sum(), cap)
 
-        def put(buf, val):
-            return buf.at[tgt].set(val, mode="drop")
+        if dense:
+            def put(buf, val):
+                return buf.at[tgt].set(val, mode="drop")
 
-        return ReplyLog(
-            qid=put(self.qid, exits.qid),
-            op=put(self.op, exits.op),
-            key=put(self.key, exits.key),
-            seq=put(self.seq, exits.seq),
-            value0=put(self.value0, exits.value[:, 0]),
-            t_inject=put(self.t_inject, exits.t_inject),
-            t_done=put(self.t_done, jnp.full_like(exits.qid, t_done)),
-            hops=put(self.hops, exits.extra),
-            procs=put(self.procs, jnp.full_like(exits.qid, t_done) - exits.t_inject),
-            cursor=jnp.minimum(self.cursor + live.sum(), cap),
+            return ReplyLog(
+                qid=put(self.qid, exits.qid),
+                op=put(self.op, exits.op),
+                key=put(self.key, exits.key),
+                seq=put(self.seq, exits.seq),
+                value0=put(self.value0, exits.value[:, 0]),
+                t_inject=put(self.t_inject, exits.t_inject),
+                t_done=put(self.t_done, jnp.full_like(exits.qid, t_done)),
+                hops=put(self.hops, exits.extra),
+                ticks_in_flight=put(
+                    self.ticks_in_flight,
+                    jnp.full_like(exits.qid, t_done) - exits.t_inject,
+                ),
+                cursor=new_cursor,
+            )
+
+        M = live.shape[0]
+        ptr = jnp.full((cap,), M, jnp.int32).at[tgt].set(
+            jnp.arange(M, dtype=jnp.int32), mode="drop"
         )
+        fresh = ptr < M
+        pc = jnp.clip(ptr, 0, M - 1)
+
+        def sel(buf, val):
+            return jnp.where(fresh, val[pc], buf)
+
+        t_done = jnp.asarray(t_done, jnp.int32)
+        return ReplyLog(
+            qid=sel(self.qid, exits.qid),
+            op=sel(self.op, exits.op),
+            key=sel(self.key, exits.key),
+            seq=sel(self.seq, exits.seq),
+            value0=sel(self.value0, exits.value[:, 0]),
+            t_inject=sel(self.t_inject, exits.t_inject),
+            t_done=jnp.where(fresh, t_done, self.t_done),
+            hops=sel(self.hops, exits.extra),
+            ticks_in_flight=jnp.where(
+                fresh, t_done - exits.t_inject[pc], self.ticks_in_flight
+            ),
+            cursor=new_cursor,
+        )
+
+    def total_landed(self) -> int:
+        """Host-side count of logged replies so far - transfers ONLY the
+        cursor leaf ([C] ints, or a scalar for a flat log), never the log
+        body.  Pollers (``TxnDriver._await``) watch this until an expected
+        wave size lands, then pay the [C, R] body transfer exactly once."""
+        import numpy as np
+
+        return int(np.asarray(self.cursor).sum())

@@ -38,10 +38,13 @@ from repro.core.types import (
 SEQ_BITS = 16  # NetChain's default SEQ width (the overflow the paper calls out)
 
 
-def node_step(cfg: ChainConfig, store: Store, roles: Roles, inbox: Msg):
+def node_step(cfg: ChainConfig, store: Store, roles: Roles, inbox: Msg,
+              dense_rank: bool = False):
     """One CR pipeline pass over an inbox batch. Returns (store', outbox).
 
     outbox has 3*B slots: [tail replies | forwards | reply relays].
+    ``dense_rank`` selects the O(B^2) same-key write ranking of the
+    pre-segmented engine (the ``fabric="dense"`` benchmark baseline).
     """
     del cfg
     B = inbox.batch
@@ -100,7 +103,8 @@ def node_step(cfg: ChainConfig, store: Store, roles: Roles, inbox: Msg):
 
     # ---------------- WRITE: overwrite + propagate ----------------
     needs_seq = is_write & (inbox.seq < 0)
-    new_store, stamped = store_lib.assign_seqs(store, inbox.key, needs_seq)
+    new_store, stamped = store_lib.assign_seqs(store, inbox.key, needs_seq,
+                                               dense_rank=dense_rank)
     # NetChain's 16-bit SEQ: wrap-around reproduces the overflow limitation.
     wseq = jnp.where(needs_seq, stamped % (1 << SEQ_BITS), inbox.seq)
     new_store = store_lib.overwrite_clean(

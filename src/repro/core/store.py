@@ -59,16 +59,40 @@ def init_store(cfg: ChainConfig) -> Store:
 # ---------------------------------------------------------------------------
 # Batch-rank helpers (serialization semantics within a batch)
 # ---------------------------------------------------------------------------
-def batch_rank(keys: jax.Array, active: jax.Array) -> jax.Array:
-    """rank[i] = #{j < i : active[j] and keys[j] == keys[i]} (stable order).
+def batch_rank(keys: jax.Array, active: jax.Array,
+               dense: bool = False) -> jax.Array:
+    """rank[i] = #{j < i : active[j] and keys[j] == keys[i]} for active i
+    (stable order); inactive entries rank 0.
 
-    O(B^2) bitmatrix - B is a few thousand at most in simulation; the Pallas
-    engine serializes within its block instead.
+    Default is a segmented-sort ranking, O(B log B): two stable argsorts
+    group entries by (active, key) preserving batch order, the rank is the
+    offset within the run.  ``dense=True`` keeps the original O(B^2)
+    bitmatrix (the pre-segmented engine's version - the ``fabric="dense"``
+    baseline in benchmarks/fig_tick_cost.py; at the head txn stage's
+    B = n * capacity the bitmatrix dominated the tick).
     """
     b = keys.shape[0]
-    same = (keys[None, :] == keys[:, None]) & active[None, :] & active[:, None]
-    lower = jnp.tril(jnp.ones((b, b), bool), k=-1)
-    return jnp.sum(same & lower, axis=1).astype(jnp.int32)
+    if dense:
+        same = (
+            (keys[None, :] == keys[:, None])
+            & active[None, :] & active[:, None]
+        )
+        lower = jnp.tril(jnp.ones((b, b), bool), k=-1)
+        return jnp.sum(same & lower, axis=1).astype(jnp.int32)
+    active = active.astype(bool)
+    o1 = jnp.argsort(keys, stable=True)            # by (key, batch idx)
+    o2 = jnp.argsort(~active[o1], stable=True)     # active runs first
+    order = o1[o2]                                 # by (inactive, key, idx)
+    s_keys = keys[order]
+    s_active = active[order]
+    boundary = jnp.concatenate([
+        jnp.ones((1,), bool),
+        (s_keys[1:] != s_keys[:-1]) | (s_active[1:] != s_active[:-1]),
+    ])
+    j = jnp.arange(b, dtype=jnp.int32)
+    run_start = jax.lax.cummax(jnp.where(boundary, j, 0))
+    rank_sorted = jnp.where(s_active, j - run_start, 0)
+    return jnp.zeros((b,), jnp.int32).at[order].set(rank_sorted)
 
 
 def per_key_count(keys: jax.Array, active: jax.Array, num_keys: int) -> jax.Array:
@@ -101,27 +125,29 @@ def is_clean(store: Store, keys: jax.Array) -> jax.Array:
 # ---------------------------------------------------------------------------
 # Writes
 # ---------------------------------------------------------------------------
-def assign_seqs(store: Store, keys: jax.Array, needs: jax.Array):
+def assign_seqs(store: Store, keys: jax.Array, needs: jax.Array,
+                dense_rank: bool = False):
     """Stamp unsequenced client writes with per-key monotone seqs.
 
     Returns (new_store, seqs[B]).  Entries with needs==False keep seq
     untouched (-1 sentinel replaced by caller).
     """
-    rank = batch_rank(keys, needs)
+    rank = batch_rank(keys, needs, dense=dense_rank)
     seqs = store.next_seq[keys] + rank
     counts = per_key_count(keys, needs, store.num_keys)
     new_next = store.next_seq + counts
     return store._replace(next_seq=new_next), jnp.where(needs, seqs, -1)
 
 
-def append_dirty(store: Store, keys, values, seqs, active):
+def append_dirty(store: Store, keys, values, seqs, active,
+                 dense_rank: bool = False):
     """Append dirty versions at cells ``pending+1+rank``; drop if the window
     is exceeded (Algorithm 1 line 22-23).
 
     Returns (new_store, accepted[B] bool).
     """
     V = store.num_versions
-    rank = batch_rank(keys, active)
+    rank = batch_rank(keys, active, dense=dense_rank)
     slot = store.pending[keys] + 1 + rank
     accepted = active & (slot <= V - 1)
     # Scatter accepted writes; (key, slot) pairs are unique among accepted

@@ -133,8 +133,13 @@ def locks_all_free(locks: LockTable) -> bool:
 # ---------------------------------------------------------------------------
 # The head's transaction stage (runs inside _chain_tick, before node_step)
 # ---------------------------------------------------------------------------
-def head_txn_stage(locks: LockTable, roles: Roles, stores, inbox: Msg):
+def head_txn_stage(locks: LockTable, roles: Roles, stores, inbox: Msg,
+                   dense_rank: bool = False):
     """Process this tick's client transaction ops at the chain's live head.
+
+    ``dense_rank`` selects the O(B^2) same-key ranking of the pre-segmented
+    engine (the ``fabric="dense"`` benchmark baseline; B here is the whole
+    chain's n * capacity batch, where the bitmatrix dominated the tick).
 
     ``inbox`` is the chain's merged [n, cap] inbox (dead-masked, entry-
     stamped).  Client-originated PREPARE/ABORT ops are consumed here;
@@ -189,7 +194,7 @@ def head_txn_stage(locks: LockTable, roles: Roles, stores, inbox: Msg):
     # frozen chain grants nothing (recovery copy window - new transactions
     # must not take locks the CP would have to wait out).
     want = is_prep & at_head & key_ok & (txn_id >= 0) & ~frozen
-    rank = store_lib.batch_rank(flat.key, want)
+    rank = store_lib.batch_rank(flat.key, want, dense=dense_rank)
     grant = want & (holder[k] == -1) & (rank == 0)
     g_key = jnp.where(grant, k, K)
     holder = holder.at[g_key].set(txn_id, mode="drop")
@@ -496,13 +501,30 @@ class TxnDriver:
         )
         return self.sim.tick(state, jax.tree.map(lambda x: x[0], routed.lanes))
 
-    def _await(self, state, qids: set, max_ticks: int):
+    def _await(self, state, qids: set, max_ticks: int, landed_base: int):
+        """Tick until the wave's replies land, then decode the log.
+
+        Every sub-op yields exactly one logged exit (ACK/NACK/reply), so
+        the wave is known to have landed once the reply cursors have grown
+        by ``len(qids)`` since ``landed_base`` (counted *before* the wave
+        was injected).  Polling therefore syncs only the [C] cursor leaf
+        per tick (``ReplyLog.total_landed``) and transfers the [C, R] log
+        body exactly once - the old loop device-synced the entire log
+        every polled tick.  If the count never arrives (a dropped sub-op:
+        a capacity-contract violation), fall back to full-log polling for
+        the remaining tick budget, exactly like the old loop.
+        """
         empty = self.sim.empty_injection()
-        seen = self._reply_map(state)
-        for _ in range(max_ticks):
-            if qids <= seen.keys():
-                break
+        expected = len(qids)
+        ticks = 0
+        while (ticks < max_ticks
+               and state.replies.total_landed() - landed_base < expected):
             state = self.sim.tick(state, empty)
+            ticks += 1
+        seen = self._reply_map(state)
+        while ticks < max_ticks and not qids <= seen.keys():
+            state = self.sim.tick(state, empty)
+            ticks += 1
             seen = self._reply_map(state)
         return state, seen
 
@@ -512,14 +534,16 @@ class TxnDriver:
         max_ticks = max_ticks or (4 * self.sim.n + 8)
         stream1, plan = self.planner.phase1(txns)
         qids1 = {q for e in plan.values() for q in e["p1"]}
+        base = state.replies.total_landed()
         if stream1 is not None:
             state = self._inject(state, stream1)
-        state, seen = self._await(state, qids1, max_ticks)
+        state, seen = self._await(state, qids1, max_ticks, base)
         stream2 = self.planner.phase2(plan, seen)
         if stream2 is not None:
+            base = state.replies.total_landed()
             state = self._inject(state, stream2)
             qids2 = {q for e in plan.values() for q in e["p2"]}
-            state, seen = self._await(state, qids2, max_ticks)
+            state, seen = self._await(state, qids2, max_ticks, base)
         return state, self.planner.results(plan, seen)
 
 

@@ -102,6 +102,163 @@ def check_partition_round_trip(cluster, placement):
 
 
 # ---------------------------------------------------------------------------
+# Routing-fabric equivalence harness (used by the seeded property test in
+# test_fabric.py and its hypothesis twin in test_fabric_properties.py - one
+# oracle + one checker, two example sources).
+# ---------------------------------------------------------------------------
+def reference_route_numpy(flat_fields: dict, alive, chain_pos, c_route: int):
+    """Straight-line numpy re-statement of the ORIGINAL per-node-argsort
+    router's delivery contract - the oracle both fabrics must match
+    bit-for-bit.  Completely independent of the jax implementations: a
+    python loop over nodes and flat-outbox slots.
+
+    ``flat_fields`` maps Msg field name -> numpy array ([M] or [M, W]).
+    Returns (inbox_fields [n, c_route, ...], dropped [n], mcast_copies,
+    mcast_hop_sum) with the same empty-slot bit pattern as ``Msg.mask``.
+    """
+    import numpy as np
+
+    from repro.core.types import MULTICAST, NOWHERE, OP_NOP, TO_CLIENT
+
+    op, dst, src = (flat_fields[k] for k in ("op", "dst", "src"))
+    alive = np.asarray(alive)
+    chain_pos = np.asarray(chain_pos)
+    n = alive.shape[0]
+    M = op.shape[0]
+    W = flat_fields["value"].shape[1]
+    empty = {
+        "op": OP_NOP, "key": 0, "value": 0, "seq": -1, "src": 0,
+        "dst": NOWHERE, "client": 0, "entry": 0, "qid": -1, "t_inject": 0,
+        "extra": 0, "ver": 0,
+    }
+    out = {
+        k: np.full(
+            (n, c_route) + flat_fields[k].shape[1:], v, np.int32
+        )
+        for k, v in empty.items()
+    }
+    dropped = np.zeros(n, np.int64)
+    mcast_copies = 0
+    mcast_hop_sum = 0
+    cp = lambda i: chain_pos[min(max(int(i), 0), n - 1)]
+    for i in range(n):
+        slot = 0
+        for f in range(M):
+            if op[f] == OP_NOP or not alive[i]:
+                continue
+            unicast = (
+                0 <= dst[f] < n and dst[f] == i and alive[dst[f]]
+            )
+            mcast = dst[f] == MULTICAST and src[f] != i
+            if not (unicast or mcast):
+                continue
+            if mcast:
+                mcast_copies += 1
+                mcast_hop_sum += abs(cp(i) - cp(src[f]))
+            if slot >= c_route:
+                dropped[i] += 1
+                continue
+            for k in out:
+                out[k][i, slot] = flat_fields[k][f]
+            if mcast:
+                out["extra"][i, slot] += abs(cp(i) - cp(src[f]))
+            slot += 1
+    return out, dropped, mcast_copies, mcast_hop_sum
+
+
+def check_fabric_equivalence(flat_fields: dict, alive, chain_pos,
+                             c_route: int, mcast_lane=None):
+    """Route one flat outbox through the numpy oracle, the dense reference
+    fabric and the segmented production fabric, and assert the three agree
+    bit-for-bit on every inbox field, the per-node drop counts and the
+    multicast copy/hop accounting."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.chain import dense_route, segmented_route
+    from repro.core.types import Msg
+
+    flat = Msg(**{k: jnp.asarray(v, jnp.int32) for k, v in flat_fields.items()})
+    alive_j = jnp.asarray(np.asarray(alive))
+    cp_j = jnp.asarray(np.asarray(chain_pos), jnp.int32)
+    ref, ref_drop, ref_copies, ref_hops = reference_route_numpy(
+        flat_fields, alive, chain_pos, c_route
+    )
+    for name, (routed, dropped, copies, hops) in (
+        ("dense", dense_route(flat, alive_j, cp_j, c_route)),
+        ("segmented",
+         segmented_route(flat, alive_j, cp_j, c_route, mcast_lane=mcast_lane)),
+    ):
+        for k in Msg._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(routed, k)), ref[k],
+                err_msg=f"{name} fabric diverges from the oracle on {k!r}",
+            )
+        np.testing.assert_array_equal(
+            np.asarray(dropped), ref_drop,
+            err_msg=f"{name} fabric drop counts diverge",
+        )
+        assert int(copies) == ref_copies, (
+            f"{name} fabric multicast copy count {int(copies)} != "
+            f"{ref_copies}"
+        )
+        assert int(hops) == ref_hops, (
+            f"{name} fabric multicast hop total {int(hops)} != {ref_hops}"
+        )
+
+
+def random_outbox_fields(rng, n: int, width: int, *, value_words: int = 4,
+                         num_keys: int = 8, mcast_heavy: bool = False,
+                         adversarial_src: bool = False) -> dict:
+    """A random masked [n * width] flat outbox in numpy field form.
+
+    Realistic mode pins ``src`` to the emitting node (every engine outbox
+    does - the segmented fabric's bounded multicast lane relies on it);
+    ``adversarial_src`` frees it entirely (callers must then route with
+    ``mcast_lane=M``).  ``mcast_heavy`` skews destinations toward
+    MULTICAST to stress the fan-out path.
+    """
+    import numpy as np
+
+    from repro.core.types import MULTICAST, NOWHERE, TO_CLIENT
+
+    M = n * width
+    dst_pool = [NOWHERE, MULTICAST, TO_CLIENT, n + 3, -7] + list(range(n))
+    probs = None
+    if mcast_heavy:
+        probs = np.ones(len(dst_pool))
+        probs[1] = 4 * len(dst_pool)
+        probs /= probs.sum()
+    fields = {
+        "op": rng.integers(0, 7, M),
+        "key": rng.integers(0, num_keys, M),
+        "value": rng.integers(0, 1 << 16, (M, value_words)),
+        "seq": rng.integers(-1, 64, M),
+        "src": (rng.integers(-2, n + 2, M) if adversarial_src
+                else np.repeat(np.arange(n), width)),
+        "dst": rng.choice(dst_pool, M, p=probs),
+        "client": rng.integers(0, 1 << 20, M),
+        "entry": rng.integers(0, n, M),
+        "qid": rng.integers(-1, 1 << 16, M),
+        "t_inject": rng.integers(0, 64, M),
+        "extra": rng.integers(0, 8, M),
+        "ver": rng.integers(0, 4, M),
+    }
+    # NOP slots must be fully blank (the engines only ever hand the fabric
+    # masked outboxes; Msg.mask pins the empty bit pattern)
+    blank = {"op": 0, "key": 0, "value": 0, "seq": -1, "src": 0,
+             "dst": NOWHERE, "client": 0, "entry": 0, "qid": -1,
+             "t_inject": 0, "extra": 0, "ver": 0}
+    nop = fields["op"] == 0
+    for k, v in blank.items():
+        arr = fields[k]
+        arr[nop] = v
+        fields[k] = arr.astype(np.int32)
+    return fields
+
+
+# ---------------------------------------------------------------------------
 # Shared transactional-serializability harness (used by the seeded fuzz in
 # test_txn.py and the hypothesis property test in
 # test_txn_serializability.py - one checker, two example sources).

@@ -1,0 +1,143 @@
+"""Segmented-sort routing fabric == the old per-node-argsort router.
+
+The tick's fabric was rewritten from a dense [n, M] delivery matrix plus a
+per-node ``argsort(~mask, stable=True)`` compaction (O(n * M log M)) to one
+segmented stable sort keyed by (destination, original index) (O(M log M) -
+see ``segmented_route`` in core/chain.py).  These tests pin the rewrite to
+a straight-line numpy re-statement of the old router's delivery contract
+(tests/helpers.py ``reference_route_numpy``): bit-identical [n, c_route]
+inboxes (every field, including the per-copy multicast hop accumulation in
+``extra``), per-node drop counts, and multicast copy/hop totals - under
+random masked outboxes, over-capacity destinations, all-NOP batches,
+multicast-heavy storms, dead nodes and adversarial src fields.
+
+The hypothesis twin lives in tests/test_fabric_properties.py (same checker,
+minimized example source); whole-engine equivalence (a full ChainSim run on
+each fabric) is pinned at the bottom.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ChainConfig, ChainSim, ClusterConfig, WorkloadConfig
+from repro.core.workload import make_schedule
+from tests.helpers import check_fabric_equivalence, random_outbox_fields
+
+N, WIDTH, C_ROUTE = 4, 9, 5  # tiny capacity -> over-capacity drops abound
+
+
+def _alive_and_pos(rng, n):
+    """Random health vector + the live-chain coordinates the role table
+    would derive from it (dead slots carry NOWHERE = -1)."""
+    alive = rng.random(n) > 0.25
+    if alive.sum() < 2:
+        alive[:2] = True
+    pos = np.full(n, -1, np.int32)
+    pos[np.flatnonzero(alive)] = np.arange(int(alive.sum()))
+    return alive, pos
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_random_outboxes_bit_identical(seed):
+    rng = np.random.default_rng(seed)
+    for _ in range(6):
+        fields = random_outbox_fields(rng, N, WIDTH)
+        alive, pos = _alive_and_pos(rng, N)
+        # the engine's exact lane bound: src == emitting node, so one
+        # source contributes at most its own outbox width
+        check_fabric_equivalence(
+            fields, alive, pos, C_ROUTE,
+            mcast_lane=C_ROUTE + (N * WIDTH) // N,
+        )
+
+
+def test_multicast_heavy_storm():
+    """Fan-out-dominated traffic: most live slots are MULTICAST, so every
+    node's inbox is mostly copies and the per-copy hop accounting and the
+    bounded multicast lane both get stressed."""
+    rng = np.random.default_rng(7)
+    for _ in range(6):
+        fields = random_outbox_fields(rng, N, WIDTH, mcast_heavy=True)
+        alive, pos = _alive_and_pos(rng, N)
+        check_fabric_equivalence(
+            fields, alive, pos, C_ROUTE,
+            mcast_lane=C_ROUTE + (N * WIDTH) // N,
+        )
+
+
+def test_adversarial_src_full_lane():
+    """src fields the engine can never produce (out of range, not the
+    emitting node): the lane bound no longer applies, so route with
+    mcast_lane=M and demand exactness anyway."""
+    rng = np.random.default_rng(11)
+    for _ in range(6):
+        fields = random_outbox_fields(
+            rng, N, WIDTH, adversarial_src=True, mcast_heavy=True
+        )
+        alive, pos = _alive_and_pos(rng, N)
+        check_fabric_equivalence(fields, alive, pos, C_ROUTE, mcast_lane=None)
+
+
+def test_all_nop_outbox():
+    fields = random_outbox_fields(np.random.default_rng(0), N, WIDTH)
+    for k in fields:
+        fields[k] = np.zeros_like(fields[k])
+    fields["seq"] -= 1
+    fields["qid"] -= 1
+    fields["dst"] -= 1  # NOWHERE
+    alive = np.ones(N, bool)
+    check_fabric_equivalence(fields, alive, np.arange(N), C_ROUTE)
+
+
+def test_over_capacity_single_destination():
+    """Every live slot unicast to node 0: the first c_route (in flat-outbox
+    order) land, the rest are counted dropped."""
+    rng = np.random.default_rng(3)
+    fields = random_outbox_fields(rng, N, WIDTH)
+    live = fields["op"] != 0
+    fields["dst"][live] = 0
+    check_fabric_equivalence(
+        fields, np.ones(N, bool), np.arange(N), C_ROUTE
+    )
+
+
+def test_degenerate_shapes():
+    """Two-node chains, single-slot outboxes, inbox as wide as the whole
+    outbox - the clamp/sentinel arithmetic must hold at the edges, not
+    just at scale.  (c_route <= M is the fabric contract: the engine's
+    outbox is always several times wider than the inbox it feeds.)"""
+    rng = np.random.default_rng(2)
+    for n, width, c_route in ((2, 1, 2), (2, 2, 4), (3, 1, 2)):
+        for _ in range(4):
+            fields = random_outbox_fields(rng, n, width, mcast_heavy=True)
+            alive, pos = _alive_and_pos(rng, n)
+            check_fabric_equivalence(
+                fields, alive, pos, c_route, mcast_lane=c_route + width
+            )
+
+
+def test_whole_engine_run_bit_identical_across_fabrics():
+    """End to end: a mixed read/write cluster workload produces the exact
+    same SimState (stores, inboxes, metrics, reply logs) on the segmented
+    fabric as on the dense reference."""
+    cluster = ClusterConfig(
+        chain=ChainConfig(n_nodes=4, num_keys=32, num_versions=6),
+        n_chains=2,
+    )
+    wl = WorkloadConfig(ticks=6, queries_per_tick=6, write_fraction=0.4,
+                        entry_node=None, seed=5)
+    sched = make_schedule(cluster, wl)
+    finals = {}
+    for fabric in ("dense", "segmented"):
+        sim = ChainSim(cluster, inject_capacity=6, route_capacity=24,
+                       reply_capacity=512, fabric=fabric)
+        finals[fabric] = sim.run(sim.init_state(), sched, extra_ticks=16)
+    a, b = finals["dense"], finals["segmented"]
+    for leaf_a, leaf_b in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(
+            np.asarray(leaf_a), np.asarray(leaf_b)
+        )

@@ -1,0 +1,47 @@
+"""Hypothesis twin of tests/test_fabric.py (same checker, minimized
+example source - the tests/helpers.py pattern shared with the partition
+and serializability suites).
+
+Hypothesis drives the outbox shape knobs (seed, destination skew, health,
+src adversariality) through the one fabric-equivalence oracle; shrinking
+then reports the smallest outbox that splits the segmented fabric from
+the old per-node-argsort contract.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from tests.helpers import check_fabric_equivalence, random_outbox_fields  # noqa: E402
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n=st.integers(2, 5),
+    width=st.integers(1, 8),
+    c_route=st.integers(1, 6),
+    mcast_heavy=st.booleans(),
+    adversarial_src=st.booleans(),
+    kill=st.lists(st.integers(0, 4), max_size=3),
+)
+def test_fabric_matches_reference(seed, n, width, c_route, mcast_heavy,
+                                  adversarial_src, kill):
+    c_route = min(c_route, n * width)  # fabric contract: c_route <= M
+    rng = np.random.default_rng(seed)
+    fields = random_outbox_fields(
+        rng, n, width, mcast_heavy=mcast_heavy,
+        adversarial_src=adversarial_src,
+    )
+    alive = np.ones(n, bool)
+    for k in kill:
+        alive[k % n] = False
+    pos = np.full(n, -1, np.int32)
+    pos[np.flatnonzero(alive)] = np.arange(int(alive.sum()))
+    # adversarial src voids the per-source lane bound -> full lane; the
+    # realistic mode uses the engine's exact c_route + outbox-width bound
+    lane = None if adversarial_src else c_route + width
+    check_fabric_equivalence(fields, alive, pos, c_route, mcast_lane=lane)

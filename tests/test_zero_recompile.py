@@ -1,0 +1,123 @@
+"""Zero-recompile guard for the donated-buffer tick.
+
+The whole point of carrying membership (Roles), the partition map and the
+lock table as *traced state* is that control-plane surgery re-runs the one
+compiled executable.  Donating the state buffers (``ChainSim.tick``
+``donate_argnums``) must not change that: this test drives ONE engine
+through a mixed lifecycle - traffic, node failure, two-phase recovery
+(freeze/copy/splice), a live bucket migration, and a cross-chain 2PC
+transaction wave - and demands the jit cache never grows after warmup.
+
+It also pins the donation contract itself: the tick really does consume
+its input state (rebinding is mandatory), and the scanned ``drain`` path
+shares the guarantee.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import (ChainConfig, ChainSim, ClusterConfig, Coordinator,
+                        Txn, TxnDriver, TxnPlanner)
+from repro.core.types import OP_WRITE, Msg, value_from_int, CLIENT_BASE, NOWHERE
+
+
+def _cluster():
+    # bucket_slots=3, one 3-slot landing region per chain in the spare tail
+    return ClusterConfig(
+        chain=ChainConfig(n_nodes=4, num_keys=9, num_versions=6),
+        n_chains=2, buckets_per_chain=2, spare_keys=3,
+    )
+
+
+def _inject_write(sim, gkey, val, node, chain, qid, epoch=0):
+    inj = sim.empty_injection()
+    e = lambda arr, v: arr.at[chain, node, 0].set(v)
+    return inj._replace(
+        op=e(inj.op, OP_WRITE),
+        key=e(inj.key, int(sim.cluster.key_to_slot(gkey))),
+        value=inj.value.at[chain, node, 0].set(value_from_int(gkey * 0 + val)),
+        src=e(inj.src, CLIENT_BASE + 1),
+        client=e(inj.client, CLIENT_BASE + 1),
+        dst=e(inj.dst, NOWHERE),
+        qid=e(inj.qid, qid),
+        ver=e(inj.ver, epoch),
+    )
+
+
+def test_mixed_lifecycle_never_recompiles():
+    cl = _cluster()
+    co = Coordinator(cl)
+    sim = ChainSim(cl, inject_capacity=8, route_capacity=64,
+                   reply_capacity=1024)
+    state = sim.init_state()
+    empty = sim.empty_injection()
+
+    # warmup: one tick + one scanned drain compile
+    state = sim.tick(state, _inject_write(sim, 0, 11, 0, 0, qid=1))
+    state = sim.drain(state, 4)
+    warm_tick = ChainSim.tick._cache_size()
+    # the scanned drain compiles once per static length; every drain below
+    # reuses this one 4-tick program
+    warm_drain = ChainSim.drain._cache_size()
+
+    # --- membership surgery under the same executable -------------------
+    co.fail_node(0, 1)
+    state = co.install_roles(state)
+    state = sim.tick(state, _inject_write(sim, 2, 22, 0, 0, qid=2))
+    state = sim.drain(state, 4)
+    co.begin_recovery(0)
+    state = co.install_roles(state)
+    state = sim.drain(state, 4)
+    _, stores = co.complete_recovery(0, 1, 1, state.stores,
+                                     locks=state.locks)
+    state = co.install_roles(state._replace(stores=stores))
+    state = sim.drain(state, 4)
+
+    # --- live bucket migration (freeze -> drain -> copy -> publish) -----
+    co.begin_rebalance(0, 1)
+    state = co.install_roles(state)
+    state = sim.drain(state, 4)
+    state = co.complete_rebalance(state)
+    assert co.partition_epoch == 1
+    state = sim.drain(state, 4)
+
+    # --- cross-chain 2PC wave through the txn driver --------------------
+    drv = TxnDriver(sim, TxnPlanner(cl, coordinator=co))
+    # keys 1 and 6 straddle the post-migration map: 1 lives on chain 1,
+    # 6 (bucket 1) stayed home on chain 0 -> genuine cross-chain 2PC
+    state, results = drv.run(
+        state, [Txn(txn_id=1, writes=((1, 111), (6, 222)))]
+    )
+    assert results[0].committed and results[0].mode == "2pc"
+    state = sim.drain(state, 4)
+    state = sim.drain(state, 4)
+
+    assert ChainSim.tick._cache_size() == warm_tick, (
+        "membership/migration/txn lifecycle recompiled the donated tick"
+    )
+    assert ChainSim.drain._cache_size() == warm_drain, (
+        "the scanned drain recompiled across CP surgery"
+    )
+
+    # sanity: the lifecycle actually did its job
+    assert int(state.metrics.asdict()["migration_moves"]) == 2
+    assert co.chains[0].node_ids == [0, 1, 2, 3]
+
+
+def test_tick_donates_its_input_state():
+    """The rebinding contract is real: after ``tick(state, inj)`` the old
+    state's buffers are gone (donated into the output) - touching them
+    must raise, not silently read stale data."""
+    sim = ChainSim(ChainConfig(n_nodes=3, num_keys=8, num_versions=4),
+                   inject_capacity=4, route_capacity=32, reply_capacity=64)
+    state = sim.init_state()
+    new_state = sim.tick(state, sim.empty_injection())
+    with pytest.raises(RuntimeError, match="deleted|donated"):
+        np.asarray(state.stores.values)
+    # the output is intact and reusable
+    assert int(new_state.t) == 1
+    newer = sim.tick(new_state, sim.empty_injection())
+    assert int(newer.t) == 2
