@@ -58,6 +58,13 @@ def collect(out_dir: str = ".") -> dict:
     head = tick["tick_cost/headline_speedup"]["data"]
     # a ratio: larger is better, guard the floor not a multiple
     metrics["tick_cost/headline_speedup:min"] = head["speedup"]
+    pipe = _rows(os.path.join(out_dir, "BENCH_txn_pipeline.json"))
+    phead = pipe["txn_pipeline/headline"]["data"]
+    # both tick-count ratios (deterministic simulator quantities, not wall
+    # clock): the wave coordinator's edge over the host driver and its
+    # absolute commit throughput must not sink below the figure's floors
+    metrics["txn_pipeline/speedup_vs_host:min"] = phead["speedup_vs_host"]
+    metrics["txn_pipeline/commit_tput:min"] = phead["commit_tput_per_tick"]
     engine = _rows(os.path.join(out_dir, "BENCH_engine.json"))
     for name, row in engine.items():
         metrics[f"{name}:us_per_query"] = row["data"]["us_per_query"]
@@ -157,6 +164,8 @@ def update(out_dir: str = ".") -> None:
     # ratio floors guard an absolute minimum, not a baseline multiple:
     # pin them at the figure's own target, not at the measured value
     payload["floors"]["tick_cost/headline_speedup:min"] = 3.0
+    payload["floors"]["txn_pipeline/speedup_vs_host:min"] = 5.0
+    payload["floors"]["txn_pipeline/commit_tput:min"] = 4.0
     with open(BASELINE, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
         f.write("\n")

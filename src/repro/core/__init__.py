@@ -8,7 +8,8 @@ Public surface:
   chain      - ChainSim (exact-accounting simulator) / ChainDist (shard_map)
   coordinator- control plane: roles, membership, two-phase failure recovery
   txn        - cross-chain multi-key transactions (in-network 2PC over the
-               partition map: lock table, planner, driver, reference oracle)
+               partition map: lock table, planner, driver, reference oracle,
+               and the device-resident wave-table coordinator)
   workload   - paper-evaluation workload generators (incl. transactional)
   metrics    - packet/hop/byte accounting and reply latency log
 """
@@ -37,6 +38,7 @@ from repro.core.types import (  # noqa: F401
     MULTICAST,
     NOWHERE,
     TO_CLIENT,
+    WAVE_BASE,
     NETCRAQ_HEADER_BYTES,
     is_txn_op,
     netchain_header_bytes,
@@ -52,6 +54,8 @@ from repro.core.txn import (  # noqa: F401
     TxnDriver,
     TxnPlanner,
     TxnResult,
+    TxnWaveDriver,
+    WaveState,
     committed_view,
     locks_all_free,
     reference_execute,

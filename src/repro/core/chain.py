@@ -112,6 +112,43 @@ migration did not touch keep serving stale-but-consistent clients
 without interruption.  Chains not named by the move (neither source nor
 destination) observe identical traffic and stay bit-identical to an
 undisturbed run - asserted by ``benchmarks/fig_rebalance.py``.
+
+Wave-table rules (the in-network coordinator extension of the contract)
+-----------------------------------------------------------------------
+With ``wave_depth > 0`` the state grows ``SimState.wave`` - a per-chain
+``txn.WaveState`` of W coordinator slots that runs the 2PC state machine
+*inside* the jitted tick (``txn.wave_coordinator_step``).  Ownership is
+split along the same CP/DP line as the lock table:
+
+* **Admission is host-owned and batched**: only ``txn.TxnWaveDriver``
+  (or a test harness) writes FREE slots, only **between ticks**, and only
+  FREE -> ADMITTED - it never touches an occupied slot.  Every leaf keeps
+  its shape/dtype, so admitting a wave of transactions is a pure state
+  swap: zero recompiles, the same contract as role/partition edits.
+* **Everything after admission is device-owned**: the per-tick coordinator
+  stage emits PREPAREs, collects ACK/NACKs, decides, emits COMMIT/ABORTs,
+  retires slots and appends the completion log.  The host's only reads are
+  the ``[C, W]`` phase leaf (to find free slots) and - once, at the end -
+  the completion log; per-transaction round trips are gone.
+* Coordinator sub-ops carry ``src``/``client`` >= ``WAVE_BASE``
+  (``types.py``), so heads treat them exactly like client transaction
+  traffic, while the fabric's exit stage diverts their replies to the
+  cluster-level control router (back to the coordinator's chain) instead
+  of the reply log.  A slot is recycled only after **every** sub-op it
+  issued has been answered - phase-1 replies before the decision, phase-2
+  completions before the slot frees - so a recycled slot's qids can never
+  alias a predecessor's in-flight replies, and an abort releases every
+  key the transaction touched (no early-abort: deciding before all
+  phase-1 replies land would race the decision's ABORT past its own
+  in-flight PREPARE at the head's release-before-acquire lock stage).
+* The CP's freeze interacts as with host-driven transactions: frozen
+  chains NACK the wave's PREPAREs (the txn aborts, retriable), COMMITs of
+  already-held locks still land; ``Coordinator.waves_drained`` is the CP
+  barrier for surgery that needs no wave in flight.
+
+``wave_depth == 0`` (the default) keeps the wave machinery out of the
+compiled program entirely - zero-size leaves ride the pytree and the tick
+is bit-identical to the wave-less engine.
 """
 from __future__ import annotations
 
@@ -126,7 +163,7 @@ from repro.core import craq, netchain, store as store_lib
 from repro.core import txn as txn_lib
 from repro.core.metrics import Metrics, ReplyLog
 from repro.core.store import Store
-from repro.core.txn import LockTable
+from repro.core.txn import LockTable, WaveState
 from repro.core.types import (
     CLIENT_BASE,
     MULTICAST,
@@ -142,12 +179,14 @@ from repro.core.types import (
     OP_WRITE,
     OP_WRITE_NACK,
     TO_CLIENT,
+    WAVE_BASE,
     ChainConfig,
     ClusterConfig,
     Msg,
     PartitionMap,
     Roles,
     as_cluster,
+    is_txn_op,
 )
 from repro.distributed.shard import shard_map
 
@@ -168,6 +207,9 @@ class SimState(NamedTuple):
                          #     the module docstring's contract)
     pmap: PartitionMap   # versioned bucket->chain partition map (CP-owned;
                          #     see the partition-epoch rules above)
+    wave: WaveState      # [C, W] in-network 2PC coordinator slots (device-
+                         #     owned after host admission; see the wave-table
+                         #     rules above - zero-size when wave_depth == 0)
     t: jax.Array         # [] int32 tick counter (shared; chains are in step)
 
 
@@ -464,6 +506,37 @@ def segmented_route(flat: Msg, alive: jax.Array, chain_pos: jax.Array,
     return routed, dropped, mcast_copies, mcast_hop_sum
 
 
+def cluster_route(flat: Msg, target: jax.Array, n_chains: int, cap: int):
+    """Cluster-level router for coordinator traffic: deliver each live
+    message of a flat [N] batch to the chain named by ``target`` ([N]
+    int32; -1 = drop).  Same segmented-sort idiom as the per-chain fabric
+    - one value sort of ``(target segment, original index)``, so each
+    chain's deliveries arrive contiguous and in flat order - but across
+    the *chain* axis, which the per-chain fabric never crosses.  Returns
+    ``(routed [n_chains, cap] Msg, overflow [n_chains] counts)``; messages
+    beyond ``cap`` in any chain's run are dropped (the engine sizes caps
+    to the exact worst case, so overflow only occurs when a caller shrinks
+    ``wave_route_capacity`` below it - and is then accounted in drops).
+    """
+    N = flat.op.shape[0]
+    i32 = jnp.int32
+    live = (flat.op != OP_NOP) & (target >= 0) & (target < n_chains)
+    seg = jnp.where(live, target, n_chains)
+    key = seg.astype(i32) * N + jnp.arange(N, dtype=i32)
+    skey = jnp.sort(key)
+    order = skey % N
+    starts = jnp.searchsorted(
+        skey, jnp.arange(n_chains + 1, dtype=i32) * N
+    ).astype(i32)
+    cnt = starts[1:] - starts[:-1]                        # [C]
+    idx = starts[:-1][:, None] + jnp.arange(cap, dtype=i32)[None, :]
+    valid = jnp.arange(cap, dtype=i32)[None, :] < cnt[:, None]
+    gidx = order[jnp.clip(idx, 0, max(N - 1, 0))]
+    routed: Msg = jax.tree.map(lambda x: x[gidx], flat)
+    routed = jax.vmap(Msg.mask)(routed, valid)
+    return routed, jnp.maximum(cnt - cap, 0)
+
+
 def pack_lanes(msgs: list[Msg]) -> Msg:
     """Concatenate [n, w_k] message lanes along axis 1 by writing each lane
     into one pre-allocated [n, sum(w_k)] buffer (replaces the per-field
@@ -499,6 +572,10 @@ class ChainSim:
         route_capacity: int = 256,
         reply_capacity: int = 4096,
         fabric: str = "segmented",
+        wave_depth: int = 0,
+        wave_keys: int = 4,
+        wave_log_capacity: int = 256,
+        wave_route_capacity: int | None = None,
     ):
         assert fabric in ("segmented", "dense"), fabric
         self.cluster = as_cluster(cfg)
@@ -509,6 +586,21 @@ class ChainSim:
         self.c_route = route_capacity
         self.capacity = inject_capacity + route_capacity
         self.reply_capacity = reply_capacity
+        # In-network 2PC coordinator (wave-table rules, module docstring).
+        # wave_depth == 0 (default) keeps every wave leaf zero-size and the
+        # compiled tick identical to the wave-less engine.
+        self.wave_depth = wave_depth
+        self.wave_keys = wave_keys
+        self.wave_log_capacity = wave_log_capacity
+        # a chain's W slots have <= W*KT outstanding sub-ops with <= 1
+        # reply each, so W*KT control-reply slots provably never overflow
+        self.coord_capacity = max(wave_depth * wave_keys, 1)
+        # worst case every chain's every slot addresses one chain: C*W*KT
+        self.wave_sub_capacity = (
+            wave_route_capacity
+            if wave_route_capacity is not None
+            else max(self.C * wave_depth * wave_keys, 1)
+        )
         # "segmented" (default) is the O(M log M) production fabric;
         # "dense" is the faithful pre-segmented engine - the [n, M]-matrix
         # router plus its O(B^2) txn-stage ranking and scatter-per-field
@@ -530,12 +622,16 @@ class ChainSim:
             jax.vmap(lambda _: Msg.empty(self.c_route, self.cfg.value_words))(
                 jnp.arange(self.n)
             ),
-            Metrics.zeros(),
+            Metrics.zeros(self.cluster.num_buckets),
             ReplyLog.empty(self.reply_capacity),
+            WaveState.empty(
+                self.wave_depth, self.wave_keys, self.wave_log_capacity,
+                self.coord_capacity, self.cfg.value_words,
+            ),
         )
 
     def init_state(self) -> SimState:
-        stores, inbox, metrics, replies = jax.vmap(
+        stores, inbox, metrics, replies, wave = jax.vmap(
             lambda _: self._init_chain_state()
         )(jnp.arange(self.C))
         return SimState(
@@ -548,6 +644,7 @@ class ChainSim:
             replies=replies,
             roles=full_roles_table(self.n, self.C),
             pmap=self.cluster.default_partition(),
+            wave=wave,
             t=jnp.zeros((), jnp.int32),
         )
 
@@ -563,7 +660,7 @@ class ChainSim:
 
     # -- one tick of ONE chain (vmapped over the chain axis) ---------------
     def _chain_tick(self, stores, inbox, locks, metrics, replies, injected,
-                    roles, pmap, t):
+                    roles, pmap, t, sub_in=None, wave_final=None):
         """stores [n,...], inbox [n,c_route], locks [K]-leaf LockTable,
         injected [n,c_in], roles [n]-leaf Roles table, pmap this chain's
         PartitionMap view ([K] slot rows, shared [G] columns), t [].
@@ -577,6 +674,16 @@ class ChainSim:
         entry node (see the partition-epoch rules), then transaction ops
         are resolved by the head's lock stage before the node step sees
         the batch (see txn.head_txn_stage).
+
+        With ``wave_depth > 0`` two extra lanes ride the tick (wave-table
+        rules, module docstring): ``sub_in`` [Xs] is the flat batch of
+        coordinator sub-ops the cluster router delivered to this chain
+        (they enter at the live head like client transaction traffic) and
+        ``wave_final`` [W] is this chain's coordinator's final client
+        replies (they exit through the fabric like any tail reply).  The
+        return grows a sixth element ``ctrl_out``: the flat exit stream
+        addressed back at coordinators (``client >= WAVE_BASE``) that the
+        cluster-level control router delivers instead of the reply log.
         """
         n, cfg = self.n, self.cfg
         alive = roles.alive          # [n] bool
@@ -605,7 +712,30 @@ class ChainSim:
             extra=injected.extra + inj_live.astype(jnp.int32)
         )
         n_injected = inj_live.sum()
-        full_inbox = pack_lanes([injected, inbox])
+        lanes = [injected, inbox]
+        n_wave_in = jnp.zeros((), jnp.int32)
+        if self.wave_depth:
+            # Coordinator sub-ops enter at the live head (the node their
+            # locks live at), entry-stamped and leg-accounted exactly like
+            # a client query - the head cannot tell a wave PREPARE from a
+            # host-planned one (src >= WAVE_BASE >= CLIENT_BASE).
+            head = roles.head_pos[0]
+            sub_live = sub_in.op != OP_NOP
+            n_wave_in = sub_live.sum()
+            sub_in = sub_in._replace(
+                entry=jnp.where(sub_live, head, sub_in.entry),
+                extra=sub_in.extra + sub_live.astype(jnp.int32),
+            )
+            at_head = jnp.arange(n, dtype=jnp.int32)[:, None] == head
+            sub_lane: Msg = jax.tree.map(
+                lambda x: jnp.broadcast_to(x[None], (n,) + x.shape), sub_in
+            )
+            sub_lane = jax.vmap(Msg.mask)(
+                sub_lane,
+                jnp.broadcast_to(at_head, (n, sub_in.op.shape[0])),
+            )
+            lanes.append(sub_lane)
+        full_inbox = pack_lanes(lanes)
         # Pipeline passes are counted on arrival (pre-stage): a PREPARE
         # resolved by the lock stage is one match-action pass like any
         # other query.
@@ -644,7 +774,24 @@ class ChainSim:
         )(stores, roles, full_inbox)
         # The lock stage's and the stale stage's replies join the node
         # outboxes on the fabric (packet-accounted like any other reply).
-        outbox = pack_lanes([outbox, txn_out, stale_out])
+        out_lanes = [outbox, txn_out, stale_out]
+        if self.wave_depth:
+            # the coordinator's final client replies exit from the head
+            # like any tail reply (one client leg, reply-logged)
+            wf_live = wave_final.op != OP_NOP
+            wave_final = wave_final._replace(
+                src=jnp.where(wf_live, head, wave_final.src)
+            )
+            wf_lane: Msg = jax.tree.map(
+                lambda x: jnp.broadcast_to(x[None], (n,) + x.shape),
+                wave_final,
+            )
+            wf_lane = jax.vmap(Msg.mask)(
+                wf_lane,
+                jnp.broadcast_to(at_head, (n, wave_final.op.shape[0])),
+            )
+            out_lanes.append(wf_lane)
+        outbox = pack_lanes(out_lanes)
         # A dead node emits nothing (its inbox is already empty; this pins
         # the invariant even if a node_step ever emitted unsolicited).
         outbox = jax.vmap(Msg.mask)(
@@ -691,6 +838,7 @@ class ChainSim:
             + mcast_hop_sum
             + jnp.sum(is_exit)  # final leg to the client
             + n_injected        # client -> entry-node leg
+            + n_wave_in         # coordinator -> head leg (wave sub-ops)
         )
         msg_bytes = cfg.header_bytes + cfg.payload_bytes
         msgs = (
@@ -698,9 +846,17 @@ class ChainSim:
             + mcast_copies
             + jnp.sum(is_exit)
             + n_injected
+            + n_wave_in
         )
 
         # ---------------- exits -> reply log ----------------
+        # Exits addressed back at a coordinator (client >= WAVE_BASE) are
+        # 2PC control replies for the wave table: diverted to the cluster
+        # control router (ctrl_out), never reply-logged.
+        if self.wave_depth:
+            wave_bound = is_exit & (flat.client >= WAVE_BASE)
+            ctrl_out = flat.mask(wave_bound)
+            is_exit = is_exit & ~wave_bound
         exits = flat.mask(is_exit)
         is_nack = exits.op == OP_WRITE_NACK
         # 2PC control exits (phase-1 ACKs, prepare NACKs, abort acks) and
@@ -716,6 +872,21 @@ class ChainSim:
         )
         new_replies = replies.append(exits, t + 1,
                                      dense=self.fabric == "dense")
+
+        # Per-bucket conflict heat (ROADMAP item-1 telemetry): every
+        # PREPARE the lock stage denied, scattered onto the bucket that
+        # owns the contended slot.  A raw integral the CP can EWMA-decay
+        # host-side to find buckets worth splitting or rebalancing.
+        B = metrics.conflict_heat.shape[0]
+        tko = txn_out.op.reshape(-1)
+        tkk = txn_out.key.reshape(-1)
+        bi = pmap.slot_bucket[
+            jnp.clip(tkk, 0, pmap.slot_bucket.shape[0] - 1)
+        ]
+        is_cnack = (tko == OP_PREPARE_NACK) & (bi >= 0)
+        new_heat = metrics.conflict_heat.at[
+            jnp.where(is_cnack, bi, B)
+        ].add(1, mode="drop")
 
         new_metrics = Metrics(
             packets=metrics.packets + packets,
@@ -743,8 +914,17 @@ class ChainSim:
             stale_routes=metrics.stale_routes + n_stale,
             # bumped by the CP (complete_rebalance), never by the tick
             migration_moves=metrics.migration_moves,
+            # bumped by the coordinator stage in ``tick`` (the wave vmap
+            # runs outside this per-chain function)
+            wave_commits=metrics.wave_commits,
+            wave_aborts=metrics.wave_aborts,
+            wave_occupancy=metrics.wave_occupancy,
+            conflict_heat=new_heat,
         )
 
+        if self.wave_depth:
+            return (new_stores, routed, new_locks, new_metrics, new_replies,
+                    ctrl_out)
         return new_stores, routed, new_locks, new_metrics, new_replies
 
     def _lift(self, injected: Msg) -> Msg:
@@ -778,10 +958,58 @@ class ChainSim:
         pmap_axes = PartitionMap(
             owner=None, base=None, epoch=None, slot_bucket=0, slot_epoch=0
         )
-        stores, inbox, locks, metrics, replies = jax.vmap(
-            self._chain_tick, in_axes=(0, 0, 0, 0, 0, 0, 0, pmap_axes, None)
-        )(state.stores, state.inbox, state.locks, state.metrics,
-          state.replies, injected, state.roles, state.pmap, state.t)
+        if self.wave_depth:
+            # ---- in-network coordinator stage (wave-table rules) --------
+            # Runs BEFORE the chain ticks on last tick's control replies
+            # (wave.coord_in): transitions slots, emits this tick's
+            # PREPARE/COMMIT/ABORT sub-ops and final client replies.
+            wave, sub_out, sub_target, final_out, wstats = jax.vmap(
+                txn_lib.wave_coordinator_step, in_axes=(0, 0, None)
+            )(state.wave, jnp.arange(self.C, dtype=jnp.int32), state.t)
+            # sub-ops cross chains: one cluster-level segmented route to
+            # each key's owning chain (the per-chain fabric never crosses)
+            flat_sub: Msg = jax.tree.map(
+                lambda x: x.reshape((-1,) + x.shape[2:]), sub_out
+            )
+            sub_in, sub_drop = cluster_route(
+                flat_sub, sub_target.reshape(-1), self.C,
+                self.wave_sub_capacity,
+            )
+            stores, inbox, locks, metrics, replies, ctrl_out = jax.vmap(
+                self._chain_tick,
+                in_axes=(0, 0, 0, 0, 0, 0, 0, pmap_axes, None, 0, 0),
+            )(state.stores, state.inbox, state.locks, state.metrics,
+              state.replies, injected, state.roles, state.pmap, state.t,
+              sub_in, final_out)
+            # control replies ride back to their coordinator's chain and
+            # land in its coord_in buffer for next tick's stage - the
+            # coordinator id encodes the chain (client = WAVE_BASE +
+            # chain * W + slot)
+            flat_ctrl: Msg = jax.tree.map(
+                lambda x: x.reshape((-1,) + x.shape[2:]), ctrl_out
+            )
+            ctrl_tgt = jnp.where(
+                flat_ctrl.op != OP_NOP,
+                (flat_ctrl.client - WAVE_BASE) // self.wave_depth,
+                -1,
+            )
+            coord_in, ctrl_drop = cluster_route(
+                flat_ctrl, ctrl_tgt, self.C, self.coord_capacity
+            )
+            wave = wave._replace(coord_in=coord_in)
+            metrics = metrics._replace(
+                drops=metrics.drops + sub_drop + ctrl_drop,
+                wave_commits=metrics.wave_commits + wstats[0],
+                wave_aborts=metrics.wave_aborts + wstats[1],
+                wave_occupancy=metrics.wave_occupancy + wstats[2],
+            )
+        else:
+            stores, inbox, locks, metrics, replies = jax.vmap(
+                self._chain_tick,
+                in_axes=(0, 0, 0, 0, 0, 0, 0, pmap_axes, None),
+            )(state.stores, state.inbox, state.locks, state.metrics,
+              state.replies, injected, state.roles, state.pmap, state.t)
+            wave = state.wave
         return SimState(
             stores=stores,
             inbox=inbox,
@@ -790,6 +1018,7 @@ class ChainSim:
             replies=replies,
             roles=state.roles,
             pmap=state.pmap,
+            wave=wave,
             t=state.t + 1,
         )
 
@@ -846,11 +1075,17 @@ class ChainDist:
     a ``group_axis`` they are automatically scoped per chain group: chains
     exchange nothing with each other, matching the disjoint key partition.
 
-    ``ChainDist`` does not carry a lock table yet: cross-chain transactions
-    (core/txn.py) are a ``ChainSim`` subsystem until the dry-run grows a
-    per-chain lock shard (client txn opcodes reaching this engine are
-    processed write-like without admission control - route transactional
-    traffic through the simulator engine for now).
+    ``ChainDist`` carries the per-chain lock shard as a fifth step argument
+    (``LockTable`` [C, K] leaves, replicated along the position axis like
+    the partition map's slot tables): transaction candidates are
+    all-gathered across the chain group and every device re-derives the
+    *identical* head lock transition (``txn.head_txn_stage`` - the lock
+    edits depend only on the gathered batch and the replicated table, so
+    the output stays replicated; each device then keeps only its own row
+    of the passed-through/reply batches).  Client txn opcodes reaching
+    this engine thus get the same admission control as the simulator's;
+    the in-network wave coordinator (wave-table rules) remains a
+    ``ChainSim`` subsystem for now.
     """
 
     def __init__(
@@ -899,6 +1134,13 @@ class ChainDist:
             lambda x: jnp.broadcast_to(x[None], (self.C,) + x.shape), stores
         )
 
+    def init_locks(self) -> LockTable:
+        """All-free [C, K] lock shard shaped for ``make_step`` (C == 1 when
+        ungrouped, like the partition map's slot tables)."""
+        return jax.vmap(lambda _: txn_lib.init_locks(self.cfg))(
+            jnp.arange(self.C)
+        )
+
     def full_roles(self) -> Roles:
         """All-slots-live role table shaped for this engine: [n] leaves
         (ungrouped) or [C, n] (grouped).  Feed ``Coordinator.roles_table()``
@@ -924,12 +1166,12 @@ class ChainDist:
         node_step = self.node_step
 
         def step(stores: Store, inbox: Msg, roles: Roles,
-                 pmap: PartitionMap):
+                 pmap: PartitionMap, locks: LockTable):
             """shard_map body: [1, ...] (or [1, 1, ...]) local shards; one
-            chain tick under the CP-installed live role table and partition
-            map (traced arguments - membership edits and bucket migrations
-            re-run, never re-compile).  Returns (stores', inbox',
-            replies_local)."""
+            chain tick under the CP-installed live role table, partition
+            map and lock shard (traced arguments - membership edits,
+            bucket migrations and lock churn re-run, never re-compile).
+            Returns (stores', inbox', replies_local, locks')."""
             unshard = (lambda x: x[0, 0]) if grouped else (lambda x: x[0])
             my_roles: Roles = jax.tree.map(unshard, roles)
             my_pos = my_roles.my_pos
@@ -939,6 +1181,8 @@ class ChainDist:
             # ungrouped engines carry the C=1 row)
             slot_epoch = pmap.slot_epoch[0]
             slot_bucket = pmap.slot_bucket[0]
+            # ... and its lock shard, replicated along the position axis
+            my_locks: LockTable = jax.tree.map(lambda x: x[0], locks)
             # a dead device receives nothing and processes nothing
             local_in = local_in.mask(
                 jnp.broadcast_to(my_roles.alive, local_in.op.shape)
@@ -951,6 +1195,43 @@ class ChainDist:
             # helper the simulator's tick runs.
             local_in, stale_out, _ = stale_route_admission(
                 local_in, slot_epoch, slot_bucket, my_pos
+            )
+
+            # --- head lock stage, replicated (lock-table rules) -----------
+            # Transaction candidates are all-gathered across the chain so
+            # every device sees the same [n, B] batch and re-derives the
+            # SAME lock transition (it depends only on the gathered batch,
+            # the replicated shard and the gathered role row - never on
+            # device-local store state) - the shard stays replicated with
+            # no collective write-back.  Each device then keeps its own
+            # row: passed-through COMMITs for the node step, its replies.
+            cand = is_txn_op(local_in.op) & (local_in.src >= CLIENT_BASE)
+            txn_feed = local_in.mask(cand)
+            gather = lambda x: jax.lax.all_gather(x, axis, axis=0, tiled=True)
+            txn_all: Msg = jax.tree.map(gather, txn_feed)     # [n*B]
+            txn_all = jax.tree.map(
+                lambda x: x.reshape((n, -1) + x.shape[1:]), txn_all
+            )
+            roles_all: Roles = jax.tree.map(
+                lambda x: gather(x[None]), my_roles
+            )                                                 # [n] leaves
+            # only the head row's replies are consumed (the ACK snapshot
+            # value is read from row head_pos), so broadcasting the local
+            # store is sound on the head and immaterial elsewhere
+            bstore = jax.tree.map(
+                lambda x: jnp.broadcast_to(x[None], (n,) + x.shape),
+                local_store,
+            )
+            new_locks, passed_all, rep_all, _ = txn_lib.head_txn_stage(
+                my_locks, roles_all, bstore, txn_all
+            )
+            passed_me = jax.tree.map(lambda x: x[my_pos], passed_all)
+            rep_me = jax.tree.map(lambda x: x[my_pos], rep_all)
+            local_in = jax.tree.map(
+                lambda a, b: jnp.where(
+                    cand.reshape(cand.shape + (1,) * (a.ndim - 1)), b, a
+                ),
+                local_in, passed_me,
             )
 
             new_store, outbox = node_step(cfg, local_store, my_roles, local_in)
@@ -985,7 +1266,9 @@ class ChainDist:
             from_fabric = all_fab.mask(take)
 
             replies = self._compact(
-                Msg.concat([outbox.mask(outbox.dst == TO_CLIENT), stale_out]),
+                Msg.concat([
+                    outbox.mask(outbox.dst == TO_CLIENT), stale_out, rep_me,
+                ]),
                 batch_per_node,
             )
 
@@ -997,6 +1280,7 @@ class ChainDist:
                 jax.tree.map(reshard, new_store),
                 jax.tree.map(reshard, next_inbox),
                 jax.tree.map(reshard, replies),
+                jax.tree.map(lambda x: x[None], new_locks),
             )
 
         spec = self._specs()
@@ -1011,11 +1295,25 @@ class ChainDist:
             owner=P(), base=P(), epoch=P(),
             slot_bucket=slot_spec, slot_epoch=slot_spec,
         )
+        # the lock shard replicates along the position axis, like the
+        # partition map's slot tables (every device re-derives the same
+        # transition from the all-gathered batch)
+        lock_spec = LockTable(
+            holder=slot_spec, client=slot_spec, version=slot_spec
+        )
+        # check_rep can't statically infer the lock shard's replication
+        # through the sort/searchsorted ops inside the lock stage; the
+        # replication is real by construction (the transition depends only
+        # on the all-gathered batch, the gathered role row and the
+        # replicated shard), asserted by test_chain_dist_lock_stage.
         return jax.jit(
             shard_map(
                 step,
                 mesh=self.mesh,
-                in_specs=(spec_store, msg_spec, roles_spec, pmap_spec),
-                out_specs=(spec_store, msg_spec, msg_spec),
+                in_specs=(
+                    spec_store, msg_spec, roles_spec, pmap_spec, lock_spec,
+                ),
+                out_specs=(spec_store, msg_spec, msg_spec, lock_spec),
+                check_rep=False,
             )
         )

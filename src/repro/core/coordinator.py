@@ -192,6 +192,19 @@ class Coordinator:
             locks = jax.tree.map(lambda x: x[chain_idx], locks)
         return locks_all_free(locks)
 
+    @staticmethod
+    def waves_drained(state, chain_idx: Optional[int] = None) -> bool:
+        """True when no in-network wave-table transaction is in flight on
+        ``chain_idx`` (or anywhere): every coordinator slot is FREE.  A
+        wave-less engine (``wave_depth == 0``) is trivially drained.  The
+        freeze/NACK path bounds the wait exactly like ``locks_drained``:
+        frozen chains NACK new PREPAREs, so in-flight waves abort or
+        commit and their slots free in bounded ticks."""
+        ph = np.asarray(state.wave.phase)
+        if chain_idx is not None:
+            ph = ph[chain_idx]
+        return bool((ph == 0).all())
+
     # -- data-plane role table (the DP's forwarding state) -------------------
     def roles_table(self) -> Roles:
         """[C, n] live role table reflecting current membership.

@@ -53,13 +53,26 @@ class Metrics(NamedTuple):
     migration_moves: jax.Array  # bucket migrations this chain participated
                                 # in (source or destination; bumped by the
                                 # CP's complete_rebalance, not by the tick)
+    wave_commits: jax.Array   # transactions the in-network wave coordinator
+                              # completed as committed (core/txn.py wave table)
+    wave_aborts: jax.Array    # wave transactions completed as aborted
+    wave_occupancy: jax.Array # sum over ticks of occupied wave slots - divide
+                              # by ticks for mean coordinator occupancy
+    conflict_heat: jax.Array  # [B] per-bucket PREPARE-NACK counts (the
+                              # ROADMAP item-1 telemetry hook: a raw integral
+                              # the CP can EWMA-decay host-side to find hot
+                              # buckets worth splitting/rebalancing)
 
     @staticmethod
-    def zeros() -> "Metrics":
-        """Scalar counters for one chain (the engine vmaps these over the
-        chain axis, yielding [C] leaves)."""
+    def zeros(num_buckets: int = 1) -> "Metrics":
+        """Counters for one chain (the engine vmaps these over the chain
+        axis, yielding [C] leaves - and a [C, B] leaf for the per-bucket
+        conflict heat)."""
         z = jnp.zeros((), jnp.int32)
-        return Metrics(*([z] * 18))
+        return Metrics(
+            *([z] * 21),
+            conflict_heat=jnp.zeros((num_buckets,), jnp.int32),
+        )
 
     def total(self) -> "Metrics":
         """Reduce per-chain [C] counters to cluster-wide scalars."""
@@ -70,11 +83,23 @@ class Metrics(NamedTuple):
         return {k: int(v) for k, v in self.total()._asdict().items()}
 
     def per_chain(self) -> dict:
-        """Per-chain counters as host lists (scalars become length-1)."""
-        return {
-            k: [int(x) for x in jnp.atleast_1d(v)]
-            for k, v in self._asdict().items()
-        }
+        """Per-chain counters as host lists (scalars become length-1;
+        multi-dim leaves like the per-bucket conflict heat are summed over
+        their trailing axes)."""
+        out = {}
+        for k, v in self._asdict().items():
+            a = jnp.atleast_1d(v)
+            if a.ndim > 1:
+                a = a.sum(axis=tuple(range(1, a.ndim)))
+            out[k] = [int(x) for x in a]
+        return out
+
+    def heat_per_bucket(self) -> list:
+        """Cluster-wide per-bucket conflict heat ([B] host list): the
+        [C, B] leaf summed over chains - every chain accounts NACKs only
+        for buckets it owns, so the sum is the per-bucket total."""
+        a = jnp.atleast_2d(self.conflict_heat)
+        return [int(x) for x in a.sum(axis=0)]
 
 
 class ReplyLog(NamedTuple):

@@ -87,6 +87,14 @@ VALUE_WORDS = 4
 # src ids >= CLIENT_BASE denote clients; below are chain node positions.
 CLIENT_BASE = 1 << 20
 
+# src/client ids >= WAVE_BASE denote device-resident 2PC coordinators (the
+# wave table of core/txn.py): id == WAVE_BASE + chain * W + slot.  Kept
+# above CLIENT_BASE on purpose - heads treat coordinator-emitted sub-ops
+# exactly like client transaction traffic (entry stamping, stale-route
+# admission, the lock stage), and replies addressed at or above WAVE_BASE
+# are routed back to their coordinator chain instead of the reply log.
+WAVE_BASE = 1 << 22
+
 # dst == NOWHERE means "message exits the system / empty slot".
 NOWHERE = -1
 # dst == MULTICAST: the P4 PRE analogue - router fans the packet out to every

@@ -281,13 +281,19 @@ class TxnWorkloadConfig:
     deliberately span several chains (forcing the 2PC path); the remaining
     transactions keep all keys on one chain (the planner's no-extra-round-
     trip fast path).  ``write_fraction`` splits each transaction's keys
-    into writes vs snapshot reads.
+    into writes vs snapshot reads.  ``key_skew="zipf"`` draws each chain's
+    local keys from a Zipf(``zipf_a``) popularity law instead of uniformly
+    (same inverse-CDF construction as ``WorkloadConfig``) - hot keys force
+    lock conflicts, the knob the conflict-heat telemetry is plotted
+    against.
     """
 
     n_txns: int = 32
     keys_per_txn: int = 2
     cross_chain_fraction: float = 1.0
     write_fraction: float = 1.0
+    key_skew: str = "uniform"
+    zipf_a: float = 1.2
     seed: int = 0
     txn_id_base: int = 1
     client_base: int = 0
@@ -312,6 +318,15 @@ def make_txn_workload(cfg: ChainConfig | ClusterConfig,
     C, K = cluster.n_chains, cluster.keys_in_use
     kpt = min(twl.keys_per_txn, cluster.num_global_keys)
     rng = np.random.default_rng(twl.seed)
+    if twl.key_skew == "zipf":
+        # same inverse-CDF popularity law as WorkloadConfig's reads/writes
+        w = np.arange(1, K + 1, dtype=np.float64) ** (-twl.zipf_a)
+        key_probs = w / w.sum()
+    else:
+        assert twl.key_skew == "uniform", twl.key_skew
+        key_probs = None
+    draw1 = lambda: int(rng.choice(K, p=key_probs))
+    draw_distinct = lambda m: rng.choice(K, size=m, replace=False, p=key_probs)
     txns = []
     for i in range(twl.n_txns):
         cross = (
@@ -324,14 +339,14 @@ def make_txn_workload(cfg: ChainConfig | ClusterConfig,
             rng.shuffle(chains)
             gkeys, used = [], set()
             for c in chains:
-                lk = int(rng.integers(0, K))
+                lk = draw1()
                 while (c, lk) in used:
                     lk = (lk + 1) % K
                 used.add((c, lk))
                 gkeys.append(int(cluster.global_key(lk, c)))
         else:
             c = (twl.seed + i) % C
-            locals_ = rng.choice(K, size=kpt, replace=False)
+            locals_ = draw_distinct(kpt)
             gkeys = [int(cluster.global_key(int(lk), c)) for lk in locals_]
         n_writes = max(1, round(kpt * twl.write_fraction)) \
             if twl.write_fraction > 0 else 0

@@ -264,6 +264,7 @@ def random_outbox_fields(rng, n: int, width: int, *, value_words: int = 4,
 # test_txn_serializability.py - one checker, two example sources).
 # ---------------------------------------------------------------------------
 _PROP_ENGINE = None
+_WAVE_PROP_ENGINE = None
 
 # Workload shape bounds: constant sim shapes across examples (no recompiles)
 # and waves that always fit the head injection lanes.
@@ -290,6 +291,28 @@ def prop_engine():
     return _PROP_ENGINE
 
 
+def wave_prop_engine():
+    """Same cluster as ``prop_engine`` but with the in-network wave-table
+    coordinator enabled - the engine behind ``driver="wave"`` runs of the
+    serializability oracle (separate singleton: wave_depth changes the
+    compiled tick, and jit caches key on the instance)."""
+    global _WAVE_PROP_ENGINE
+    if _WAVE_PROP_ENGINE is None:
+        from repro.core import ChainConfig, ChainSim, ClusterConfig
+
+        cluster = ClusterConfig(
+            chain=ChainConfig(n_nodes=3, num_keys=4, num_versions=8),
+            n_chains=2,
+        )
+        sim = ChainSim(cluster, inject_capacity=16, route_capacity=96,
+                       reply_capacity=512,
+                       wave_depth=PROP_MAX_TXNS_PER_WAVE,
+                       wave_keys=PROP_MAX_KEYS_PER_TXN,
+                       wave_log_capacity=64)
+        _WAVE_PROP_ENGINE = (cluster, sim)
+    return _WAVE_PROP_ENGINE
+
+
 def txn_waves_from_spec(spec):
     """Build Txn waves from a plain spec: [[(k1, k2, ...), ...], ...] -
     nested tuples of distinct global keys, one inner tuple per txn.  Values
@@ -310,20 +333,31 @@ def txn_waves_from_spec(spec):
     return waves
 
 
-def run_txn_waves_and_check(spec):
+def run_txn_waves_and_check(spec, driver="host"):
     """The serializability oracle: run the spec's waves through the shared
     engine, then assert (1) locks drained + chains converged, (2) committed
     txns are atomic, (3) the observed write precedence is acyclic, and (4)
-    serially replaying it reproduces every chain's store bit-exactly."""
+    serially replaying it reproduces every chain's store bit-exactly.
+
+    ``driver`` selects the coordinator under test: ``"host"`` drives each
+    wave through the host-side ``TxnDriver`` (the correctness oracle of
+    core/txn.py), ``"wave"`` admits the same waves into the in-network
+    wave-table coordinator (``TxnWaveDriver``) - same checks, wave
+    boundaries preserved (one run per wave, like the host driver)."""
     import numpy as np
 
-    from repro.core import (TxnDriver, TxnPlanner, committed_view,
-                            locks_all_free, reference_execute, serial_order)
+    from repro.core import (Coordinator, TxnDriver, TxnPlanner,
+                            TxnWaveDriver, committed_view, locks_all_free,
+                            reference_execute, serial_order)
 
-    cluster, sim = prop_engine()
+    assert driver in ("host", "wave"), driver
+    cluster, sim = prop_engine() if driver == "host" else wave_prop_engine()
     waves = txn_waves_from_spec(spec)
     state = sim.init_state()
-    drv = TxnDriver(sim, TxnPlanner(cluster))
+    if driver == "host":
+        drv = TxnDriver(sim, TxnPlanner(cluster))
+    else:
+        drv = TxnWaveDriver(sim, TxnPlanner(cluster))
     results = []
     for wave in waves:
         state, res = drv.run(state, wave)
@@ -334,6 +368,8 @@ def run_txn_waves_and_check(spec):
 
     assert locks_all_free(state.locks)
     assert int(state.stores.pending.sum()) == 0
+    if driver == "wave":
+        assert Coordinator.waves_drained(state)
 
     by_id = {t.txn_id: t for wave in waves for t in wave}
     committed_ids = {r.txn_id for r in results if r.committed}

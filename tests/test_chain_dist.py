@@ -21,6 +21,7 @@ roles = dist.full_roles()
 pmap = dist.default_pmap()
 B = 8
 step = dist.make_step(B)
+locks = dist.init_locks()
 
 def inject(op, key, val, node):
     m = Msg.empty(B)
@@ -34,12 +35,12 @@ def inject(op, key, val, node):
 
 inbox = inject(OP_WRITE, 3, 99, 0)
 for _ in range(8):
-    stores, inbox, replies = step(stores, inbox, roles, pmap)
+    stores, inbox, replies, locks = step(stores, inbox, roles, pmap, locks)
 assert stores.values[:, 3, 0, 0].tolist() == [99]*4, stores.values[:, 3, 0, 0]
 assert stores.pending[:, 3].tolist() == [0]*4
 
 inbox = inject(OP_READ, 3, 0, 2)
-stores, inbox, replies = step(stores, inbox, roles, pmap)
+stores, inbox, replies, locks = step(stores, inbox, roles, pmap, locks)
 r = jax.device_get(replies)
 live = r.op != 0
 assert live.sum() == 1 and r.value[live][0, 0] == 99, r.value[live]
@@ -66,6 +67,7 @@ stores = dist.init_state()
 pmap = dist.default_pmap()
 B = 8
 step = dist.make_step(B)
+locks = dist.init_locks()
 
 def inject(op, key, val, node):
     m = Msg.empty(B)
@@ -83,13 +85,13 @@ roles = jax.tree.map(lambda x: x[0], co.roles_table())  # [n] leaves
 
 inbox = inject(OP_WRITE, 3, 99, 0)
 for _ in range(8):
-    stores, inbox, replies = step(stores, inbox, roles, pmap)
+    stores, inbox, replies, locks = step(stores, inbox, roles, pmap, locks)
 assert stores.values[:, 3, 0, 0].tolist() == [99, 0, 99, 99], \\
     stores.values[:, 3, 0, 0]
 assert stores.pending[:, 3].tolist() == [0]*4
 
 inbox = inject(OP_READ, 3, 0, 2)
-stores, inbox, replies = step(stores, inbox, roles, pmap)
+stores, inbox, replies, locks = step(stores, inbox, roles, pmap, locks)
 r = jax.device_get(replies)
 live = r.op != 0
 assert live.sum() == 1 and r.value[live][0, 0] == 99, r.value[live]
@@ -116,6 +118,7 @@ roles = dist.full_roles()
 pmap = dist.default_pmap()
 B = 8
 step = dist.make_step(B)
+locks = dist.init_locks()
 
 def inject(op, key, val, node, chain):
     m = Msg.empty(B)
@@ -131,19 +134,78 @@ def inject(op, key, val, node, chain):
 
 inbox = inject(OP_WRITE, 5, 123, 0, 1)
 for _ in range(8):
-    stores, inbox, replies = step(stores, inbox, roles, pmap)
+    stores, inbox, replies, locks = step(stores, inbox, roles, pmap, locks)
 assert stores.values[1, :, 5, 0, 0].tolist() == [123]*4, stores.values[1, :, 5, 0, 0]
 assert stores.values[0, :, 5, 0, 0].tolist() == [0]*4   # chain 0 untouched
 assert int(stores.pending.sum()) == 0
 
 inbox = inject(OP_READ, 5, 0, 2, 1)
-stores, inbox, replies = step(stores, inbox, roles, pmap)
+stores, inbox, replies, locks = step(stores, inbox, roles, pmap, locks)
 r = jax.device_get(replies)
 live = r.op != 0
 assert live.sum() == 1 and r.value[live][0, 0] == 123, r.value[live]
 print("GROUPS_OK")
 """)
     assert "GROUPS_OK" in out
+
+
+@pytest.mark.slow
+def test_chain_dist_lock_stage():
+    """The dist engine's replicated head lock stage: a PREPARE at the head
+    acquires the lock and ACKs, a conflicting PREPARE NACKs, COMMIT lands
+    the value and releases - the lock shard stays consistent (replicated)
+    across devices without a collective write-back."""
+    out = run_with_devices("""
+import jax, jax.numpy as jnp
+from repro.core import ChainConfig, ChainDist, CLIENT_BASE
+from repro.core.types import (Msg, OP_PREPARE, OP_PREPARE_ACK,
+                              OP_PREPARE_NACK, OP_COMMIT, OP_TXN_REPLY)
+
+mesh = jax.make_mesh((4,), ("chain",))
+cfg = ChainConfig(n_nodes=4, num_keys=16, num_versions=4, protocol="netcraq")
+dist = ChainDist(cfg, mesh, axis="chain")
+stores = dist.init_state()
+roles = dist.full_roles()
+pmap = dist.default_pmap()
+B = 8
+step = dist.make_step(B)
+locks = dist.init_locks()
+
+def inject(op, key, val, seq, client, slot=0, node=0):
+    m = Msg.empty(B)
+    m = jax.tree.map(lambda x: jnp.tile(x[None], (4,) + (1,)*x.ndim), m)
+    return m._replace(
+        op=m.op.at[node, slot].set(op), key=m.key.at[node, slot].set(key),
+        value=m.value.at[node, slot, 0].set(val),
+        seq=m.seq.at[node, slot].set(seq),
+        src=m.src.at[node, slot].set(CLIENT_BASE+client),
+        client=m.client.at[node, slot].set(CLIENT_BASE+client),
+        qid=m.qid.at[node, slot].set(40+slot),
+        dst=m.dst.at[node, slot].set(node))
+
+# two PREPAREs for the same key in one batch: first wins, second NACKs
+m1 = inject(OP_PREPARE, 3, 0, 7, 1, slot=0)
+m2 = inject(OP_PREPARE, 3, 0, 8, 2, slot=1)
+live2 = m2.op != 0
+inbox = jax.tree.map(lambda a, b: jnp.where(
+    live2.reshape(live2.shape + (1,)*(a.ndim - live2.ndim)), b, a), m1, m2)
+stores, inbox, replies, locks = step(stores, inbox, roles, pmap, locks)
+r = jax.device_get(replies)
+ops = r.op[r.op != 0].tolist()
+assert sorted(ops) == sorted([OP_PREPARE_ACK, OP_PREPARE_NACK]), ops
+assert locks.holder[0, 3].tolist() == 7, locks.holder
+assert locks.client[0, 3].tolist() == CLIENT_BASE + 1
+
+# COMMIT releases the lock and the write propagates to every live node
+inbox = inject(OP_COMMIT, 3, 99, 7, 1)
+for _ in range(8):
+    stores, inbox, replies, locks = step(stores, inbox, roles, pmap, locks)
+assert locks.holder[0, 3].tolist() == -1, locks.holder
+assert locks.version[0, 3].tolist() == 1
+assert stores.values[:, 3, 0, 0].tolist() == [99]*4, stores.values[:, 3, 0, 0]
+print("LOCK_STAGE_OK")
+""")
+    assert "LOCK_STAGE_OK" in out
 
 
 @pytest.mark.slow

@@ -107,6 +107,64 @@ def test_mixed_lifecycle_never_recompiles():
     assert co.chains[0].node_ids == [0, 1, 2, 3]
 
 
+def test_wave_lifecycle_never_recompiles():
+    """The wave-table engine shares the zero-recompile contract: admitting
+    transaction waves into the in-network coordinator across a node
+    failure + recovery AND a live bucket migration is pure state swapping -
+    the compiled tick/drain never grow after warmup."""
+    from repro.core import TxnWaveDriver
+
+    cl = _cluster()
+    co = Coordinator(cl)
+    sim = ChainSim(cl, inject_capacity=8, route_capacity=64,
+                   reply_capacity=1024, wave_depth=4, wave_keys=2,
+                   wave_log_capacity=64)
+    state = sim.init_state()
+    drv = TxnWaveDriver(sim, TxnPlanner(cl, coordinator=co))
+
+    # warmup: one admitted wave compiles the tick + the step-ticks drain;
+    # the CP surgery below drains in 4-tick programs - warm that static
+    # length too (one compile per scan length, by design)
+    state, res = drv.run(state, [Txn(txn_id=1, writes=((0, 11), (4, 22)))])
+    assert res[0].committed
+    state = sim.drain(state, 4)
+    warm_tick = ChainSim.tick._cache_size()
+    warm_drain = ChainSim.drain._cache_size()
+
+    # --- fail/recover node 1 of chain 0 between waves -------------------
+    co.fail_node(0, 1)
+    state = co.install_roles(state)
+    state, res = drv.run(state, [Txn(txn_id=2, writes=((1, 33), (5, 44)))])
+    assert res[0].committed
+    co.begin_recovery(0)
+    state = co.install_roles(state)
+    state = sim.drain(state, 4)
+    _, stores = co.complete_recovery(0, 1, 1, state.stores,
+                                     locks=state.locks)
+    state = co.install_roles(state._replace(stores=stores))
+
+    # --- live bucket migration, then waves under the new epoch ----------
+    co.begin_rebalance(0, 1)
+    state = co.install_roles(state)
+    state = sim.drain(state, 4)
+    state = co.complete_rebalance(state)
+    assert co.partition_epoch == 1
+    # keys 1 and 6 straddle the post-migration map (cross-chain 2PC)
+    state, res = drv.run(state, [Txn(txn_id=3, writes=((1, 55), (6, 66))),
+                                 Txn(txn_id=4, writes=((2, 77),))])
+    assert all(r.committed for r in res)
+
+    assert ChainSim.tick._cache_size() == warm_tick, (
+        "wave admission across CP surgery recompiled the donated tick"
+    )
+    assert ChainSim.drain._cache_size() == warm_drain, (
+        "the scanned drain recompiled across wave admission"
+    )
+    assert Coordinator.waves_drained(state)
+    md = state.metrics.total().asdict()
+    assert md["wave_commits"] == 4 and md["wave_aborts"] == 0, md
+
+
 def test_tick_donates_its_input_state():
     """The rebinding contract is real: after ``tick(state, inj)`` the old
     state's buffers are gone (donated into the output) - touching them
