@@ -1,0 +1,47 @@
+"""repro-lint: static enforcement of the data-plane contract.
+
+The engine's performance headline rests on invariants that used to live
+only in prose (the ``core/chain.py`` contract docstring) and in
+reviewers' heads:
+
+* every ``SimState`` leaf is a *traced argument* of the jitted tick,
+  never a closure-captured constant (zero-recompile contract);
+* donated buffers (``donate_argnums``) are rebound by every caller;
+* scalars entering the tick are dtype-pinned ``int32`` (the PR 2
+  ``Msg.mask`` double-compile bug);
+* fabric routers stay scatter-free (sort + searchsorted, never
+  ``.at[...]`` batch scatters).
+
+P4 gets these guarantees from its compiler; this package gives the jax
+"data plane" the same machine-checked contract.  It is pure ``ast``
+analysis - importing it never imports jax, so the lint lane runs in
+milliseconds with no accelerator runtime.
+
+Entry points: ``python -m repro.analysis`` or the ``repro-lint``
+console script.  See ``repro.analysis.rules`` for the rule catalogue
+(RL001-RL005) and ``repro.analysis.pragmas`` for the suppression
+grammar (``# repro-lint: ignore[RULE-ID] <reason>``).
+"""
+from __future__ import annotations
+
+from .engine import LintResult, run_lint, run_lint_sources, walk_paths
+from .pragmas import Pragma, scan_pragmas
+from .registry import RULES, Rule
+from .report import Finding, render_human, render_json
+
+# Importing the rules package registers RL001-RL005 with the registry.
+from . import rules as _rules  # noqa: F401  (registration side effect)
+
+__all__ = [
+    "Finding",
+    "LintResult",
+    "Pragma",
+    "RULES",
+    "Rule",
+    "render_human",
+    "render_json",
+    "run_lint",
+    "run_lint_sources",
+    "scan_pragmas",
+    "walk_paths",
+]

@@ -1,0 +1,75 @@
+"""Command-line front end: ``repro-lint`` / ``python -m repro.analysis``.
+
+Exit codes: 0 clean, 1 unsuppressed findings, 2 usage error.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import Optional, Sequence
+
+from .engine import run_lint
+from .registry import RULES
+from .report import dump_json, render_human
+
+
+def _build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="repro-lint",
+        description=(
+            "Static data-plane contract linter: donation safety, "
+            "traced-leaf, dtype-pin, recompile-hazard and "
+            "scatter-discipline passes over the repro tree."
+        ),
+    )
+    ap.add_argument("paths", nargs="*",
+                    help="files or directories to lint (e.g. src benchmarks)")
+    ap.add_argument("--strict", action="store_true",
+                    help="require a reason on every pragma")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write the machine-readable report to PATH")
+    ap.add_argument("--rules", metavar="IDS", default=None,
+                    help="comma-separated subset of rule ids to run")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalogue and exit")
+    return ap
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = _build_parser()
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rid in sorted(RULES):
+            r = RULES[rid]
+            print(f"{rid}  {r.summary}")
+            print(f"       {r.rationale}")
+        return 0
+
+    if not args.paths:
+        print("repro-lint: error: no paths given "
+              "(try: repro-lint src benchmarks tests examples)",
+              file=sys.stderr)
+        return 2
+
+    rules = None
+    if args.rules:
+        rules = [r.strip() for r in args.rules.split(",") if r.strip()]
+
+    try:
+        result = run_lint(args.paths, rules=rules, strict=args.strict)
+    except FileNotFoundError as e:
+        print(f"repro-lint: error: no such path: {e.args[0]}", file=sys.stderr)
+        return 2
+    except KeyError as e:
+        print(f"repro-lint: error: {e.args[0]}", file=sys.stderr)
+        return 2
+
+    render_human(result, sys.stdout)
+    if args.json:
+        dump_json(result, args.json, strict=args.strict)
+    return 0 if result.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,316 @@
+"""Parsed-file context and the cross-file project index.
+
+The linter runs in two passes.  Pass one parses every file and builds a
+``ProjectIndex``: which NamedTuple classes carry ``jax.Array`` lanes
+(Msg, Metrics, WaveState, LockTable, ...), which module-level names are
+weak python-int constants (OP_*, NOWHERE, ...), and which callables
+donate which caller-side argument positions.  Pass two runs each rule
+over each file with that index in hand, so e.g. RL001 in a benchmark
+file knows that ``sim.tick(state, inj)`` donates position 0 even though
+``tick`` is defined in ``core/chain.py``.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Iterable, Optional
+
+from .pragmas import Pragma, scan_pragmas
+
+# jnp constructors whose results are arrays (for RL002's module-level /
+# closure-captured array detection and RL003's dtype inference).
+ARRAY_CTORS = {
+    "array", "asarray", "zeros", "ones", "full", "arange", "eye",
+    "linspace", "zeros_like", "ones_like", "full_like",
+}
+# Module aliases treated as array namespaces.  Plain ``numpy`` counts
+# for RL002 (a closed-over np array is baked into the executable as a
+# constant - same traced-leaf violation).
+ARRAY_MODULES = {"jnp", "jax.numpy", "np", "numpy"}
+
+ARRAY_ANNOTATIONS = {
+    "jax.Array", "Array", "jnp.ndarray", "jax.numpy.ndarray", "chex.Array",
+}
+
+
+def dotted(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` attribute chains to a string; None for anything else."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def is_array_ctor(call: ast.Call) -> bool:
+    name = dotted(call.func)
+    if name is None or "." not in name:
+        return False
+    mod, _, fn = name.rpartition(".")
+    return mod in ARRAY_MODULES and fn in ARRAY_CTORS
+
+
+def const_int_value(node: ast.AST) -> Optional[int]:
+    """Evaluate compile-time python-int expressions (``1 << 20``, ``-1``)."""
+    if isinstance(node, ast.Constant) and type(node.value) is int:
+        return node.value
+    if isinstance(node, ast.UnaryOp):
+        v = const_int_value(node.operand)
+        if v is None:
+            return None
+        if isinstance(node.op, ast.USub):
+            return -v
+        if isinstance(node.op, ast.Invert):
+            return ~v
+        return None
+    if isinstance(node, ast.BinOp):
+        lhs, rhs = const_int_value(node.left), const_int_value(node.right)
+        if lhs is None or rhs is None:
+            return None
+        try:
+            op = {
+                ast.Add: lambda a, b: a + b,
+                ast.Sub: lambda a, b: a - b,
+                ast.Mult: lambda a, b: a * b,
+                ast.FloorDiv: lambda a, b: a // b,
+                ast.Mod: lambda a, b: a % b,
+                ast.LShift: lambda a, b: a << b,
+                ast.RShift: lambda a, b: a >> b,
+                ast.BitOr: lambda a, b: a | b,
+                ast.BitAnd: lambda a, b: a & b,
+                ast.BitXor: lambda a, b: a ^ b,
+                ast.Pow: lambda a, b: a ** b,
+            }[type(node.op)](lhs, rhs)
+        except (KeyError, ZeroDivisionError, ValueError):
+            return None
+        return op if isinstance(op, int) else None
+    return None
+
+
+def _int_positions(node: Optional[ast.AST]) -> frozenset[int]:
+    if node is None:
+        return frozenset()
+    v = const_int_value(node)
+    if v is not None:
+        return frozenset({v})
+    if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+        out = set()
+        for elt in node.elts:
+            ev = const_int_value(elt)
+            if ev is not None:
+                out.add(ev)
+        return frozenset(out)
+    return frozenset()
+
+
+def _str_names(node: Optional[ast.AST]) -> frozenset[str]:
+    if node is None:
+        return frozenset()
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return frozenset({node.value})
+    if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+        return frozenset(
+            elt.value
+            for elt in node.elts
+            if isinstance(elt, ast.Constant) and isinstance(elt.value, str)
+        )
+    return frozenset()
+
+
+@dataclasses.dataclass(frozen=True)
+class JitInfo:
+    """Static view of one jit wrapping (decorator or call form)."""
+
+    static_pos: frozenset[int]
+    static_names: frozenset[str]
+    donate_pos: frozenset[int]
+
+
+JIT_NAMES = {"jax.jit", "jit", "pjit", "jax.pjit"}
+PARTIAL_NAMES = {"functools.partial", "partial"}
+
+
+def jit_call_info(call: ast.Call) -> Optional[JitInfo]:
+    """Recognise ``jax.jit(...)`` / ``functools.partial(jax.jit, ...)``."""
+    name = dotted(call.func)
+    if name in JIT_NAMES:
+        kw = {k.arg: k.value for k in call.keywords if k.arg}
+    elif (
+        name in PARTIAL_NAMES
+        and call.args
+        and dotted(call.args[0]) in JIT_NAMES
+    ):
+        kw = {k.arg: k.value for k in call.keywords if k.arg}
+    else:
+        return None
+    return JitInfo(
+        static_pos=_int_positions(kw.get("static_argnums")),
+        static_names=_str_names(kw.get("static_argnames")),
+        donate_pos=_int_positions(kw.get("donate_argnums")),
+    )
+
+
+def jitted_def_info(fn: ast.AST) -> Optional[JitInfo]:
+    """JitInfo for a ``def`` carrying a jit decorator, else None."""
+    if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+        return None
+    for dec in fn.decorator_list:
+        if dotted(dec) in JIT_NAMES:
+            return JitInfo(frozenset(), frozenset(), frozenset())
+        if isinstance(dec, ast.Call):
+            info = jit_call_info(dec)
+            if info is not None:
+                return info
+    return None
+
+
+def parent(node: ast.AST) -> Optional[ast.AST]:
+    return getattr(node, "_rl_parent", None)
+
+
+def enclosing_functions(node: ast.AST):
+    """Ancestor FunctionDefs, innermost first."""
+    cur = parent(node)
+    while cur is not None:
+        if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield cur
+        cur = parent(cur)
+
+
+@dataclasses.dataclass
+class FileCtx:
+    """One parsed source file with parent links and its pragmas."""
+
+    path: str
+    source: str
+    tree: ast.Module
+    pragmas: list[Pragma]
+
+    @classmethod
+    def parse(cls, path: str, source: str) -> "FileCtx":
+        tree = ast.parse(source, filename=path)
+        for node in ast.walk(tree):
+            for child in ast.iter_child_nodes(node):
+                child._rl_parent = node  # type: ignore[attr-defined]
+        return cls(
+            path=path,
+            source=source,
+            tree=tree,
+            pragmas=scan_pragmas(path, source),
+        )
+
+    def jitted_functions(self):
+        """Every (FunctionDef, JitInfo) pair in this file.
+
+        Catches both decorator form and the ``g = jax.jit(f, ...)``
+        rebinding form when ``f`` is a def in the same file.
+        """
+        by_name = {}
+        for node in ast.walk(self.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                by_name.setdefault(node.name, node)
+        out = []
+        seen = set()
+        for node in ast.walk(self.tree):
+            info = jitted_def_info(node)
+            if info is not None and id(node) not in seen:
+                seen.add(id(node))
+                out.append((node, info))
+            if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+                info = jit_call_info(node.value)
+                if info is None or not node.value.args:
+                    continue
+                target = node.value.args[0]
+                # functools.partial(jax.jit, ...) has jax.jit at args[0];
+                # the wrapped fn only exists at the later call site.
+                if dotted(target) in JIT_NAMES:
+                    continue
+                if isinstance(target, ast.Name) and target.id in by_name:
+                    fn = by_name[target.id]
+                    if id(fn) not in seen:
+                        seen.add(id(fn))
+                        out.append((fn, info))
+        return out
+
+
+def is_method(fn: ast.AST) -> bool:
+    return isinstance(parent(fn), ast.ClassDef)
+
+
+@dataclasses.dataclass
+class ProjectIndex:
+    """Cross-file facts every rule can consult."""
+
+    # NamedTuple name -> (ordered field names, jax.Array lane fields)
+    lane_classes: dict[str, tuple[tuple[str, ...], frozenset[str]]]
+    # module-level names bound to weak python-int constants (OP_*, ...)
+    weak_consts: frozenset[str]
+    # callable name -> caller-side donated positional indices
+    donating: dict[str, frozenset[int]]
+
+    @classmethod
+    def build(cls, ctxs: Iterable[FileCtx]) -> "ProjectIndex":
+        lanes: dict[str, tuple[tuple[str, ...], frozenset[str]]] = {}
+        weak: set[str] = set()
+        donating: dict[str, set[int]] = {}
+        for ctx in ctxs:
+            for stmt in ctx.tree.body:
+                if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1:
+                    tgt = stmt.targets[0]
+                    if (
+                        isinstance(tgt, ast.Name)
+                        and const_int_value(stmt.value) is not None
+                    ):
+                        weak.add(tgt.id)
+            for node in ast.walk(ctx.tree):
+                if isinstance(node, ast.ClassDef):
+                    cls._index_namedtuple(node, lanes)
+                info = jitted_def_info(node)
+                if info is not None and info.donate_pos:
+                    offset = 1 if is_method(node) else 0
+                    pos = frozenset(
+                        d - offset for d in info.donate_pos if d - offset >= 0
+                    )
+                    donating.setdefault(node.name, set()).update(pos)
+                if isinstance(node, ast.Assign) and isinstance(
+                    node.value, ast.Call
+                ):
+                    jinfo = jit_call_info(node.value)
+                    if jinfo is None or not jinfo.donate_pos:
+                        continue
+                    for tgt in node.targets:
+                        if isinstance(tgt, ast.Name):
+                            donating.setdefault(tgt.id, set()).update(
+                                jinfo.donate_pos
+                            )
+                        elif isinstance(tgt, ast.Attribute):
+                            donating.setdefault(tgt.attr, set()).update(
+                                jinfo.donate_pos
+                            )
+        return cls(
+            lane_classes=lanes,
+            weak_consts=frozenset(weak),
+            donating={k: frozenset(v) for k, v in donating.items()},
+        )
+
+    @staticmethod
+    def _index_namedtuple(node: ast.ClassDef, lanes: dict) -> None:
+        if not any(dotted(b) in {"NamedTuple", "typing.NamedTuple"}
+                   for b in node.bases):
+            return
+        order: list[str] = []
+        lane_fields: set[str] = set()
+        for stmt in node.body:
+            if not isinstance(stmt, ast.AnnAssign):
+                continue
+            if not isinstance(stmt.target, ast.Name):
+                continue
+            order.append(stmt.target.id)
+            ann = dotted(stmt.annotation)
+            if ann in ARRAY_ANNOTATIONS:
+                lane_fields.add(stmt.target.id)
+        if lane_fields:
+            lanes[node.name] = (tuple(order), frozenset(lane_fields))

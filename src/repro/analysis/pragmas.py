@@ -1,0 +1,84 @@
+"""Pragma grammar: ``# repro-lint: ignore[RULE-ID, ...] <reason>``.
+
+A pragma placed at the end of a flagged line suppresses matching
+findings on that line; a pragma on a line of its own suppresses the
+*next* line.  ``--strict`` additionally demands a non-empty reason and
+rejects unknown rule IDs, so suppressions stay auditable - the total
+pragma count across the tree is asserted in ``tests/test_lint.py`` so
+they cannot silently accumulate.
+
+Comments are found with :mod:`tokenize` (never a regex over raw lines),
+so pragma-shaped *strings* in test fixtures do not count.
+"""
+from __future__ import annotations
+
+import dataclasses
+import io
+import re
+import tokenize
+from typing import Iterable
+
+PRAGMA_RE = re.compile(
+    r"#\s*repro-lint:\s*ignore\[(?P<rules>[^\]]*)\]\s*(?P<reason>.*)$"
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Pragma:
+    """One parsed suppression comment."""
+
+    path: str
+    line: int            # 1-based line the comment sits on
+    rules: tuple[str, ...]
+    reason: str
+    own_line: bool       # comment is the whole line -> applies to line+1
+
+    @property
+    def target_line(self) -> int:
+        return self.line + 1 if self.own_line else self.line
+
+    def matches(self, rule: str, line: int) -> bool:
+        return line == self.target_line and rule in self.rules
+
+
+def scan_pragmas(path: str, source: str) -> list[Pragma]:
+    """Extract every repro-lint pragma from ``source``."""
+    out: list[Pragma] = []
+    try:
+        tokens = list(tokenize.generate_tokens(io.StringIO(source).readline))
+    except (tokenize.TokenError, IndentationError, SyntaxError):
+        return out
+    for tok in tokens:
+        if tok.type != tokenize.COMMENT:
+            continue
+        m = PRAGMA_RE.search(tok.string)
+        if m is None:
+            continue
+        rules = tuple(
+            r.strip() for r in m.group("rules").split(",") if r.strip()
+        )
+        own_line = tok.line[: tok.start[1]].strip() == ""
+        out.append(
+            Pragma(
+                path=path,
+                line=tok.start[0],
+                rules=rules,
+                reason=m.group("reason").strip(),
+                own_line=own_line,
+            )
+        )
+    return out
+
+
+def apply_suppressions(findings, pragmas: Iterable[Pragma]):
+    """Split findings into (active, suppressed) under ``pragmas``."""
+    active, suppressed = [], []
+    pragmas = list(pragmas)
+    for f in findings:
+        if any(
+            p.path == f.path and p.matches(f.rule, f.line) for p in pragmas
+        ):
+            suppressed.append(f)
+        else:
+            active.append(f)
+    return active, suppressed

@@ -1,0 +1,6 @@
+"""Rule catalogue; importing this package registers RL001-RL005."""
+from __future__ import annotations
+
+from . import rl001, rl002, rl003, rl004, rl005  # noqa: F401
+
+__all__ = ["rl001", "rl002", "rl003", "rl004", "rl005"]

@@ -1,0 +1,267 @@
+"""RL001 donation-safety: use-after-donate.
+
+``ChainSim.tick`` donates its state argument (``donate_argnums=1`` with
+``self`` static), so after ``sim.tick(state, inj)`` the buffers behind
+``state`` are gone - XLA reuses them for the output.  Every caller must
+rebind (``state = sim.tick(state, inj)``); reading the old name again
+raises ``RuntimeError`` at runtime, but only on the path that executes.
+This pass finds it statically: any *load* of a donated argument name
+after the donating call, before the name is rebound, in the same
+function - and, inside a loop body, a donating call whose argument is
+never rebound before the loop's back edge (the next iteration's call
+re-reads the dead buffer).
+
+The donating-callable set comes from the project index (decorator form
+and ``f = jax.jit(g, donate_argnums=...)`` rebinding form), with
+caller-side positions already adjusted for bound methods.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Optional
+
+from ..context import FileCtx, ProjectIndex, dotted
+from ..registry import rule
+from ..report import Finding
+
+RULE_ID = "RL001"
+
+
+def _callable_key(call: ast.Call) -> Optional[str]:
+    if isinstance(call.func, ast.Name):
+        return call.func.id
+    if isinstance(call.func, ast.Attribute):
+        return call.func.attr
+    return None
+
+
+def _donated_name_args(call: ast.Call, index: ProjectIndex):
+    key = _callable_key(call)
+    if key is None or key not in index.donating:
+        return
+    for pos in index.donating[key]:
+        if pos < len(call.args) and isinstance(call.args[pos], ast.Name):
+            yield call.args[pos].id
+
+
+def _binds(target: ast.AST, var: str) -> bool:
+    for node in ast.walk(target):
+        if isinstance(node, ast.Name) and node.id == var and isinstance(
+            node.ctx, (ast.Store, ast.Del)
+        ):
+            return True
+    return False
+
+
+def _first_load(expr: Optional[ast.AST], var: str) -> Optional[ast.AST]:
+    if expr is None:
+        return None
+    for node in ast.walk(expr):
+        if isinstance(node, ast.Name) and node.id == var and isinstance(
+            node.ctx, ast.Load
+        ):
+            return node
+    return None
+
+
+def _stmt_event(stmt: ast.stmt, var: str):
+    """First thing this statement does to ``var``.
+
+    Returns ``("load", node)``, ``("store", stmt)`` or ``None``,
+    respecting evaluation order for the statement kinds where it
+    matters (``x = f(x)`` evaluates the value before binding x).
+    """
+    if isinstance(stmt, ast.Assign):
+        hit = _first_load(stmt.value, var)
+        if hit is not None:
+            return ("load", hit)
+        if any(_binds(t, var) for t in stmt.targets):
+            return ("store", stmt)
+        return None
+    if isinstance(stmt, ast.AnnAssign):
+        hit = _first_load(stmt.value, var)
+        if hit is not None:
+            return ("load", hit)
+        if _binds(stmt.target, var):
+            return ("store", stmt)
+        return None
+    if isinstance(stmt, ast.AugAssign):
+        # ``x += ...`` both reads and writes x; the read happens first.
+        if isinstance(stmt.target, ast.Name) and stmt.target.id == var:
+            return ("load", stmt.target)
+        hit = _first_load(stmt.value, var)
+        return ("load", hit) if hit is not None else None
+    if isinstance(stmt, (ast.For, ast.AsyncFor)):
+        hit = _first_load(stmt.iter, var)
+        if hit is not None:
+            return ("load", hit)
+        if _binds(stmt.target, var):
+            return ("store", stmt)
+        return _block_event(list(stmt.body) + list(stmt.orelse), var)
+    if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+        # A nested def capturing the name is a potential deferred read,
+        # but flagging it would be speculative; treat as opaque.
+        return None
+    # Generic: loads win over stores when both appear (conservative for
+    # e.g. ``with f(state) as state:``).
+    hit = _first_load(stmt, var)
+    if hit is not None:
+        return ("load", hit)
+    for node in ast.walk(stmt):
+        if isinstance(node, ast.Name) and node.id == var and isinstance(
+            node.ctx, (ast.Store, ast.Del)
+        ):
+            return ("store", stmt)
+    return None
+
+
+def _block_event(stmts, var):
+    for s in stmts:
+        ev = _stmt_event(s, var)
+        if ev is not None:
+            return ev
+    return None
+
+
+def _rebound_by_stmt(stmt: ast.stmt, call: ast.Call, var: str) -> bool:
+    """The statement holding the donating call immediately rebinds var."""
+    if isinstance(stmt, ast.Assign):
+        return any(_binds(t, var) for t in stmt.targets)
+    if isinstance(stmt, ast.AnnAssign):
+        return _binds(stmt.target, var)
+    if isinstance(stmt, ast.AugAssign):
+        return isinstance(stmt.target, ast.Name) and stmt.target.id == var
+    if isinstance(stmt, (ast.For, ast.AsyncFor)):
+        # ``for state in gen(state): ...`` rebinds via the loop target.
+        return _binds(stmt.target, var)
+    if isinstance(stmt, ast.Return):
+        return True  # the function ends; nothing can re-read the name
+    return False
+
+
+def _own_exprs(stmt: ast.stmt):
+    """Expressions evaluated by the statement itself (child blocks are
+    handled by recursion, with their own flow context)."""
+    if isinstance(stmt, (ast.For, ast.AsyncFor)):
+        return [stmt.iter]
+    if isinstance(stmt, (ast.While, ast.If)):
+        return [stmt.test]
+    if isinstance(stmt, (ast.With, ast.AsyncWith)):
+        return [item.context_expr for item in stmt.items]
+    if isinstance(stmt, ast.Try):
+        return []
+    return [stmt]
+
+
+class _Scanner:
+    def __init__(self, ctx: FileCtx, index: ProjectIndex):
+        self.ctx = ctx
+        self.index = index
+        self.findings: list[Finding] = []
+        # Module-level defs shadow same-named donating callables from
+        # other files for plain-Name calls (e.g. a local ``drain``
+        # helper vs the donating ``ChainSim.drain`` method) - unless
+        # the local def donates too.
+        from ..context import jitted_def_info
+
+        self.local_plain_defs = set()
+        for s in ctx.tree.body:
+            if isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                jinfo = jitted_def_info(s)
+                if jinfo is None or not jinfo.donate_pos:
+                    self.local_plain_defs.add(s.name)
+
+    def scan_module(self) -> None:
+        self._scan_block(self.ctx.tree.body, ancestors=[])
+        for node in ast.walk(self.ctx.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self._scan_block(node.body, ancestors=[])
+
+    # ancestors: list of (stmts, idx, is_loop) frames, outermost first
+    def _scan_block(self, stmts, ancestors) -> None:
+        for i, stmt in enumerate(stmts):
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                continue  # nested scopes scanned independently
+            for expr in _own_exprs(stmt):
+                for call in ast.walk(expr):
+                    if not isinstance(call, ast.Call):
+                        continue
+                    if (
+                        isinstance(call.func, ast.Name)
+                        and call.func.id in self.local_plain_defs
+                    ):
+                        continue
+                    for var in _donated_name_args(call, self.index):
+                        self._check_use(stmts, i, stmt, call, var, ancestors)
+            for is_loop, block in _child_blocks(stmt):
+                self._scan_block(block, ancestors + [(stmts, i, is_loop)])
+
+    def _check_use(self, stmts, i, stmt, call, var, ancestors) -> None:
+        if _rebound_by_stmt(stmt, call, var):
+            return
+        # frames[k] = (block, idx, child_is_loop_body): block[idx] holds
+        # frames[k+1]'s block; the last frame holds the call statement.
+        frames = ancestors + [(stmts, i, False)]
+        for k in range(len(frames) - 1, -1, -1):
+            block, idx, _ = frames[k]
+            ev = _block_event(block[idx + 1:], var)
+            if ev is not None:
+                kind, node = ev
+                if kind == "load":
+                    self.findings.append(self._finding(node, var, call))
+                return
+            # Block exhausted without touching var.  If it is a loop
+            # body, the back edge re-runs it from the top - and the
+            # first touch there is at best the donating call itself.
+            if k > 0 and frames[k - 1][2]:
+                ev2 = _block_event(block, var)
+                if ev2 is not None and ev2[0] == "store":
+                    return  # loop top rebinds before any read
+                self.findings.append(
+                    Finding(
+                        self.ctx.path, call.lineno, call.col_offset, RULE_ID,
+                        f"donated argument '{var}' is not rebound before the "
+                        "next loop iteration re-reads it "
+                        f"(rebind: {var} = ...)",
+                    )
+                )
+                return
+        # Fell off the end of the function: the name dies unread.
+
+    def _finding(self, node, var, call) -> Finding:
+        return Finding(
+            self.ctx.path, node.lineno, node.col_offset, RULE_ID,
+            f"'{var}' read after being donated at line {call.lineno} "
+            f"(donate_argnums consumed its buffers; rebind the result)",
+        )
+
+
+def _child_blocks(stmt: ast.stmt):
+    if isinstance(stmt, (ast.For, ast.AsyncFor, ast.While)):
+        yield True, stmt.body
+        yield False, stmt.orelse
+    elif isinstance(stmt, ast.If):
+        yield False, stmt.body
+        yield False, stmt.orelse
+    elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+        yield False, stmt.body
+    elif isinstance(stmt, ast.Try):
+        yield False, stmt.body
+        for h in stmt.handlers:
+            yield False, h.body
+        yield False, stmt.orelse
+        yield False, stmt.finalbody
+
+
+@rule(
+    RULE_ID,
+    "use-after-donate: a donated argument read after the call without "
+    "rebinding",
+    "donate_argnums hands the buffers to XLA; the old pytree is dead and "
+    "reading it raises at runtime - only on the path that executes.",
+)
+def check(ctx: FileCtx, index: ProjectIndex) -> Iterator[Finding]:
+    s = _Scanner(ctx, index)
+    s.scan_module()
+    yield from s.findings

@@ -1,0 +1,102 @@
+"""RL002 traced-leaf contract: jitted functions must not close over
+arrays.
+
+The zero-recompile contract says every ``SimState`` leaf is a *traced
+argument* of the jitted tick.  A jitted function that instead reads a
+module-level array (``TABLE = jnp.arange(16)`` at import time) or a
+closure-captured array from an enclosing scope bakes that value into
+the executable as a constant: swapping it later either silently keeps
+the stale constant or forces a recompile - exactly what the wave-table
+and partition-map redesigns were built to avoid.
+
+Detection is lexical: a Name load inside a jitted def that resolves to
+a module-level or enclosing-scope binding whose value is a jnp/np array
+constructor call, with no local rebinding shadowing it.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from ..context import FileCtx, ProjectIndex, is_array_ctor, parent
+from ..registry import rule
+from ..report import Finding
+
+RULE_ID = "RL002"
+
+
+def _array_bindings(body) -> dict[str, int]:
+    """name -> lineno for ``name = jnp.<ctor>(...)`` in a statement list."""
+    out: dict[str, int] = {}
+    for stmt in body:
+        if isinstance(stmt, ast.Assign) and isinstance(stmt.value, ast.Call):
+            if is_array_ctor(stmt.value):
+                for tgt in stmt.targets:
+                    if isinstance(tgt, ast.Name):
+                        out[tgt.id] = stmt.lineno
+        elif isinstance(stmt, ast.AnnAssign) and isinstance(
+            stmt.value, ast.Call
+        ):
+            if is_array_ctor(stmt.value) and isinstance(stmt.target, ast.Name):
+                out[stmt.target.id] = stmt.lineno
+    return out
+
+
+def _local_names(fn: ast.AST) -> set[str]:
+    """Parameters plus every name bound inside ``fn`` itself."""
+    names = set()
+    args = fn.args
+    for a in (
+        list(args.posonlyargs) + list(args.args) + list(args.kwonlyargs)
+    ):
+        names.add(a.arg)
+    if args.vararg:
+        names.add(args.vararg.arg)
+    if args.kwarg:
+        names.add(args.kwarg.arg)
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Store):
+            names.add(node.id)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.ClassDef)) and node is not fn:
+            names.add(node.name)
+    return names
+
+
+@rule(
+    RULE_ID,
+    "jitted function closes over a module-level or enclosing-scope array "
+    "instead of taking it as a traced argument",
+    "closure-captured arrays are baked into the executable as constants; "
+    "updating them silently reuses the stale value or recompiles - every "
+    "SimState leaf must flow in as a traced arg.",
+)
+def check(ctx: FileCtx, index: ProjectIndex) -> Iterator[Finding]:
+    module_arrays = _array_bindings(ctx.tree.body)
+    for fn, _info in ctx.jitted_functions():
+        local = _local_names(fn)
+        enclosing: dict[str, int] = {}
+        cur = parent(fn)
+        while cur is not None:
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for name, line in _array_bindings(cur.body).items():
+                    enclosing.setdefault(name, line)
+            cur = parent(cur)
+        captured = dict(module_arrays)
+        captured.update(enclosing)
+        seen: set[str] = set()
+        for node in ast.walk(fn):
+            if (
+                isinstance(node, ast.Name)
+                and isinstance(node.ctx, ast.Load)
+                and node.id in captured
+                and node.id not in local
+                and node.id not in seen
+            ):
+                seen.add(node.id)
+                yield Finding(
+                    ctx.path, node.lineno, node.col_offset, RULE_ID,
+                    f"jitted '{fn.name}' closes over array '{node.id}' "
+                    f"(bound at line {captured[node.id]}); pass it as a "
+                    "traced argument instead",
+                )

@@ -1,0 +1,235 @@
+"""RL003 dtype-pin: weak python literals flowing into int32 lanes.
+
+Msg, Metrics, WaveState, LockTable and friends carry strong-``int32``
+lanes.  A bare python literal (``0``, ``-1``, ``OP_READ``) entering a
+lane is *weakly typed*; jax will happily build the pytree, but a
+weak->strong flip across a tick boundary changes the abstract value and
+costs a spurious recompile - the PR 2 ``Msg.mask`` double-compile bug.
+The sanctioned idioms are ``jnp.asarray(x, jnp.int32)``,
+``.astype(jnp.int32)``, or wrapping the whole construction in
+``Msg.mask(...)``, which pins every field.
+
+The pass finds constructor calls (``Msg(op=..., ...)``) and
+``._replace(field=...)`` updates whose keyword set embeds into a known
+lane class, then runs a small weakness inference over each lane value:
+literals and module-level int constants are weak; ``jnp.where`` is weak
+iff both branches are; arithmetic is weak iff both operands are;
+``.astype``/dtype'd constructors/attribute reads are strong.
+Constructions immediately wrapped in ``.mask(...)`` are skipped - that
+is the pinning idiom.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Optional
+
+from ..context import (ARRAY_CTORS, ARRAY_MODULES, FileCtx, ProjectIndex,
+                       dotted)
+from ..registry import rule
+from ..report import Finding
+
+RULE_ID = "RL003"
+
+PINNING_WRAPPERS = {"mask"}
+
+
+def _masked_ctors(tree: ast.AST) -> set[int]:
+    """ids of Call nodes pinned by an immediately chained ``.mask(...)``."""
+    pinned: set[int] = set()
+    for node in ast.walk(tree):
+        if not (
+            isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Attribute)
+            and node.func.attr in PINNING_WRAPPERS
+        ):
+            continue
+        # Walk down the receiver chain: Msg(...)...mask(m) and
+        # msg._replace(...)._replace(...).mask(m) both pin every link.
+        recv = node.func.value
+        while isinstance(recv, ast.Call):
+            pinned.add(id(recv))
+            if (
+                isinstance(recv.func, ast.Attribute)
+                and recv.func.attr == "_replace"
+            ):
+                recv = recv.func.value
+            else:
+                break
+    return pinned
+
+
+def _weakness(node: ast.AST, index: ProjectIndex) -> Optional[str]:
+    """Why ``node`` is weak (or wrong-dtype'd), or None if strong."""
+    if isinstance(node, ast.Constant):
+        if type(node.value) is bool:
+            return f"python bool literal {node.value!r}"
+        if isinstance(node.value, (int, float)):
+            return f"python literal {node.value!r}"
+        return None
+    if isinstance(node, ast.UnaryOp):
+        return _weakness(node.operand, index)
+    if isinstance(node, ast.Name):
+        if node.id in index.weak_consts:
+            return f"module constant '{node.id}' (a weak python int)"
+        return None
+    if isinstance(node, ast.BinOp):
+        # A weak *array* operand (e.g. ``jnp.where(c, 1, 0)``) stays a
+        # finding even mixed with strong operands: the result is only
+        # strong by promotion order, which is exactly the fragility the
+        # PR 2 Msg.mask bug exploited.  Bare scalar literals in
+        # arithmetic (``x + 1``) promote safely and are allowed.
+        for side in (node.left, node.right):
+            arr = _weak_array(side, index)
+            if arr is not None:
+                return arr
+        lhs = _weakness(node.left, index)
+        rhs = _weakness(node.right, index)
+        if lhs is not None and rhs is not None:
+            return lhs
+        return None
+    if isinstance(node, ast.IfExp):
+        body = _weakness(node.body, index)
+        orelse = _weakness(node.orelse, index)
+        if body is not None and orelse is not None:
+            return body
+        return None
+    if isinstance(node, ast.Call):
+        return _call_weakness(node, index)
+    return None
+
+
+def _weak_array(node: ast.AST, index: ProjectIndex) -> Optional[str]:
+    """Weakness reasons for *array-valued* expressions only (a weak
+    ``jnp.where``/constructor), not bare python scalars."""
+    if isinstance(node, ast.Call):
+        return _call_weakness(node, index)
+    if isinstance(node, ast.BinOp):
+        for side in (node.left, node.right):
+            arr = _weak_array(side, index)
+            if arr is not None:
+                return arr
+    return None
+
+
+def _dtype_given(call: ast.Call, pos: int) -> bool:
+    if len(call.args) > pos:
+        return True
+    return any(k.arg == "dtype" for k in call.keywords)
+
+
+def _call_weakness(call: ast.Call, index: ProjectIndex) -> Optional[str]:
+    if isinstance(call.func, ast.Attribute):
+        if call.func.attr in ("astype", "mask"):
+            return None
+    name = dotted(call.func)
+    if name is None or "." not in name:
+        return None  # unknown callable: assume it returns strong arrays
+    mod, _, fn = name.rpartition(".")
+    if mod not in ARRAY_MODULES:
+        return None
+    if fn in ("asarray", "array"):
+        if _dtype_given(call, 1):
+            return None
+        if call.args:
+            inner = _weakness(call.args[0], index)
+            if inner is not None:
+                return f"{name}(...) without dtype over {inner}"
+        return None
+    if fn == "full":
+        if _dtype_given(call, 2):
+            return None
+        if len(call.args) > 1:
+            inner = _weakness(call.args[1], index)
+            if inner is not None:
+                return f"{name}(shape, fill) without dtype, fill is {inner}"
+        return None
+    if fn in ("zeros", "ones"):
+        if _dtype_given(call, 1):
+            return None
+        return f"{name}(...) without dtype defaults to float32"
+    if fn == "arange":
+        return None  # integer arange is strongly typed
+    if fn == "where":
+        if len(call.args) == 3:
+            a = _weakness(call.args[1], index)
+            b = _weakness(call.args[2], index)
+            if a is not None and b is not None:
+                return f"{name}(cond, {a}, {b} - both branches weak)"
+        return None
+    if fn in ARRAY_CTORS:
+        if _dtype_given(call, 1):
+            return None
+        return None
+    return None
+
+
+def _is_spec_pytree(call: ast.Call) -> bool:
+    """Axis/sharding spec pytrees (``PartitionMap(owner=None, ...,
+    slot_bucket=0)`` as a vmap ``in_axes`` tree) carry ``None`` lanes -
+    no real lane construction does."""
+    values = list(call.args) + [k.value for k in call.keywords]
+    return any(
+        isinstance(v, ast.Constant) and v.value is None for v in values
+    )
+
+
+def _lane_assignments(call: ast.Call, index: ProjectIndex):
+    """Yield (class, field, value) for ctor calls / ._replace updates."""
+    if _is_spec_pytree(call):
+        return
+    lanes = index.lane_classes
+    if isinstance(call.func, ast.Name) and call.func.id in lanes:
+        order, lane_fields = lanes[call.func.id]
+        for i, arg in enumerate(call.args):
+            if i < len(order) and order[i] in lane_fields:
+                yield call.func.id, order[i], arg
+        for kw in call.keywords:
+            if kw.arg in lane_fields:
+                yield call.func.id, kw.arg, kw.value
+        return
+    if (
+        isinstance(call.func, ast.Attribute)
+        and call.func.attr == "_replace"
+        and call.keywords
+        and all(k.arg is not None for k in call.keywords)
+    ):
+        kw_names = {k.arg for k in call.keywords}
+        # Attribute the update to the (unique smallest) lane class whose
+        # field set covers every keyword; ambiguity resolves to the
+        # fewest-fields candidate so Msg._replace stays Msg.
+        candidates = [
+            (len(order), name)
+            for name, (order, _f) in lanes.items()
+            if kw_names <= set(order)
+        ]
+        if not candidates:
+            return
+        _, cls_name = min(candidates)
+        _, lane_fields = lanes[cls_name]
+        for kw in call.keywords:
+            if kw.arg in lane_fields:
+                yield cls_name, kw.arg, kw.value
+
+
+@rule(
+    RULE_ID,
+    "weak python literal / unpinned constructor flowing into an int32 "
+    "lane of a traced NamedTuple",
+    "weak->strong dtype flips across the tick boundary change the abstract "
+    "value and silently recompile the donated executable (the PR 2 "
+    "Msg.mask bug); pin with jnp.asarray(x, jnp.int32), .astype, or .mask().",
+)
+def check(ctx: FileCtx, index: ProjectIndex) -> Iterator[Finding]:
+    pinned = _masked_ctors(ctx.tree)
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call) or id(node) in pinned:
+            continue
+        for cls_name, field, value in _lane_assignments(node, index):
+            reason = _weakness(value, index)
+            if reason is not None:
+                yield Finding(
+                    ctx.path, value.lineno, value.col_offset, RULE_ID,
+                    f"{cls_name}.{field} receives {reason}; pin with "
+                    "jnp.asarray(..., jnp.int32)/.astype or wrap the "
+                    "construction in .mask(...)",
+                )

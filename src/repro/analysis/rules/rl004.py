@@ -1,0 +1,136 @@
+"""RL004 recompile-hazard: host-side control flow on traced values.
+
+Inside a jitted function, python ``if``/``while`` on a traced value
+either raises a ConcretizationError or - worse, via ``static_argnums``
+misuse - silently retraces per value.  ``.item()`` / ``int(x)`` /
+``float(x)`` force a device sync and a concrete value, and host
+``np.*`` calls pull arrays off-device mid-trace.  An unhashable default
+(list/dict/set) on a static parameter makes every call a cache miss.
+
+Only *metadata* control flow is allowed on traced values
+(``x.shape``/``x.ndim``/``x.dtype``/``x.size``/``len(x)`` are static);
+statically-marked parameters (``static_argnums``/``static_argnames``,
+including ``self`` at position 0 for methods) are exempt - that is why
+``if self.wave_depth:`` in the tick helpers is legal.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from ..context import FileCtx, ProjectIndex, dotted
+from ..registry import rule
+from ..report import Finding
+
+RULE_ID = "RL004"
+
+STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "sharding"}
+HOST_CASTS = {"int", "float", "bool", "complex"}
+HOST_MODULES = {"np", "numpy"}
+
+
+def _traced_params(fn, info) -> set[str]:
+    args = list(fn.args.posonlyargs) + list(fn.args.args)
+    traced = set()
+    for i, a in enumerate(args):
+        if i in info.static_pos or a.arg in info.static_names:
+            continue
+        traced.add(a.arg)
+    for a in fn.args.kwonlyargs:
+        if a.arg not in info.static_names:
+            traced.add(a.arg)
+    return traced
+
+
+def _traced_loads_in_test(test: ast.AST, traced: set[str]):
+    """Name loads of traced params, skipping static-metadata subtrees."""
+    hits: list[ast.Name] = []
+
+    def rec(n: ast.AST) -> None:
+        if isinstance(n, ast.Attribute) and n.attr in STATIC_ATTRS:
+            return  # x.shape[0] et al. are trace-time constants
+        if (
+            isinstance(n, ast.Call)
+            and isinstance(n.func, ast.Name)
+            and n.func.id == "len"
+        ):
+            return  # len(x) is static shape info
+        if (
+            isinstance(n, ast.Name)
+            and isinstance(n.ctx, ast.Load)
+            and n.id in traced
+        ):
+            hits.append(n)
+            return
+        for c in ast.iter_child_nodes(n):
+            rec(c)
+
+    rec(test)
+    return hits
+
+
+@rule(
+    RULE_ID,
+    "python control flow / host sync on traced values inside a jitted "
+    "function, or an unhashable static-arg default",
+    "if/while on tracers raises or retraces; .item()/int()/np.* force "
+    "device syncs mid-trace; unhashable static args miss the jit cache "
+    "on every call - all of it melts the zero-recompile guarantee.",
+)
+def check(ctx: FileCtx, index: ProjectIndex) -> Iterator[Finding]:
+    for fn, info in ctx.jitted_functions():
+        traced = _traced_params(fn, info)
+        args = list(fn.args.posonlyargs) + list(fn.args.args)
+        defaults = list(fn.args.defaults)
+        if defaults:
+            for a, d in zip(args[-len(defaults):], defaults):
+                idx = args.index(a)
+                if (
+                    (idx in info.static_pos or a.arg in info.static_names)
+                    and isinstance(d, (ast.List, ast.Dict, ast.Set))
+                ):
+                    yield Finding(
+                        ctx.path, d.lineno, d.col_offset, RULE_ID,
+                        f"static parameter '{a.arg}' of jitted '{fn.name}' "
+                        "defaults to an unhashable "
+                        f"{type(d).__name__.lower()} literal - every call "
+                        "misses the jit cache",
+                    )
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.If, ast.While)):
+                for hit in _traced_loads_in_test(node.test, traced):
+                    kw = "while" if isinstance(node, ast.While) else "if"
+                    yield Finding(
+                        ctx.path, hit.lineno, hit.col_offset, RULE_ID,
+                        f"python `{kw}` on traced argument '{hit.id}' inside "
+                        f"jitted '{fn.name}'; use jnp.where/lax.cond or mark "
+                        "it static",
+                    )
+            elif isinstance(node, ast.Call):
+                f = node.func
+                if isinstance(f, ast.Attribute) and f.attr == "item":
+                    yield Finding(
+                        ctx.path, node.lineno, node.col_offset, RULE_ID,
+                        f".item() inside jitted '{fn.name}' forces a host "
+                        "sync and a concrete value mid-trace",
+                    )
+                elif (
+                    isinstance(f, ast.Name)
+                    and f.id in HOST_CASTS
+                    and node.args
+                    and not isinstance(node.args[0], ast.Constant)
+                ):
+                    yield Finding(
+                        ctx.path, node.lineno, node.col_offset, RULE_ID,
+                        f"{f.id}(...) on a non-literal inside jitted "
+                        f"'{fn.name}' concretises a traced value",
+                    )
+                else:
+                    name = dotted(f)
+                    if name is not None and name.split(".", 1)[0] in \
+                            HOST_MODULES:
+                        yield Finding(
+                            ctx.path, node.lineno, node.col_offset, RULE_ID,
+                            f"host numpy call {name}(...) inside jitted "
+                            f"'{fn.name}'; use jnp instead",
+                        )

@@ -1,0 +1,67 @@
+"""RL005 scatter-discipline: no batch scatters in scatter-free code.
+
+The segmented fabric's whole reason to exist (PR 5) is replacing
+``inbox.at[dst, slot].set(msg)`` batch scatters with sort +
+``searchsorted`` gathers - scatters serialise on most backends and
+their unbatched cost curve is what made the dense fabric O(n^2).
+Functions that advertise the guarantee carry a machine-readable
+docstring tag::
+
+    repro-lint: scatter-free
+
+and this pass flags any ``.at[...].set/.add/...`` inside a tagged
+function (transitively included nested defs), so a future "quick fix"
+cannot silently reintroduce the scatter the benchmarks assume is gone.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from ..context import FileCtx, ProjectIndex
+from ..registry import rule
+from ..report import Finding
+
+RULE_ID = "RL005"
+
+TAG = "repro-lint: scatter-free"
+SCATTER_METHODS = {
+    "set", "add", "subtract", "sub", "multiply", "mul", "divide", "div",
+    "max", "min", "power", "apply",
+}
+
+
+def _is_at_scatter(call: ast.Call) -> bool:
+    """Matches ``<expr>.at[<idx>].<method>(...)``."""
+    f = call.func
+    return (
+        isinstance(f, ast.Attribute)
+        and f.attr in SCATTER_METHODS
+        and isinstance(f.value, ast.Subscript)
+        and isinstance(f.value.value, ast.Attribute)
+        and f.value.value.attr == "at"
+    )
+
+
+@rule(
+    RULE_ID,
+    ".at[...] batch scatter inside a function tagged scatter-free",
+    "the segmented fabric's O(R log R) headline depends on sort+gather "
+    "routing; one reintroduced scatter quietly restores the dense "
+    "fabric's serialised cost curve.",
+)
+def check(ctx: FileCtx, index: ProjectIndex) -> Iterator[Finding]:
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        doc = ast.get_docstring(node)
+        if not doc or TAG not in doc:
+            continue
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Call) and _is_at_scatter(sub):
+                yield Finding(
+                    ctx.path, sub.lineno, sub.col_offset, RULE_ID,
+                    f"batch scatter .at[...].{sub.func.attr}(...) inside "
+                    f"'{node.name}', which is tagged `{TAG}`; route with "
+                    "sort + searchsorted instead",
+                )

@@ -54,6 +54,12 @@ accounting uses live-chain positions (``chain_pos``), so a spliced-out
 node is not a link traversal; while ``frozen`` is set, client writes are
 NACKed at the entry node (``OP_WRITE_NACK``, counted in ``write_nacks``).
 
+Machine-checked by repro-lint: the role table stays a *traced leaf* of
+the donated tick - RL002 rejects closure-captured role arrays, RL001
+rejects callers that read a pre-tick state after donation, and RL004
+rejects host-side branching on role values inside the jitted stages
+(which is what "the engines never mutate it" compiles down to).
+
 Lock-table rules (the transaction extension of the same contract)
 -----------------------------------------------------------------
 ``SimState.locks`` is a per-chain ``LockTable`` ([C, K] leaves).  Unlike
@@ -73,6 +79,11 @@ recovery copy path copies *stores only* - lock words never move between
 nodes because they live per chain, not per node.  In-flight PREPAREs at
 the moment of a freeze are therefore either granted before the freeze
 (their txn completes normally) or NACKed by it; there is no third state.
+
+Machine-checked by repro-lint: lock words are strong-int32 lanes of
+``LockTable`` - RL003 rejects weak python literals flowing into them,
+and RL001 guards the drain loops that wait on ``locks_all_free``
+(every ``state = sim.tick(state, ...)`` rebinding is verified).
 
 Partition-epoch rules (the rebalancing extension of the same contract)
 ----------------------------------------------------------------------
@@ -113,6 +124,12 @@ without interruption.  Chains not named by the move (neither source nor
 destination) observe identical traffic and stay bit-identical to an
 undisturbed run - asserted by ``benchmarks/fig_rebalance.py``.
 
+Machine-checked by repro-lint: "every leaf keeps its shape and dtype"
+is enforceable only if the dtypes are *strong* to begin with - RL003
+pins the epoch stamps (``Msg.ver``, ``slot_epoch``) against weak-int
+promotion, and RL002 keeps the published map a traced argument rather
+than a constant baked into the executable at trace time.
+
 Wave-table rules (the in-network coordinator extension of the contract)
 -----------------------------------------------------------------------
 With ``wave_depth > 0`` the state grows ``SimState.wave`` - a per-chain
@@ -149,6 +166,15 @@ split along the same CP/DP line as the lock table:
 ``wave_depth == 0`` (the default) keeps the wave machinery out of the
 compiled program entirely - zero-size leaves ride the pytree and the tick
 is bit-identical to the wave-less engine.
+
+Machine-checked by repro-lint: every ``WaveState`` lane is strong int32
+(RL003 - a weak admission write would flip the abstract value and
+recompile the donated tick), the coordinator stage runs without host
+control flow on traced slots (RL004), and the fabric underneath it all
+stays scatter-free (RL005 via the ``segmented_route``/``cluster_route``
+docstring tags).  Run ``repro-lint src benchmarks tests examples
+--strict`` (or ``python -m repro.analysis ...``) to verify the whole
+contract; the CI lint lane does it on every push.
 """
 from __future__ import annotations
 
@@ -354,6 +380,10 @@ def segmented_route(flat: Msg, alive: jax.Array, chain_pos: jax.Array,
     outbox width).  Callers feeding adversarial ``src`` fields (the
     property tests) pass ``mcast_lane=M``.  Drop counts never depend on the
     lane - they come from exact segment-length arithmetic.
+
+    repro-lint: scatter-free - this fabric's O(M log M) headline depends
+    on sort + searchsorted + gather only; RL005 rejects any ``.at[...]``
+    batch scatter added to this function.
     """
     n = alive.shape[0]
     M = flat.op.shape[0]
@@ -517,6 +547,9 @@ def cluster_route(flat: Msg, target: jax.Array, n_chains: int, cap: int):
     beyond ``cap`` in any chain's run are dropped (the engine sizes caps
     to the exact worst case, so overflow only occurs when a caller shrinks
     ``wave_route_capacity`` below it - and is then accounted in drops).
+
+    repro-lint: scatter-free - same guarantee as ``segmented_route``;
+    RL005 rejects any ``.at[...]`` batch scatter added here.
     """
     N = flat.op.shape[0]
     i32 = jnp.int32
@@ -811,11 +844,13 @@ class ChainSim:
         uni_hops = jnp.abs(pos_of(flat.dst) - pos_of(flat.src))
 
         # accumulate hop counts onto messages for latency tracking (the
-        # fabric adds the per-recipient multicast hops on each copy)
+        # fabric adds the per-recipient multicast hops on each copy);
+        # the exit-hop term is dtype-pinned - a weak int32 here would
+        # flip Msg.extra's abstract value across the tick boundary
         flat = flat._replace(
             extra=flat.extra
             + jnp.where(is_unicast, uni_hops, 0)
-            + jnp.where(is_exit, 1, 0)
+            + is_exit.astype(jnp.int32)
         )
 
         # ---------------- per-node inbox build (capacity-limited) --------

@@ -86,6 +86,14 @@ Scope and caveats
   COMMIT/ABORT of already-held locks proceed - they only complete admitted
   transactions.  The CP waits for ``locks_all_free`` before copying (see
   the live-membership contract in ``core/chain.py``).
+
+Machine-checked by repro-lint (see ``repro.analysis``): ``LockTable``
+and ``WaveState`` lanes are strong int32 - RL003 rejects weak python
+literals entering them (every coordinator Msg construction is pinned by
+``.mask(...)``); RL001 verifies the drivers' ``state = sim.tick(state,
+...)`` rebinding against the donated tick; RL004 keeps host control
+flow out of the jitted coordinator stage; and the cluster router the
+sub-ops ride is RL005 scatter-free.
 """
 from __future__ import annotations
 

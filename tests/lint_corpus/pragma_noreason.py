@@ -1,0 +1,7 @@
+"""Pragma exemplar: suppression without a reason (rejected by --strict)."""
+
+
+def route(inbox, dst, msgs):
+    """repro-lint: scatter-free"""
+    # repro-lint: ignore[RL005]
+    return inbox.at[dst].set(msgs)

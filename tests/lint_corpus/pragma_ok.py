@@ -1,0 +1,12 @@
+"""Pragma exemplar: both placement forms, each carrying a reason."""
+
+
+def own_line_form(inbox, dst, msgs):
+    """repro-lint: scatter-free"""
+    # repro-lint: ignore[RL005] one-off init scatter, never on the tick path
+    return inbox.at[dst].set(msgs)
+
+
+def end_of_line_form(inbox, dst, msgs):
+    """repro-lint: scatter-free"""
+    return inbox.at[dst].set(msgs)  # repro-lint: ignore[RL005] same one-off init scatter

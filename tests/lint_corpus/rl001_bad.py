@@ -1,0 +1,26 @@
+"""Known-bad exemplar for RL001: use-after-donate.
+
+Two shapes: a straight-line read of the donated name after the call,
+and a loop that never rebinds before the back edge re-reads it.
+"""
+import functools
+
+import jax
+
+
+@functools.partial(jax.jit, donate_argnums=0)
+def step(state):
+    return state + 1
+
+
+def straight_line(state):
+    new = step(state)
+    return new, state.sum()  # BAD: `state` was donated into `new`
+
+
+def unrebound_loop(state):
+    total = 0
+    for _ in range(4):
+        step(state)  # BAD: next iteration re-reads the dead buffer
+        total += 1
+    return total

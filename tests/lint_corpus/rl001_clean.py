@@ -1,0 +1,28 @@
+"""Clean twin for RL001: every donating call rebinds its argument."""
+import functools
+
+import jax
+
+
+@functools.partial(jax.jit, donate_argnums=0)
+def step(state):
+    return state + 1
+
+
+def straight_line(state):
+    state = step(state)
+    return state.sum()
+
+
+def rebound_loop(state):
+    for _ in range(4):
+        state = step(state)
+    return state
+
+
+def fresh_each_iteration(make_state):
+    out = []
+    for seed in range(4):
+        state = make_state(seed)
+        step(state)  # result dropped, but the loop top rebinds first
+    return out

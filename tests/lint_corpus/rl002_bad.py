@@ -1,0 +1,20 @@
+"""Known-bad exemplar for RL002: jitted code closing over arrays."""
+import jax
+import jax.numpy as jnp
+
+TABLE = jnp.arange(16)  # module-level array
+
+
+@jax.jit
+def lookup(x):
+    return TABLE[x] + x  # BAD: TABLE is baked in as a constant
+
+
+def make_fn():
+    bias = jnp.ones((4,))
+
+    @jax.jit
+    def inner(x):
+        return x + bias  # BAD: closure-captured array
+
+    return inner

@@ -1,0 +1,22 @@
+"""Clean twin for RL002: arrays flow in as traced arguments."""
+import jax
+import jax.numpy as jnp
+
+TABLE = jnp.arange(16)
+
+
+@jax.jit
+def lookup(table, x):
+    return table[x] + x  # table is a traced argument
+
+
+def call_site(x):
+    return lookup(TABLE, x)  # passing it at the call is fine
+
+
+def make_fn():
+    def inner(x, bias):
+        return x + bias
+
+    jitted = jax.jit(inner)
+    return jitted

@@ -1,0 +1,26 @@
+"""Known-bad exemplar for RL003: weak literals into int32 lanes."""
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+OP_READ = 1
+NOWHERE = -1
+
+
+class Packet(NamedTuple):
+    op: jax.Array
+    dst: jax.Array
+    hops: jax.Array
+
+
+def make(cond, hops):
+    return Packet(
+        op=jnp.where(cond, OP_READ, 0),      # BAD: both branches weak
+        dst=NOWHERE,                         # BAD: weak module constant
+        hops=hops + jnp.where(cond, 1, 0),   # BAD: weak array in arithmetic
+    )
+
+
+def update(pkt, cond):
+    return pkt._replace(op=jnp.full((4,), OP_READ))  # BAD: weak fill

@@ -1,0 +1,39 @@
+"""Clean twin for RL003: every lane is pinned (or mask-wrapped)."""
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+OP_READ = 1
+NOWHERE = -1
+
+
+class Packet(NamedTuple):
+    op: jax.Array
+    dst: jax.Array
+    hops: jax.Array
+
+    def mask(self, m):
+        i32 = lambda x: jnp.asarray(x, jnp.int32)
+        return Packet(*[i32(f) * i32(m) for f in self])
+
+
+def make(cond, hops):
+    return Packet(
+        op=jnp.where(cond, OP_READ, 0).astype(jnp.int32),
+        dst=jnp.asarray(NOWHERE, jnp.int32),
+        hops=hops + cond.astype(jnp.int32),
+    )
+
+
+def make_masked(cond, hops, m):
+    # the Msg.mask idiom: the wrapper pins every field to strong int32
+    return Packet(
+        op=jnp.where(cond, OP_READ, 0),
+        dst=NOWHERE,
+        hops=hops,
+    ).mask(m)
+
+
+def update(pkt):
+    return pkt._replace(op=jnp.full((4,), OP_READ, jnp.int32))

@@ -1,0 +1,21 @@
+"""Known-bad exemplar for RL004: recompile hazards in jitted code."""
+import functools
+
+import jax
+import numpy as np
+
+
+@jax.jit
+def decide(x, flags):
+    if x > 0:              # BAD: python branch on a traced value
+        return x
+    while flags:           # BAD: python loop on a traced value
+        x = x - 1
+    y = int(x)             # BAD: concretises a tracer
+    z = x.item()           # BAD: host sync mid-trace
+    return np.abs(y + z)   # BAD: host numpy inside jit
+
+
+@functools.partial(jax.jit, static_argnums=1)
+def weird(x, opts=[1, 2]):  # BAD: unhashable static-arg default
+    return x

@@ -1,0 +1,24 @@
+"""Clean twin for RL004: metadata branching and static self are fine."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def decide(x):
+    if x.ndim > 1:                   # shape metadata is trace-static
+        x = x.sum(axis=0)
+    return jnp.where(x > 0, x, jnp.zeros_like(x))
+
+
+class Engine:
+    wave_depth = 2
+
+    @functools.partial(jax.jit, static_argnums=0, static_argnames=("steps",))
+    def tick(self, state, steps=3):
+        if self.wave_depth:          # `self` is static: legal branch
+            state = state + 1
+        for _ in range(len(state)):  # len() is static shape info
+            state = state * 1
+        return state

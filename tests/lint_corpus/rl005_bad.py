@@ -1,0 +1,17 @@
+"""Known-bad exemplar for RL005: a scatter in scatter-free code."""
+
+
+def route(inbox, dst, msgs):
+    """Deliver each message to its destination lane.
+
+    repro-lint: scatter-free
+    """
+    return inbox.at[dst].set(msgs)  # BAD: batch scatter in tagged fn
+
+
+def accumulate(heat, bucket):
+    """Conflict-heat bump.
+
+    repro-lint: scatter-free
+    """
+    return heat.at[bucket].add(1)  # BAD: scatter-add in tagged fn

@@ -1,0 +1,16 @@
+"""Clean twin for RL005: sort+gather inside the tag, scatters outside."""
+import jax.numpy as jnp
+
+
+def route(inbox, dst, msgs):
+    """Deliver via the segmented-sort idiom.
+
+    repro-lint: scatter-free
+    """
+    order = jnp.argsort(dst, stable=True)
+    return jnp.take(msgs, order, axis=0)
+
+
+def untagged_init(inbox, dst, msgs):
+    """No guarantee advertised: scatters are allowed here."""
+    return inbox.at[dst].set(msgs)

@@ -1,0 +1,277 @@
+"""repro-lint contract tests.
+
+Four layers:
+
+1. corpus - every rule fires on its known-bad exemplar and stays silent
+   on the clean twin (the linter detects what it claims and nothing
+   else);
+2. pragmas - suppression works in both placement forms, ``--strict``
+   rejects reason-less pragmas, unknown rule ids are findings, and the
+   *total* pragma count across the walked tree is pinned so
+   suppressions cannot silently accumulate;
+3. acceptance - the shipping tree lints clean under ``--strict``, and
+   the guarantee is load-bearing: deleting any one pragma, or reverting
+   the RL003 dtype-pin fix in ``core/chain.py``, flips the exit to
+   non-zero;
+4. reporters - the JSON report round-trips Finding-for-Finding and the
+   CLI exit codes hold (0 clean / 1 findings / 2 usage).
+
+Pure-ast: none of this imports jax, so the lint lane stays fast.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis import RULES, run_lint, run_lint_sources, walk_paths
+from repro.analysis.pragmas import scan_pragmas
+from repro.analysis.report import findings_from_json, render_json
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+CORPUS = REPO / "tests" / "lint_corpus"
+LINT_PATHS = ["src", "benchmarks", "tests", "examples"]
+
+# The audited suppression budget for the whole walked tree.  If you add
+# a pragma, justify it in review and bump this - that friction is the
+# point (suppressions must not accumulate silently).
+EXPECTED_TREE_PRAGMAS = 1
+
+ALL_RULES = ("RL001", "RL002", "RL003", "RL004", "RL005")
+
+
+def _lint_corpus_file(name: str, **kw):
+    return run_lint([str(CORPUS / name)], **kw)
+
+
+def _cli(*args: str, cwd=REPO):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *args],
+        cwd=cwd, env=env, capture_output=True, text=True,
+    )
+
+
+# --------------------------------------------------------------------------
+# 1. corpus: each rule fires on bad, stays silent on clean
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rule_id", ALL_RULES)
+def test_rule_fires_on_bad_exemplar(rule_id):
+    result = _lint_corpus_file(f"{rule_id.lower()}_bad.py")
+    per_rule = result.per_rule()
+    assert per_rule.get(rule_id, 0) > 0, (
+        f"{rule_id} did not fire on its bad exemplar: {result.findings}"
+    )
+    # the exemplar is single-purpose: no other rule may fire on it
+    assert set(per_rule) == {rule_id}, per_rule
+
+
+@pytest.mark.parametrize("rule_id", ALL_RULES)
+def test_rule_silent_on_clean_twin(rule_id):
+    result = _lint_corpus_file(f"{rule_id.lower()}_clean.py", strict=True)
+    assert result.findings == [], result.findings
+
+
+def test_rule_catalogue_registered():
+    assert set(RULES) == set(ALL_RULES)
+    for rule in RULES.values():
+        assert rule.summary and rule.rationale
+
+
+def test_expected_finding_counts():
+    """Pin the exemplar finding counts so rule regressions are loud."""
+    expected = {"RL001": 2, "RL002": 2, "RL003": 4, "RL004": 6, "RL005": 2}
+    for rule_id, n in expected.items():
+        result = _lint_corpus_file(f"{rule_id.lower()}_bad.py")
+        assert result.per_rule()[rule_id] == n, (rule_id, result.findings)
+
+
+# --------------------------------------------------------------------------
+# 2. pragmas
+# --------------------------------------------------------------------------
+
+def test_pragma_suppresses_both_placement_forms():
+    result = _lint_corpus_file("pragma_ok.py", strict=True)
+    assert result.findings == []
+    assert len(result.suppressed) == 2
+    assert all(f.rule == "RL005" for f in result.suppressed)
+    assert all(p.reason for p in result.pragmas)
+
+
+def test_pragma_without_reason_rejected_by_strict():
+    lax = _lint_corpus_file("pragma_noreason.py")
+    assert lax.findings == [] and len(lax.suppressed) == 1
+    strict = _lint_corpus_file("pragma_noreason.py", strict=True)
+    assert any(
+        f.rule == "RL000" and "no reason" in f.message
+        for f in strict.findings
+    ), strict.findings
+
+
+def test_unknown_rule_id_in_pragma_is_a_finding():
+    src = (
+        "def f(inbox, dst, m):\n"
+        '    """repro-lint: scatter-free"""\n'
+        "    return inbox.at[dst].set(m)  "
+        "# repro-lint: ignore[RL999] typo'd id\n"
+    )
+    result = run_lint_sources({"x.py": src})
+    rules = {f.rule for f in result.findings}
+    # the typo'd pragma doesn't suppress RL005 AND is itself flagged
+    assert rules == {"RL000", "RL005"}, result.findings
+
+
+def test_pragma_strings_do_not_count():
+    """Only real comments are pragmas (tokenize, not regex-over-lines)."""
+    src = 's = "# repro-lint: ignore[RL005] not a comment"\n'
+    result = run_lint_sources({"x.py": src})
+    assert result.pragmas == [] and result.findings == []
+
+
+def test_tree_pragma_budget():
+    files = walk_paths([str(REPO / p) for p in LINT_PATHS])
+    pragmas = []
+    for f in files:
+        pragmas.extend(scan_pragmas(str(f), f.read_text()))
+    assert len(pragmas) == EXPECTED_TREE_PRAGMAS, [
+        f"{p.path}:{p.line}" for p in pragmas
+    ]
+    assert all(p.reason for p in pragmas), "tree pragmas must carry reasons"
+
+
+# --------------------------------------------------------------------------
+# 3. acceptance: the tree is clean, and the guarantee is load-bearing
+# --------------------------------------------------------------------------
+
+def _tree_sources() -> dict[str, str]:
+    return {
+        str(f): f.read_text()
+        for f in walk_paths([str(REPO / p) for p in LINT_PATHS])
+    }
+
+
+def test_tree_lints_clean_under_strict():
+    proc = _cli(*LINT_PATHS, "--strict")
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_deleting_any_pragma_breaks_strict():
+    sources = _tree_sources()
+    pragma_sites = [
+        (path, p)
+        for path, src in sources.items()
+        for p in scan_pragmas(path, src)
+    ]
+    assert len(pragma_sites) == EXPECTED_TREE_PRAGMAS
+    for path, pragma in pragma_sites:
+        lines = sources[path].splitlines(keepends=True)
+        i = pragma.line - 1
+        if pragma.own_line:
+            del lines[i]
+        else:
+            lines[i] = lines[i].split("#")[0].rstrip() + "\n"
+        mutated = dict(sources)
+        mutated[path] = "".join(lines)
+        result = run_lint_sources(mutated, strict=True)
+        assert result.findings, (
+            f"deleting pragma at {path}:{pragma.line} did not re-expose "
+            "its finding"
+        )
+
+
+def test_reverting_rl003_fix_breaks_lint():
+    """The dtype-pin fix in core/chain.py is load-bearing: restoring the
+    weak `jnp.where(is_exit, 1, 0)` hop term re-fires RL003."""
+    sources = _tree_sources()
+    chain = str(REPO / "src" / "repro" / "core" / "chain.py")
+    fixed = "+ is_exit.astype(jnp.int32)"
+    assert fixed in sources[chain], "expected the pinned hop term"
+    mutated = dict(sources)
+    mutated[chain] = sources[chain].replace(
+        fixed, "+ jnp.where(is_exit, 1, 0)"
+    )
+    clean = run_lint_sources(sources, strict=True)
+    assert clean.findings == []
+    broken = run_lint_sources(mutated, strict=True)
+    assert any(
+        f.rule == "RL003" and f.path == chain for f in broken.findings
+    ), broken.findings
+
+
+def test_scatter_free_tags_cover_the_fabric():
+    chain_src = (REPO / "src" / "repro" / "core" / "chain.py").read_text()
+    for fn in ("segmented_route", "cluster_route"):
+        body = chain_src.split(f"def {fn}(")[1]
+        docstring = body.split('"""')[1]
+        assert "repro-lint: scatter-free" in docstring, (
+            f"{fn} lost its scatter-free contract tag"
+        )
+
+
+# --------------------------------------------------------------------------
+# 4. reporters and CLI
+# --------------------------------------------------------------------------
+
+def test_json_report_round_trips(tmp_path):
+    out = tmp_path / "report.json"
+    proc = _cli(str(CORPUS / "rl005_bad.py"), "--json", str(out))
+    assert proc.returncode == 1
+    report = json.loads(out.read_text())
+    assert report["version"] == 1
+    decoded = findings_from_json(report)
+    api = run_lint([str(CORPUS / "rl005_bad.py")])
+    assert decoded == api.findings
+    assert report["summary"] == {"total": 2, "per_rule": {"RL005": 2}}
+    # and the dict form itself round-trips through the renderer
+    assert render_json(api)["findings"] == report["findings"]
+
+
+def test_human_output_format():
+    proc = _cli(str(CORPUS / "rl005_bad.py"))
+    first = proc.stdout.splitlines()[0]
+    path, line, col, rest = first.split(":", 3)
+    assert path.endswith("rl005_bad.py") and line.isdigit() and col.isdigit()
+    assert rest.strip().startswith("RL005")
+
+
+def test_cli_exit_codes(tmp_path):
+    assert _cli().returncode == 2                       # no paths
+    assert _cli("no/such/path").returncode == 2         # missing path
+    assert _cli("--rules", "RL9", ".").returncode == 2  # unknown rule
+    clean = tmp_path / "clean.py"
+    clean.write_text("x = 1\n")
+    assert _cli(str(clean)).returncode == 0
+    assert _cli(str(CORPUS / "rl001_bad.py")).returncode == 1
+
+
+def test_rule_subset_selection():
+    result = run_lint(
+        [str(CORPUS / "rl004_bad.py")], rules=["RL001", "RL002"]
+    )
+    assert result.findings == []  # RL004 not selected -> nothing fires
+
+
+def test_list_rules():
+    proc = _cli("--list-rules")
+    assert proc.returncode == 0
+    for rid in ALL_RULES:
+        assert rid in proc.stdout
+
+
+def test_corpus_excluded_from_directory_walks():
+    files = walk_paths([str(REPO / "tests")])
+    assert not any("lint_corpus" in str(f) for f in files)
+    # but explicit file paths are always linted
+    explicit = walk_paths([str(CORPUS / "rl001_bad.py")])
+    assert len(explicit) == 1
+
+
+def test_syntax_error_is_a_meta_finding():
+    result = run_lint_sources({"broken.py": "def f(:\n"})
+    assert result.findings and result.findings[0].rule == "RL000"

@@ -174,6 +174,7 @@ def test_tick_donates_its_input_state():
     state = sim.init_state()
     new_state = sim.tick(state, sim.empty_injection())
     with pytest.raises(RuntimeError, match="deleted|donated"):
+        # repro-lint: ignore[RL001] deliberate use-after-donate: this test pins that reading the donated state raises
         np.asarray(state.stores.values)
     # the output is intact and reusable
     assert int(new_state.t) == 1
