@@ -21,6 +21,11 @@ Guarded metrics:
   printed here as unguarded context.  Plus the headline dense/segmented
   speedup at C=16, n=8 (must not drop below the figure's own 3x floor -
   a ratio, so host-speed independent).
+* ``BENCH_latency_tail.json``: the telemetry-overhead ratio (us/tick with
+  the telemetry plane on over compiled-out, measured A/B in the same
+  run).  A same-run ratio is host-speed independent, so it gets an
+  absolute ``ceilings`` entry (1.05x - the telemetry plane must stay
+  within 5%) rather than a baseline multiple.
 * ``BENCH_engine.json``: us_per_query of both protocol engines.  These
   double as the same-run host-speed probe: the tick-cost tolerance is
   scaled by the (clamped) engine-metric ratio to the pinned values, so a
@@ -65,6 +70,11 @@ def collect(out_dir: str = ".") -> dict:
     # absolute commit throughput must not sink below the figure's floors
     metrics["txn_pipeline/speedup_vs_host:min"] = phead["speedup_vs_host"]
     metrics["txn_pipeline/commit_tput:min"] = phead["commit_tput_per_tick"]
+    tail = _rows(os.path.join(out_dir, "BENCH_latency_tail.json"))
+    # a same-run A/B ratio: absolute ceiling, not a baseline multiple
+    # (ISSUE: telemetry-on us/tick must stay within 1.05x of compiled-out)
+    metrics["latency_tail/telemetry_overhead:max"] = (
+        tail["latency_tail/overhead"]["data"]["ratio"])
     engine = _rows(os.path.join(out_dir, "BENCH_engine.json"))
     for name, row in engine.items():
         metrics[f"{name}:us_per_query"] = row["data"]["us_per_query"]
@@ -123,6 +133,9 @@ def check(out_dir: str = ".") -> int:
         if name.endswith(":min"):
             ok = val >= base["floors"][name]
             verdict = f">= {base['floors'][name]}"
+        elif name.endswith(":max"):
+            ok = val <= base["ceilings"][name]
+            verdict = f"<= {base['ceilings'][name]}"
         else:
             eff = tol * (host if name.startswith("tick_cost/") else 1.0)
             ok = val <= eff * ref
@@ -153,19 +166,23 @@ def check(out_dir: str = ".") -> int:
 def update(out_dir: str = ".") -> None:
     fresh = collect(out_dir)
     floors = {k: round(v, 2) for k, v in fresh.items() if k.endswith(":min")}
+    ceilings = {k: round(v, 2) for k, v in fresh.items()
+                if k.endswith(":max")}
     payload = {
         "comment": ("committed perf baseline - regenerate with "
                     "`python -m benchmarks.check_perf_regression --update` "
                     "after an intentional perf change"),
         "tolerance": 1.5,
         "floors": floors,
+        "ceilings": ceilings,
         "metrics": {k: round(v, 2) for k, v in fresh.items()},
     }
-    # ratio floors guard an absolute minimum, not a baseline multiple:
-    # pin them at the figure's own target, not at the measured value
+    # ratio floors/ceilings guard an absolute bound, not a baseline
+    # multiple: pin them at the figure's own target, not the measured value
     payload["floors"]["tick_cost/headline_speedup:min"] = 3.0
     payload["floors"]["txn_pipeline/speedup_vs_host:min"] = 5.0
     payload["floors"]["txn_pipeline/commit_tput:min"] = 4.0
+    payload["ceilings"]["latency_tail/telemetry_overhead:max"] = 1.05
     with open(BASELINE, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
         f.write("\n")

@@ -59,6 +59,18 @@ def t_pass_us(header_bytes: int) -> float:
     return T_OP_US + T_BYTE_US * header_bytes
 
 
+def tick_latency_us(header_bytes: int) -> float:
+    """Modeled microseconds per tick-in-flight of one query: in the
+    tick-synchronous engine a live message is processed by exactly one
+    node per tick (one pipeline pass) and advances at most one link, so
+    a tick costs one pass plus one hop.  This is the ``us_per_tick``
+    the TelemetryHub uses to convert device-histogram percentiles
+    (``ReplyLog.ticks_in_flight`` buckets) into the latency model's
+    units - repro.obs deliberately doesn't import this layer, so the
+    constant is injected at hub construction."""
+    return t_pass_us(header_bytes) + T_HOP_US
+
+
 def run_cluster_workload(proto: str, n_chains: int, n_nodes: int = 4, *,
                          wf=0.0, entry=None, ticks=8, q=8, seed=0,
                          num_keys=64, versions=6):

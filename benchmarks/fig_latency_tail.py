@@ -1,0 +1,170 @@
+"""Latency-tail figure: percentile export from the device telemetry plane.
+
+The point of the in-tick histogram (``core/telemetry.py``) is that tail
+latency becomes observable WITHOUT moving the reply-log body to the host:
+the ``TelemetryHub`` reads only ``[C, OPCLASS, BKT]`` int32 counters and
+reports p50/p90/p99/p999 per op class, in ticks and in the latency
+model's microseconds (``benchmarks.common.tick_latency_us``).
+
+Two arms:
+
+* **tail**: a C=4 cluster runs a mixed read/write schedule, a handful of
+  spare-region reads (NACK-redirected by partition-epoch admission -
+  the ``nack`` class) and two cross-chain 2PC transactions through the
+  host driver (the ``txn`` class), so EVERY op class records exits.  The
+  hub snapshots mid-run and at the end - zero reply-log body transfers
+  during the run - then the exact ``ReplyLog`` percentile cross-check
+  runs once after it, asserting the histogram percentile lands within
+  one log2 bucket of the exact one (equal when the log didn't overflow,
+  as here).  Snapshots are exported as ``TELEMETRY_latency_tail.jsonl``
+  (nightly CI uploads it as an artifact).
+* **overhead**: MEASURED us/tick of the same engine with telemetry ON
+  vs compiled out (``telemetry=False`` - bit-identical to the pre-plane
+  engine), min-of-repeats on a warmed jitted tick.  The on/off ratio is
+  the guarded metric: benchmarks/check_perf_regression.py gates it at
+  <= 1.05x (the figure records, the checker enforces - same division of
+  labor as the tick-cost sweep).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks.common import BenchRow, tick_latency_us
+from repro.core import (ChainConfig, ChainSim, ClusterConfig, Txn, TxnDriver,
+                        TxnPlanner, WorkloadConfig, make_schedule)
+from repro.core.types import CLIENT_BASE, OP_READ
+from repro.obs import TelemetryHub
+
+C, N_NODES, Q, TICKS = 4, 4, 8, 8
+QS = (50.0, 90.0, 99.0, 99.9)
+
+
+def _cluster() -> ClusterConfig:
+    # spare_keys > 0 so a spare-region read exists to NACK-redirect
+    return ClusterConfig(
+        chain=ChainConfig(n_nodes=N_NODES, num_keys=18, num_versions=6),
+        n_chains=C, buckets_per_chain=2, spare_keys=2)
+
+
+def _schedule(cluster: ClusterConfig):
+    wl = WorkloadConfig(ticks=TICKS, queries_per_tick=Q, write_fraction=0.25,
+                        entry_node=None, seed=3)
+    sched = make_schedule(cluster, wl)
+    # Repurpose one lane per chain as a read of the first spare register:
+    # no bucket occupies it, so partition-epoch admission consumes the op
+    # and NACK-redirects the client (OP_STALE_NACK -> the `nack` class).
+    spare = cluster.keys_in_use
+    for c in range(C):
+        at = (1, c, 1, Q - 1)
+        sched = sched._replace(
+            op=sched.op.at[at].set(OP_READ),
+            key=sched.key.at[at].set(spare),
+            seq=sched.seq.at[at].set(-1),
+            src=sched.src.at[at].set(CLIENT_BASE + 7),
+            dst=sched.dst.at[at].set(1),
+            client=sched.client.at[at].set(CLIENT_BASE + 7),
+            qid=sched.qid.at[at].set(900_000 + c),
+            t_inject=sched.t_inject.at[at].set(1),
+        )
+    return sched
+
+
+def _run_tail(rows: list[BenchRow]) -> None:
+    cluster = _cluster()
+    upt = tick_latency_us(cluster.chain.header_bytes)
+    sim = ChainSim(cluster, inject_capacity=Q, route_capacity=256,
+                   reply_capacity=8192)
+    hub = TelemetryHub(us_per_tick=upt)
+    state = sim.run(sim.init_state(), _schedule(cluster),
+                    extra_ticks=4 * N_NODES)
+    hub.snapshot(state)  # mid-run: telemetry leaves only, no log body
+    # two cross-chain transactions via the host 2PC driver: PREPARE_ACKs
+    # and TXN_REPLYs populate the `txn` class
+    drv = TxnDriver(sim, TxnPlanner(cluster))
+    state, results = drv.run(state, [
+        Txn(txn_id=1, writes=((0, 101), (1, 202))),
+        Txn(txn_id=2, writes=((2, 303), (3, 404))),
+    ])
+    state = sim.drain(state, 4 * N_NODES)
+    hub.snapshot(state)
+    assert all(r.committed for r in results), results
+
+    pct = hub.percentiles(qs=QS)
+    exact = TelemetryHub.exact_percentiles(state.replies, qs=QS,
+                                           us_per_tick=upt)
+    for cname, entry in pct.items():
+        assert entry is not None, f"op class {cname!r} recorded no exits"
+        # parity: histogram bucket within one log2 bucket of the exact
+        # log percentile (equal when the log didn't overflow, as here)
+        for qn, rec in entry.items():
+            d = abs(rec["bucket"] - exact[cname][qn]["bucket"])
+            assert d <= 1, (cname, qn, rec, exact[cname][qn])
+        rows.append(BenchRow(
+            name=f"latency_tail/{cname}",
+            us_per_call=entry["p99"]["us"],
+            derived=";".join(f"{qn}={rec['ticks']}t/{rec['us']:.0f}us"
+                             for qn, rec in entry.items()),
+            data={qn: {"ticks": rec["ticks"], "us": rec["us"],
+                       "bucket": rec["bucket"],
+                       "exact_ticks": exact[cname][qn]["ticks"]}
+                  for qn, rec in entry.items()},
+        ))
+    hub.write_jsonl("TELEMETRY_latency_tail.jsonl", qs=QS)
+    print(hub.summary(qs=QS), flush=True)
+
+
+def measure_overhead(repeats: int = 6, iters: int = 4,
+                     n_chains: int = 16, q: int = 32) -> tuple[float, float]:
+    """MEASURED us/tick with the telemetry plane on vs compiled out, on a
+    warmed jitted tick.  The two arms alternate within each repeat and
+    each takes its min over repeats: slow host-load drift (shared CI
+    runners) then shifts both arms together instead of biasing the
+    ratio, and min-of-repeats reaches for the noise floor - the right
+    statistic for a same-run A/B ratio."""
+    arms = {}
+    for tel in (True, False):
+        cluster = ClusterConfig(
+            chain=ChainConfig(n_nodes=N_NODES, num_keys=64, num_versions=6),
+            n_chains=n_chains)
+        sim = ChainSim(cluster, inject_capacity=q, route_capacity=256,
+                       reply_capacity=4096, telemetry=tel)
+        state = sim.init_state()
+        wl = WorkloadConfig(ticks=1, queries_per_tick=q, write_fraction=0.2,
+                            entry_node=None, seed=0)
+        inj = jax.tree.map(lambda x: x[0], make_schedule(cluster, wl))
+        state = sim.tick(state, inj)  # compile + warm
+        jax.block_until_ready(state.metrics.packets)
+        arms[tel] = [sim, state, inj]
+    best = {True: float("inf"), False: float("inf")}
+    for _ in range(repeats):
+        for tel, arm in arms.items():
+            sim, state, inj = arm
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                state = sim.tick(state, inj)
+            jax.block_until_ready(state.metrics.packets)
+            arm[1] = state
+            best[tel] = min(best[tel], (time.perf_counter() - t0) / iters * 1e6)
+    return best[True], best[False]
+
+
+def run() -> list[BenchRow]:
+    rows: list[BenchRow] = []
+    _run_tail(rows)
+    on, off = measure_overhead()
+    ratio = on / off
+    rows.append(BenchRow(
+        name="latency_tail/overhead",
+        us_per_call=on,
+        derived=(f"on={on:.0f}us/tick;off={off:.0f}us/tick;"
+                 f"ratio={ratio:.3f} (gate <=1.05 in perf_baseline)"),
+        data={"us_per_tick_on": on, "us_per_tick_off": off, "ratio": ratio},
+    ))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

@@ -12,6 +12,9 @@ Public surface:
                and the device-resident wave-table coordinator)
   workload   - paper-evaluation workload generators (incl. transactional)
   metrics    - packet/hop/byte accounting and reply latency log
+  telemetry  - device-side telemetry plane (latency histograms, flight-
+               recorder ring, sampled packet traces); host consumer lives
+               in repro.obs
 """
 from repro.core.types import (  # noqa: F401
     ChainConfig,
@@ -40,8 +43,16 @@ from repro.core.types import (  # noqa: F401
     TO_CLIENT,
     WAVE_BASE,
     NETCRAQ_HEADER_BYTES,
+    N_OPCLASS,
+    OPCLASS_NAMES,
     is_txn_op,
     netchain_header_bytes,
+    reply_op_class,
+)
+from repro.core.telemetry import (  # noqa: F401
+    RING_FIELDS,
+    Telemetry,
+    latency_bucket,
 )
 from repro.core.store import Store, init_store  # noqa: F401
 from repro.core.chain import ChainDist, ChainSim, SimState, full_roles_table  # noqa: F401

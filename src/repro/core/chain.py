@@ -175,6 +175,38 @@ stays scatter-free (RL005 via the ``segmented_route``/``cluster_route``
 docstring tags).  Run ``repro-lint src benchmarks tests examples
 --strict`` (or ``python -m repro.analysis ...``) to verify the whole
 contract; the CI lint lane does it on every push.
+
+Telemetry-leaves rules (the observability extension of the contract)
+--------------------------------------------------------------------
+With ``telemetry=True`` (the default) the state grows
+``SimState.telemetry`` - a per-chain ``telemetry.Telemetry`` of three
+device-side groups updated INSIDE the jitted tick: the [C, OPCLASS, BKT]
+exit-latency histogram (scattered over the same masked exit batch
+``ReplyLog.append`` consumes, AFTER wave-control diversion, so its
+percentiles agree with the log's exactly whenever the log doesn't
+overflow - and keep working after it does), the [C, W, F] flight-recorder
+ring (one health row per tick at a wrapping cursor, written at the
+cluster level from the tick's own metric deltas), and the qid-hash-
+sampled [C, S, HOPS] per-hop trace buffer (fed from the pre-admission
+arrival batch, so stale-NACKed arrivals are visible; exits are the reply
+log's job).  Ownership is one-directional: the device writes, the host
+only READS - ``obs.TelemetryHub.snapshot`` transfers telemetry leaves
+(plus metrics and the tick counter) from the *returned* state and never
+the reply-log body, so observation costs no device round-trips while the
+engine runs.  ``telemetry=False`` follows the ``wave_depth == 0``
+pattern: zero-size leaves ride the pytree and the compiled tick is
+bit-identical to the telemetry-less engine.
+
+Machine-checked by repro-lint: telemetry state is a *traced leaf* of the
+donated tick, never a Python-level constant - RL002 rejects a histogram
+or ring closed over at trace time, RL003 pins every ``Telemetry`` lane
+to strong int32 (a weak bucket increment would flip the abstract value
+and recompile the donated tick), RL001 guards snapshot-then-tick callers
+against use-after-donate, and RL004 keeps the host from branching on
+traced telemetry values inside the jitted stages
+(``if self.telemetry:`` is static - self is position 0).  The
+known-clean/known-bad pair in tests/lint_corpus/telemetry_{clean,bad}.py
+pins this coverage.
 """
 from __future__ import annotations
 
@@ -186,13 +218,16 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core import craq, netchain, store as store_lib
+from repro.core import telemetry as telemetry_lib
 from repro.core import txn as txn_lib
 from repro.core.metrics import Metrics, ReplyLog
 from repro.core.store import Store
+from repro.core.telemetry import Telemetry
 from repro.core.txn import LockTable, WaveState
 from repro.core.types import (
     CLIENT_BASE,
     MULTICAST,
+    N_OPCLASS,
     OP_READ_REPLY,
     NOWHERE,
     OP_ACK,
@@ -236,6 +271,9 @@ class SimState(NamedTuple):
     wave: WaveState      # [C, W] in-network 2PC coordinator slots (device-
                          #     owned after host admission; see the wave-table
                          #     rules above - zero-size when wave_depth == 0)
+    telemetry: Telemetry  # [C] per-chain telemetry plane (device-written,
+                         #     host-read; see the telemetry-leaves rules
+                         #     above - zero-size when telemetry=False)
     t: jax.Array         # [] int32 tick counter (shared; chains are in step)
 
 
@@ -609,6 +647,11 @@ class ChainSim:
         wave_keys: int = 4,
         wave_log_capacity: int = 256,
         wave_route_capacity: int | None = None,
+        telemetry: bool = True,
+        hist_buckets: int = telemetry_lib.DEFAULT_HIST_BUCKETS,
+        ring_window: int = 64,
+        trace_slots: int = 16,
+        trace_hops: int = 32,
     ):
         assert fabric in ("segmented", "dense"), fabric
         self.cluster = as_cluster(cfg)
@@ -634,6 +677,17 @@ class ChainSim:
             if wave_route_capacity is not None
             else max(self.C * wave_depth * wave_keys, 1)
         )
+        # Telemetry plane (telemetry-leaves rules, module docstring).
+        # telemetry=False keeps every telemetry leaf zero-size and the
+        # compiled tick identical to the telemetry-less engine.
+        self.telemetry = bool(telemetry)
+        if self.telemetry:
+            assert hist_buckets >= 2 and ring_window >= 1
+            assert trace_slots >= 1 and trace_hops >= 1
+        self.hist_buckets = hist_buckets if self.telemetry else 0
+        self.ring_window = ring_window if self.telemetry else 0
+        self.trace_slots = trace_slots if self.telemetry else 0
+        self.trace_hops = trace_hops if self.telemetry else 0
         # "segmented" (default) is the O(M log M) production fabric;
         # "dense" is the faithful pre-segmented engine - the [n, M]-matrix
         # router plus its O(B^2) txn-stage ranking and scatter-per-field
@@ -661,10 +715,14 @@ class ChainSim:
                 self.wave_depth, self.wave_keys, self.wave_log_capacity,
                 self.coord_capacity, self.cfg.value_words,
             ),
+            Telemetry.empty(
+                self.hist_buckets, self.ring_window, self.trace_slots,
+                self.trace_hops,
+            ),
         )
 
     def init_state(self) -> SimState:
-        stores, inbox, metrics, replies, wave = jax.vmap(
+        stores, inbox, metrics, replies, wave, tel = jax.vmap(
             lambda _: self._init_chain_state()
         )(jnp.arange(self.C))
         return SimState(
@@ -678,6 +736,7 @@ class ChainSim:
             roles=full_roles_table(self.n, self.C),
             pmap=self.cluster.default_partition(),
             wave=wave,
+            telemetry=tel,
             t=jnp.zeros((), jnp.int32),
         )
 
@@ -693,7 +752,7 @@ class ChainSim:
 
     # -- one tick of ONE chain (vmapped over the chain axis) ---------------
     def _chain_tick(self, stores, inbox, locks, metrics, replies, injected,
-                    roles, pmap, t, sub_in=None, wave_final=None):
+                    roles, pmap, t, sub_in=None, wave_final=None, tel=None):
         """stores [n,...], inbox [n,c_route], locks [K]-leaf LockTable,
         injected [n,c_in], roles [n]-leaf Roles table, pmap this chain's
         PartitionMap view ([K] slot rows, shared [G] columns), t [].
@@ -717,6 +776,13 @@ class ChainSim:
         return grows a sixth element ``ctrl_out``: the flat exit stream
         addressed back at coordinators (``client >= WAVE_BASE``) that the
         cluster-level control router delivers instead of the reply log.
+
+        With ``telemetry=True`` this chain's ``tel`` Telemetry rides the
+        tick as a trailing traced argument (telemetry-leaves rules): the
+        latency histogram accumulates over the same masked exit batch the
+        reply log consumes, and the trace buffer samples the pre-admission
+        arrival batch; the updated Telemetry is appended to the return
+        (the ring row is written at the cluster level, in ``tick``).
         """
         n, cfg = self.n, self.cfg
         alive = roles.alive          # [n] bool
@@ -908,6 +974,24 @@ class ChainSim:
         new_replies = replies.append(exits, t + 1,
                                      dense=self.fabric == "dense")
 
+        if self.telemetry:
+            # ---------------- telemetry plane (telemetry-leaves rules) ----
+            # The histogram sees the SAME exit batch the reply log appends
+            # (wave-control replies already diverted), at the same t_done
+            # stamp - so histogram percentiles and exact ReplyLog ones are
+            # the same multiset whenever the log doesn't overflow.  NOP
+            # padding classifies to -1 and scatters out of bounds.
+            tel = tel._replace(lat_hist=telemetry_lib.record_latency(
+                tel.lat_hist, exits.op, exits.seq, t + 1 - exits.t_inject
+            ))
+            # Hop events from the pre-admission arrival batch: every
+            # message a live node observed this tick, including arrivals
+            # the stale-route stage then NACKs.  Exit events are the reply
+            # log's job.
+            tel = telemetry_lib.record_trace(
+                tel, flat_in.op, flat_in.qid, node_of_in, t
+            )
+
         # Per-bucket conflict heat (ROADMAP item-1 telemetry): every
         # PREPARE the lock stage denied, scattered onto the bucket that
         # owns the contended slot.  A raw integral the CP can EWMA-decay
@@ -957,10 +1041,12 @@ class ChainSim:
             conflict_heat=new_heat,
         )
 
+        out = [new_stores, routed, new_locks, new_metrics, new_replies]
         if self.wave_depth:
-            return (new_stores, routed, new_locks, new_metrics, new_replies,
-                    ctrl_out)
-        return new_stores, routed, new_locks, new_metrics, new_replies
+            out.append(ctrl_out)
+        if self.telemetry:
+            out.append(tel)
+        return tuple(out)
 
     def _lift(self, injected: Msg) -> Msg:
         """Accept legacy single-chain [n, q] injections when C == 1."""
@@ -993,6 +1079,11 @@ class ChainSim:
         pmap_axes = PartitionMap(
             owner=None, base=None, epoch=None, slot_bucket=0, slot_epoch=0
         )
+        # telemetry rides the per-chain tick as a trailing traced argument
+        # (telemetry-leaves rules; vmap in_axes is positional, so the lane
+        # only exists when the plane is live)
+        tel_axes = (0,) if self.telemetry else ()
+        tel_args = (state.telemetry,) if self.telemetry else ()
         if self.wave_depth:
             # ---- in-network coordinator stage (wave-table rules) --------
             # Runs BEFORE the chain ticks on last tick's control replies
@@ -1010,12 +1101,14 @@ class ChainSim:
                 flat_sub, sub_target.reshape(-1), self.C,
                 self.wave_sub_capacity,
             )
-            stores, inbox, locks, metrics, replies, ctrl_out = jax.vmap(
+            outs = jax.vmap(
                 self._chain_tick,
-                in_axes=(0, 0, 0, 0, 0, 0, 0, pmap_axes, None, 0, 0),
+                in_axes=(0, 0, 0, 0, 0, 0, 0, pmap_axes, None, 0, 0)
+                + tel_axes,
             )(state.stores, state.inbox, state.locks, state.metrics,
               state.replies, injected, state.roles, state.pmap, state.t,
-              sub_in, final_out)
+              sub_in, final_out, *tel_args)
+            stores, inbox, locks, metrics, replies, ctrl_out = outs[:6]
             # control replies ride back to their coordinator's chain and
             # land in its coord_in buffer for next tick's stage - the
             # coordinator id encodes the chain (client = WAVE_BASE +
@@ -1038,13 +1131,40 @@ class ChainSim:
                 wave_aborts=metrics.wave_aborts + wstats[1],
                 wave_occupancy=metrics.wave_occupancy + wstats[2],
             )
+            occupancy = wstats[2]
         else:
-            stores, inbox, locks, metrics, replies = jax.vmap(
+            outs = jax.vmap(
                 self._chain_tick,
-                in_axes=(0, 0, 0, 0, 0, 0, 0, pmap_axes, None),
+                in_axes=(0, 0, 0, 0, 0, 0, 0, pmap_axes, None, None, None)
+                + tel_axes,
             )(state.stores, state.inbox, state.locks, state.metrics,
-              state.replies, injected, state.roles, state.pmap, state.t)
+              state.replies, injected, state.roles, state.pmap, state.t,
+              None, None, *tel_args)
+            stores, inbox, locks, metrics, replies = outs[:5]
             wave = state.wave
+            occupancy = jnp.zeros((self.C,), jnp.int32)
+        tel = outs[-1] if self.telemetry else state.telemetry
+        if self.telemetry:
+            # ---------------- flight-recorder ring (telemetry rules) -------
+            # One [N_RING_FIELDS] health row per chain per tick: counter
+            # deltas of this tick's metrics vs the donated input's (reads
+            # of donated buffers are fine inside the trace - donation is a
+            # buffer-reuse contract, not a read ban), plus end-of-tick
+            # gauges from the freshly routed inbox.  Field order is
+            # telemetry.RING_FIELDS.
+            live = (inbox.op != OP_NOP).sum(axis=2)              # [C, n]
+            delta = lambda f: getattr(metrics, f) - getattr(state.metrics, f)
+            row = jnp.stack([
+                jnp.broadcast_to(state.t, (self.C,)),
+                live.sum(axis=1),
+                live.max(axis=1),
+                delta("drops"),
+                delta("lock_conflicts"),
+                occupancy,
+                delta("replies"),
+                delta("stale_routes"),
+            ], axis=1)
+            tel = jax.vmap(telemetry_lib.record_ring)(tel, row)
         return SimState(
             stores=stores,
             inbox=inbox,
@@ -1054,6 +1174,7 @@ class ChainSim:
             roles=state.roles,
             pmap=state.pmap,
             wave=wave,
+            telemetry=tel,
             t=state.t + 1,
         )
 
@@ -1195,18 +1316,46 @@ class ChainDist:
             return P(self.axis)
         return P(self.group_axis, self.axis)
 
-    def make_step(self, batch_per_node: int):
+    def init_telemetry(
+        self, hist_buckets: int = telemetry_lib.DEFAULT_HIST_BUCKETS
+    ) -> Telemetry:
+        """Telemetry shard for ``make_step(..., telemetry=True)`` - the
+        simulator plane's histogram piece on the production engine
+        (telemetry-leaves rules): a per-device [n, OPCLASS, BKT] (or
+        [C, n, ...] grouped, like ``init_state``) exit-latency histogram
+        (the host sums over the node axis for the per-chain view) plus a
+        per-device step clock riding the ``ring_cursor`` lane.  Ring and
+        trace leaves are zero-size - the full flight-recorder/trace plane
+        stays ``ChainSim``-side for now (ROADMAP item 3 parity track)."""
+        lead = (self.n,) if self.group_axis is None else (self.C, self.n)
+        z = lambda *s: jnp.zeros(lead + s, jnp.int32)
+        return Telemetry(
+            lat_hist=z(N_OPCLASS, hist_buckets),
+            ring=z(0, telemetry_lib.N_RING_FIELDS),
+            ring_cursor=z(),
+            trace_qid=z(0),
+            trace_node=z(0, 0),
+            trace_tick=z(0, 0),
+            trace_op=z(0, 0),
+            trace_len=z(0),
+        )
+
+    def make_step(self, batch_per_node: int, telemetry: bool = False):
         cfg, axis, n = self.cfg, self.axis, self.n
         grouped = self.group_axis is not None
         node_step = self.node_step
 
         def step(stores: Store, inbox: Msg, roles: Roles,
-                 pmap: PartitionMap, locks: LockTable):
+                 pmap: PartitionMap, locks: LockTable, tel=None):
             """shard_map body: [1, ...] (or [1, 1, ...]) local shards; one
             chain tick under the CP-installed live role table, partition
             map and lock shard (traced arguments - membership edits,
             bucket migrations and lock churn re-run, never re-compile).
-            Returns (stores', inbox', replies_local, locks')."""
+            Returns (stores', inbox', replies_local, locks'); with
+            ``telemetry=True`` a sixth traced argument ``tel``
+            (``init_telemetry()``) rides the step and an updated Telemetry
+            is appended to the return - same contract as the simulator's
+            plane (telemetry-leaves rules, module docstring)."""
             unshard = (lambda x: x[0, 0]) if grouped else (lambda x: x[0])
             my_roles: Roles = jax.tree.map(unshard, roles)
             my_pos = my_roles.my_pos
@@ -1311,12 +1460,30 @@ class ChainDist:
                 Msg.concat([from_prev, from_fabric]), batch_per_node
             )
             reshard = (lambda x: x[None, None]) if grouped else (lambda x: x[None])
-            return (
+            out = [
                 jax.tree.map(reshard, new_store),
                 jax.tree.map(reshard, next_inbox),
                 jax.tree.map(reshard, replies),
                 jax.tree.map(lambda x: x[None], new_locks),
-            )
+            ]
+            if telemetry:
+                # --- device-side latency histogram (telemetry rules) ------
+                # Each device scatters its OWN local reply batch; the
+                # ring_cursor lane doubles as the per-device step clock
+                # (the dist engine has no shared SimState.t), so
+                # ticks-in-flight = clock + 1 - t_inject, exactly the
+                # simulator's t_done stamp.
+                my_tel: Telemetry = jax.tree.map(unshard, tel)
+                clock = my_tel.ring_cursor
+                my_tel = my_tel._replace(
+                    lat_hist=telemetry_lib.record_latency(
+                        my_tel.lat_hist, replies.op, replies.seq,
+                        clock + 1 - replies.t_inject,
+                    ),
+                    ring_cursor=jnp.asarray(clock + 1, jnp.int32),
+                )
+                out.append(jax.tree.map(reshard, my_tel))
+            return tuple(out)
 
         spec = self._specs()
         spec_store = Store(*([spec] * len(Store._fields)))
@@ -1336,6 +1503,17 @@ class ChainDist:
         lock_spec = LockTable(
             holder=slot_spec, client=slot_spec, version=slot_spec
         )
+        # the telemetry shard is per-device state: every leaf shards on
+        # the same (group, position) axes as the stores
+        tel_spec = Telemetry(*([spec] * len(Telemetry._fields)))
+        in_specs = (spec_store, msg_spec, roles_spec, pmap_spec, lock_spec)
+        out_specs = (spec_store, msg_spec, msg_spec, lock_spec)
+        if telemetry:
+            in_specs = in_specs + (tel_spec,)
+            out_specs = out_specs + (tel_spec,)
+            fn = step
+        else:
+            fn = lambda s, i, r, p, l: step(s, i, r, p, l, None)
         # check_rep can't statically infer the lock shard's replication
         # through the sort/searchsorted ops inside the lock stage; the
         # replication is real by construction (the transition depends only
@@ -1343,12 +1521,10 @@ class ChainDist:
         # replicated shard), asserted by test_chain_dist_lock_stage.
         return jax.jit(
             shard_map(
-                step,
+                fn,
                 mesh=self.mesh,
-                in_specs=(
-                    spec_store, msg_spec, roles_spec, pmap_spec, lock_spec,
-                ),
-                out_specs=(spec_store, msg_spec, msg_spec, lock_spec),
+                in_specs=in_specs,
+                out_specs=out_specs,
                 check_rep=False,
             )
         )

@@ -21,6 +21,14 @@ batch equivalent of the match-action control logic:
 Batch serialization order within one step: READs observe the state at step
 start, then ACKs apply, then WRITEs (DESIGN.md §3).  The sequential oracle
 used by the hypothesis tests replays exactly this order.
+
+Telemetry hop events: ``node_step`` needs no instrumentation of its own -
+every message a node processes arrives through the tick's merged inbox,
+and the telemetry plane's sampled packet traces
+(``core/telemetry.py::record_trace``) read exactly that pre-admission
+arrival batch, so each forward/relay/commit a traced query performs here
+shows up as one (node, tick, op) hop event.  Exit events (the reply leg)
+are covered by the reply log and the latency histogram instead.
 """
 from __future__ import annotations
 

@@ -101,6 +101,26 @@ class Metrics(NamedTuple):
         a = jnp.atleast_2d(self.conflict_heat)
         return [int(x) for x in a.sum(axis=0)]
 
+    def heat_ewma(self, prev: "list | None", alpha: float) -> list:
+        """One EWMA-decay step over ``heat_per_bucket()`` - the host-side
+        decay the ROADMAP item-1 Balancer samples (the raw leaf is an
+        undecayed integral, so without this a long-cold bucket looks as
+        hot as a currently-contended one).
+
+        Call on *interval* metrics (the difference of two snapshots - see
+        ``obs.TelemetryHub``, which maintains this automatically):
+        ``new[b] = (1 - alpha) * prev[b] + alpha * interval_heat[b]``,
+        with ``prev=None`` starting from zeros.  Under constant
+        per-interval heat ``h`` the iteration converges to the fixpoint
+        ``h`` (and ``prev == [h, ...]`` maps to exactly ``[h, ...]``) -
+        pinned by tests/test_telemetry.py.
+        """
+        cur = self.heat_per_bucket()
+        if prev is None:
+            prev = [0.0] * len(cur)
+        assert len(prev) == len(cur), (len(prev), len(cur))
+        return [(1.0 - alpha) * p + alpha * c for p, c in zip(prev, cur)]
+
 
 class ReplyLog(NamedTuple):
     """Fixed-capacity record of replies that exited to clients."""

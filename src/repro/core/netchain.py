@@ -12,6 +12,12 @@ The 16-bit SEQ field critique (paper §II.B.2): NetChain's sequence number
 wraps after 65,536 writes.  We reproduce the wrap behaviour behind
 ``SEQ_BITS`` so the overflow test can demonstrate the failure mode, while
 NetCRAQ uses 32-bit seqs.
+
+Telemetry hop events: as with the NetCRAQ logic, the per-hop forwarding
+this module emits is observed by the telemetry plane at the *arrival* side
+(``core/telemetry.py::record_trace`` samples the tick's pre-admission
+inbox batch), so the baseline's longer read paths show up as
+proportionally longer sampled traces - no instrumentation lives here.
 """
 from __future__ import annotations
 

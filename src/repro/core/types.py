@@ -81,6 +81,46 @@ def is_txn_op(op):
     the head's lock stage owns and the workload router pins to the head."""
     return (op == OP_PREPARE) | (op == OP_COMMIT) | (op == OP_ABORT)
 
+
+# ---------------------------------------------------------------------------
+# Latency op classes (telemetry plane, core/telemetry.py): every reply that
+# exits to a client is binned into one of these rows of the device-side
+# latency histogram.  Shared by the device (histogram scatter inside the
+# jitted tick) and the host (TelemetryHub's exact ReplyLog cross-check), so
+# the two views classify identically by construction.
+# ---------------------------------------------------------------------------
+OPCLASS_READ = 0   # OP_READ_REPLY
+OPCLASS_WRITE = 1  # OP_WRITE_REPLY
+OPCLASS_TXN = 2    # committed txn traffic: OP_TXN_REPLY (seq >= 0), OP_PREPARE_ACK
+OPCLASS_NACK = 3   # rejections: WRITE/STALE/PREPARE NACKs, aborted OP_TXN_REPLY
+N_OPCLASS = 4
+OPCLASS_NAMES = ("read", "write", "txn", "nack")
+
+
+def reply_op_class(op, seq, xp=jnp):
+    """Latency class of an exiting reply; -1 = not a classified reply (the
+    masked NOP padding of an exit batch, or chain-internal ops that never
+    reach a client).  Array-friendly for jax *and* numpy via ``xp``.
+
+    ``OP_TXN_REPLY`` splits on its seq stamp: the commit path carries the
+    stamped write seq (>= 0), the abort path carries -1 - so aborts land in
+    the nack class next to the PREPARE_NACKs that caused them."""
+    is_txn_reply = op == OP_TXN_REPLY
+    cls = xp.where(op == OP_READ_REPLY, OPCLASS_READ, -1)
+    cls = xp.where(op == OP_WRITE_REPLY, OPCLASS_WRITE, cls)
+    cls = xp.where(
+        (is_txn_reply & (seq >= 0)) | (op == OP_PREPARE_ACK), OPCLASS_TXN, cls
+    )
+    cls = xp.where(
+        (op == OP_WRITE_NACK)
+        | (op == OP_STALE_NACK)
+        | (op == OP_PREPARE_NACK)
+        | (is_txn_reply & (seq < 0)),
+        OPCLASS_NACK,
+        cls,
+    )
+    return xp.asarray(cls, xp.int32)
+
 # Value payload width: 128-bit VALUE field == 4 x 32-bit words (paper default).
 VALUE_WORDS = 4
 

@@ -1,0 +1,9 @@
+"""Host-side observability consumers for the device-side telemetry plane.
+
+The device half lives in ``repro.core.telemetry`` (histogram / ring /
+trace leaves updated inside the jitted tick); this package is the read
+side: ``TelemetryHub`` snapshots the telemetry leaves off a running
+engine (never the reply-log body), turns histograms into percentiles,
+snapshot pairs into rates, and emits JSONL + a human summary table.
+"""
+from repro.obs.hub import TelemetryHub, TelemetrySnapshot  # noqa: F401

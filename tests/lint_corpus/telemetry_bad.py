@@ -1,0 +1,53 @@
+"""Known-bad exemplar: a telemetry plane breaking the traced-leaf rules.
+
+The telemetry plane (core/chain.py module docstring, "telemetry-leaves
+rules") carries histograms/ring/trace as *traced* ``SimState`` leaves.
+This twin keeps the shapes but breaks the contract in exactly the two
+ways repro-lint machine-checks: a jitted recorder closing over the
+histogram instead of threading it (RL002 - the executable bakes the
+stale zeros in as a constant), and weak python literals flowing into
+the strong int32 telemetry lanes (RL003 - the weak->strong flip across
+a tick boundary silently recompiles the donated tick).
+"""
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+OPCLASS_READ = 0
+
+HIST = jnp.zeros((4, 16), jnp.int32)  # module-level histogram
+
+
+class Telemetry(NamedTuple):
+    lat_hist: jax.Array
+    ring_cursor: jax.Array
+
+
+@jax.jit
+def record(bucket):
+    # BAD (RL002): the histogram is baked in as a compile-time constant,
+    # so every tick "accumulates" into the same stale zeros
+    return HIST + (bucket[:, None] == jnp.arange(16)).astype(jnp.int32)
+
+
+def make_recorder():
+    ring = jnp.zeros((8,), jnp.int32)
+
+    @jax.jit
+    def push(row):
+        return ring + row  # BAD (RL002): closure-captured ring buffer
+
+    return push
+
+
+def snapshot(cond):
+    return Telemetry(
+        lat_hist=jnp.where(cond, 1, 0),  # BAD (RL003): both branches weak
+        ring_cursor=0,                   # BAD (RL003): weak literal lane
+    )
+
+
+def advance(tel):
+    # BAD (RL003): weak module constant into a strong int32 lane
+    return tel._replace(ring_cursor=OPCLASS_READ)

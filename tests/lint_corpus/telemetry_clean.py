@@ -1,0 +1,42 @@
+"""Clean twin: the telemetry plane under the traced-leaf rules.
+
+Same shapes as telemetry_bad.py, written the way core/chain.py actually
+carries its plane: the histogram and ring thread through jitted code as
+*traced arguments* (never closures), and every int32 telemetry lane is
+dtype-pinned at construction.
+"""
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+OPCLASS_READ = 0
+
+
+class Telemetry(NamedTuple):
+    lat_hist: jax.Array
+    ring_cursor: jax.Array
+
+
+@jax.jit
+def record(hist, bucket):
+    # the histogram flows in as a traced leaf (telemetry-leaves rules)
+    return hist + (bucket[:, None] == jnp.arange(16)).astype(jnp.int32)
+
+
+def make_recorder():
+    def push(ring, row):
+        return ring + row  # ring is a traced argument
+
+    return jax.jit(push)
+
+
+def snapshot(cond):
+    return Telemetry(
+        lat_hist=cond.astype(jnp.int32),
+        ring_cursor=jnp.asarray(0, jnp.int32),
+    )
+
+
+def advance(tel):
+    return tel._replace(ring_cursor=jnp.asarray(OPCLASS_READ, jnp.int32))

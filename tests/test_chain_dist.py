@@ -209,6 +209,75 @@ print("LOCK_STAGE_OK")
 
 
 @pytest.mark.slow
+def test_chain_dist_telemetry_hist():
+    """The dist engine's opt-in telemetry: ``make_step(B, telemetry=True)``
+    threads a Telemetry operand through the shard_map step and scatters
+    each device's reply batch into its latency histogram shard, clocked by
+    the per-device ``ring_cursor`` step counter (the dist engine has no
+    shared SimState.t).  The histogram totals must match the replies the
+    host actually saw, per op class."""
+    out = run_with_devices("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import ChainConfig, ChainDist, CLIENT_BASE
+from repro.core.types import (Msg, OP_READ, OP_READ_REPLY, OP_WRITE,
+                              OP_WRITE_REPLY, OPCLASS_READ, OPCLASS_WRITE)
+
+mesh = jax.make_mesh((4,), ("chain",))
+cfg = ChainConfig(n_nodes=4, num_keys=16, num_versions=4, protocol="netcraq")
+dist = ChainDist(cfg, mesh, axis="chain")
+stores = dist.init_state()
+roles = dist.full_roles()
+pmap = dist.default_pmap()
+B = 8
+step = dist.make_step(B, telemetry=True)
+locks = dist.init_locks()
+tel = dist.init_telemetry()
+
+def inject(op, key, val, node, t):
+    m = Msg.empty(B)
+    m = jax.tree.map(lambda x: jnp.tile(x[None], (4,) + (1,)*x.ndim), m)
+    return m._replace(
+        op=m.op.at[node, 0].set(op), key=m.key.at[node, 0].set(key),
+        value=m.value.at[node, 0, 0].set(val),
+        src=m.src.at[node, 0].set(CLIENT_BASE+7),
+        client=m.client.at[node, 0].set(CLIENT_BASE+7),
+        qid=m.qid.at[node, 0].set(42), dst=m.dst.at[node, 0].set(node),
+        t_inject=m.t_inject.at[node, 0].set(t))
+
+seen_r = seen_w = 0
+inbox = inject(OP_WRITE, 3, 99, 0, 0)
+for _ in range(8):
+    stores, inbox, replies, locks, tel = step(
+        stores, inbox, roles, pmap, locks, tel)
+    r = jax.device_get(replies)
+    seen_r += int((r.op == OP_READ_REPLY).sum())
+    seen_w += int((r.op == OP_WRITE_REPLY).sum())
+inbox = inject(OP_READ, 3, 0, 2, 8)  # injected at clock 8
+stores, inbox, replies, locks, tel = step(
+    stores, inbox, roles, pmap, locks, tel)
+r = jax.device_get(replies)
+seen_r += int((r.op == OP_READ_REPLY).sum())
+seen_w += int((r.op == OP_WRITE_REPLY).sum())
+assert seen_r == 1 and seen_w == 1, (seen_r, seen_w)
+
+hist = np.asarray(jax.device_get(tel.lat_hist))
+flat = hist.reshape((-1,) + hist.shape[-2:]).sum(axis=0)  # [OPCLASS, BKT]
+assert int(flat[OPCLASS_READ].sum()) == seen_r, flat
+assert int(flat[OPCLASS_WRITE].sum()) == seen_w, flat
+assert int(flat.sum()) == seen_r + seen_w, flat
+# per-device step clock: one row per step on every device
+assert np.asarray(jax.device_get(tel.ring_cursor)).tolist() == [9]*4
+# the read completed in one step -> bucket 0; the write propagated the
+# whole 4-node chain -> strictly slower
+read_b = int(np.nonzero(flat[OPCLASS_READ])[0][0])
+write_b = int(np.nonzero(flat[OPCLASS_WRITE])[0][0])
+assert read_b == 0 and write_b >= read_b, (read_b, write_b)
+print("DIST_TEL_OK")
+""")
+    assert "DIST_TEL_OK" in out
+
+
+@pytest.mark.slow
 def test_replicated_kv_cache_protocols():
     out = run_with_devices("""
 import jax, jax.numpy as jnp, functools

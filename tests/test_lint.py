@@ -92,6 +92,20 @@ def test_expected_finding_counts():
         assert result.per_rule()[rule_id] == n, (rule_id, result.findings)
 
 
+def test_telemetry_exemplars_pin_the_telemetry_leaves_rules():
+    """The telemetry-plane contract in core/chain.py points here: the bad
+    twin breaks the traced-leaf rules in exactly the two machine-checked
+    ways (RL002 closure-captured histogram/ring, RL003 weak literals into
+    the int32 telemetry lanes) and nothing else fires on it; the clean
+    twin - written the way the engine actually carries its plane - is
+    strict-silent."""
+    bad = _lint_corpus_file("telemetry_bad.py")
+    per_rule = bad.per_rule()
+    assert per_rule == {"RL002": 2, "RL003": 3}, bad.findings
+    clean = _lint_corpus_file("telemetry_clean.py", strict=True)
+    assert clean.findings == [], clean.findings
+
+
 # --------------------------------------------------------------------------
 # 2. pragmas
 # --------------------------------------------------------------------------

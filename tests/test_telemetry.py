@@ -1,0 +1,214 @@
+"""Telemetry-plane contract tests (core/telemetry.py + obs/hub.py).
+
+What is pinned here, mirroring the telemetry-leaves rules in the
+core/chain.py docstring:
+
+* histogram/exact parity: the device histogram sees the SAME exit batch
+  the reply log appends, so when the log doesn't overflow the hub's
+  nearest-rank percentile lands in exactly the bucket of the exact
+  ReplyLog percentile (the shared ``latency_bucket`` makes the check
+  structural, not numerical);
+* the flight-recorder ring wraps: ``ring_cursor`` counts all rows ever
+  written and the unwrapped window is the last W consecutive ticks;
+* sampled traces are deterministic: a pure function of the schedule
+  (two fresh engines agree bit-for-bit), every claimed slot's qid
+  satisfies the sampling predicate, and hop ticks strictly increase
+  (at most one event per slot per tick);
+* ``telemetry=False`` compiles the plane out bit-identically (the
+  ``wave_depth == 0`` pattern): data-path results equal the
+  telemetry-on run and every telemetry leaf is zero-size;
+* ``Metrics.heat_ewma`` has the advertised fixpoint under constant
+  interval heat, and the hub's snapshot/rates/JSONL pipeline round-trips.
+"""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (ChainConfig, ChainSim, ClusterConfig, WorkloadConfig,
+                        make_schedule)
+from repro.core.metrics import Metrics
+from repro.core.telemetry import (TRACE_SAMPLE_BITS, latency_bucket,
+                                  trace_hash, trace_sampled)
+from repro.core.types import OPCLASS_NAMES
+from repro.obs import TelemetryHub
+
+C, N, Q, TICKS, EXTRA = 2, 4, 4, 6, 16
+
+
+def _engine(telemetry: bool = True, **kw) -> ChainSim:
+    cluster = ClusterConfig(
+        chain=ChainConfig(n_nodes=N, num_keys=16, num_versions=6),
+        n_chains=C)
+    return ChainSim(cluster, inject_capacity=Q, route_capacity=64,
+                    reply_capacity=2048, telemetry=telemetry, **kw)
+
+
+def _run(sim: ChainSim, seed: int = 11, wf: float = 0.3):
+    wl = WorkloadConfig(ticks=TICKS, queries_per_tick=Q, write_fraction=wf,
+                        entry_node=None, seed=seed)
+    return sim.run(sim.init_state(), make_schedule(sim.cluster, wl),
+                   extra_ticks=EXTRA)
+
+
+def test_histogram_matches_exact_reply_log():
+    state = _run(_engine())
+    hub = TelemetryHub()
+    hub.snapshot(state)
+    pct = hub.percentiles(qs=(50.0, 90.0, 99.0))
+    exact = TelemetryHub.exact_percentiles(state.replies, qs=(50.0, 90.0, 99.0))
+    # every logged reply classified: histogram mass == log cursor total
+    hist_total = int(np.asarray(state.telemetry.lat_hist).sum())
+    assert hist_total == int(np.asarray(state.replies.cursor).sum())
+    assert hist_total > 0
+    seen = 0
+    for cname in OPCLASS_NAMES:
+        if pct[cname] is None:
+            assert exact[cname] is None
+            continue
+        seen += 1
+        for qn, rec in pct[cname].items():
+            # ample reply capacity -> same multiset -> same bucket exactly
+            assert rec["bucket"] == exact[cname][qn]["bucket"], (cname, qn)
+            assert rec["ticks"] == 1 << rec["bucket"]
+    assert seen >= 2  # the mixed workload exercises reads AND writes
+
+
+def test_latency_bucket_shared_math():
+    # host (numpy) and device (jnp) inputs agree; bucket b = floor(log2)
+    for ticks, want in ((0, 0), (1, 0), (2, 1), (3, 1), (4, 2), (7, 2),
+                        (8, 3), (1 << 14, 14), (1 << 15, 15), (1 << 20, 15)):
+        assert int(latency_bucket(np.asarray(ticks), 16)) == want
+        assert int(latency_bucket(jnp.asarray(ticks), 16)) == want
+    batch = np.asarray([1, 5, 9, 300])
+    np.testing.assert_array_equal(np.asarray(latency_bucket(batch, 16)),
+                                  [0, 2, 3, 8])
+
+
+def test_ring_wraps_and_unwraps_to_last_window():
+    sim = _engine(ring_window=4)
+    state = _run(sim)
+    total_ticks = int(state.t)
+    assert total_ticks == TICKS + EXTRA
+    cur = np.asarray(state.telemetry.ring_cursor)
+    np.testing.assert_array_equal(cur, total_ticks)  # one row per tick
+    hub = TelemetryHub()
+    hub.snapshot(state)
+    for window in hub.ring_window():
+        assert window.shape == (4, len(window[0]))
+        # rows unwrap oldest -> newest: the last 4 consecutive tick stamps
+        np.testing.assert_array_equal(
+            window[:, 0], np.arange(total_ticks - 4, total_ticks))
+
+
+def test_trace_sampling_is_deterministic_and_hash_consistent():
+    s1 = _run(_engine())
+    s2 = _run(_engine())
+    for a, b in zip(s1.telemetry, s2.telemetry):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    tel = s1.telemetry
+    qids = np.asarray(tel.trace_qid)
+    lens = np.asarray(tel.trace_len)
+    ticks = np.asarray(tel.trace_tick)
+    nodes = np.asarray(tel.trace_node)
+    claimed = qids >= 0
+    assert claimed.any(), "the seeded schedule samples at least one qid"
+    mask = (1 << TRACE_SAMPLE_BITS) - 1
+    for c, s in zip(*np.nonzero(claimed)):
+        q = int(qids[c, s])
+        assert int(np.asarray(trace_hash(q))) & mask == 0
+        assert bool(np.asarray(trace_sampled(q)))
+        h = int(lens[c, s])
+        assert h >= 1
+        # one event per tick, in tick order, at live nodes
+        assert np.all(np.diff(ticks[c, s, :h]) >= 1)
+        assert np.all((nodes[c, s, :h] >= 0) & (nodes[c, s, :h] < N))
+
+
+def test_telemetry_off_is_bit_identical_and_zero_size():
+    on = _run(_engine(True))
+    off = _run(_engine(False))
+    for a, b in zip(on.replies, off.replies):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(on.metrics, off.metrics):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(on.stores.values),
+                                  np.asarray(off.stores.values))
+    assert int(on.t) == int(off.t)
+    # the off engine's telemetry leaves ride the pytree at zero size
+    assert all(np.asarray(leaf).size == 0 or leaf.ndim == 1  # ring_cursor [C]
+               for leaf in off.telemetry)
+    assert np.asarray(off.telemetry.lat_hist).size == 0
+    assert np.asarray(off.telemetry.ring).size == 0
+    assert np.asarray(off.telemetry.trace_qid).size == 0
+
+
+def test_heat_ewma_fixpoint_under_constant_load():
+    heat = jnp.asarray([[2, 4, 6], [1, 0, 3]], jnp.int32)  # [C, B]
+    interval = Metrics.zeros(num_buckets=3)._replace(conflict_heat=heat)
+    total = interval.heat_per_bucket()
+    assert total == [3, 4, 9]
+    # prev == the constant interval heat maps to itself exactly (alpha=0.5
+    # keeps the arithmetic exact in binary floating point)
+    fix = [float(h) for h in total]
+    assert interval.heat_ewma(fix, alpha=0.5) == fix
+    # and the iteration converges to that fixpoint from cold
+    cur = None
+    for _ in range(60):
+        cur = interval.heat_ewma(cur, alpha=0.3)
+    assert cur == pytest.approx(fix, abs=1e-6)
+    # prev=None starts from zeros
+    assert interval.heat_ewma(None, alpha=0.5) == [h / 2 for h in fix]
+
+
+def test_hub_rates_jsonl_and_summary(tmp_path):
+    sim = _engine()
+    hub = TelemetryHub(us_per_tick=2.5)
+    state = _run(sim)
+    hub.snapshot(state)
+    state = sim.drain(state, 4)
+    hub.snapshot(state)
+
+    rates = hub.rates()
+    assert rates is not None and rates["replies"] >= 0.0
+    assert set(rates) == {"replies", "packets", "drops", "lock_conflicts",
+                          "stale_routes", "write_nacks"}
+    path = tmp_path / "telemetry.jsonl"
+    hub.write_jsonl(str(path))
+    lines = path.read_text().splitlines()
+    assert len(lines) == 2
+    recs = [json.loads(ln) for ln in lines]
+    assert all(r["kind"] == "telemetry_snapshot" for r in recs)
+    assert recs[0]["rates"] is None and recs[1]["rates"] is not None
+    assert recs[1]["percentiles"]["read"]["p50"]["us"] > 0
+    assert recs[1]["ring"]["fields"][0] == "tick"
+    text = hub.summary()
+    assert "read" in text and "p999" in text and "rates/tick" in text
+
+
+def test_snapshot_reads_returned_state_not_donated_input():
+    """The hub observes the *returned* state of a tick (the donation
+    contract): snapshotting then ticking again must work, and the
+    histogram only ever grows between snapshots."""
+    sim = _engine()
+    hub = TelemetryHub()
+    state = sim.init_state()
+    wl = WorkloadConfig(ticks=TICKS, queries_per_tick=Q, write_fraction=0.3,
+                        entry_node=None, seed=11)
+    sched = make_schedule(sim.cluster, wl)
+    prev_total = 0
+    for t in range(TICKS):
+        state = sim.tick(state, jax.tree.map(lambda x: x[t], sched))
+        snap = hub.snapshot(state)
+        total = int(snap.lat_hist.sum())
+        assert total >= prev_total
+        prev_total = total
+    state = sim.drain(state, EXTRA)
+    snap = hub.snapshot(state)
+    assert int(snap.lat_hist.sum()) >= prev_total

@@ -1,0 +1,54 @@
+"""Property twin of the histogram/percentile parity contract.
+
+The seeded test (tests/test_telemetry.py) pins one workload; this one
+drives the SHARED bucket/percentile math (``latency_bucket`` + the hub's
+nearest-rank convention) over arbitrary latency multisets: the percentile
+read off the log2 histogram must land in exactly the bucket of the exact
+nearest-rank element - the bucket IS a function of that element, so the
+histogram can never be more than the bucket's rounding away from truth.
+
+Skips cleanly when hypothesis isn't installed (the repo adds no deps).
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.telemetry import latency_bucket  # noqa: E402
+
+N_BUCKETS = 16
+
+
+def _hist_percentile_bucket(ticks: np.ndarray, q: float) -> int:
+    """The hub's convention: nearest-rank over bucket counts."""
+    buckets = np.asarray(latency_bucket(ticks, N_BUCKETS))
+    counts = np.bincount(buckets, minlength=N_BUCKETS)
+    rank = max(1, int(math.ceil(q / 100.0 * ticks.size)))
+    return int(np.searchsorted(np.cumsum(counts), rank))
+
+
+@given(st.lists(st.integers(min_value=1, max_value=200_000),
+                min_size=1, max_size=400),
+       st.sampled_from([50.0, 90.0, 99.0, 99.9]))
+@settings(max_examples=60, deadline=None)
+def test_histogram_percentile_is_the_exact_elements_bucket(ticks, q):
+    arr = np.asarray(ticks, np.int32)
+    rank = max(1, int(math.ceil(q / 100.0 * arr.size)))
+    exact = int(np.sort(arr)[rank - 1])
+    assert _hist_percentile_bucket(arr, q) == int(
+        latency_bucket(np.asarray(exact), N_BUCKETS))
+
+
+@given(st.integers(min_value=1, max_value=1 << 30))
+@settings(max_examples=100, deadline=None)
+def test_bucket_edges_are_log2(ticks):
+    b = int(latency_bucket(np.asarray(ticks), N_BUCKETS))
+    assert 0 <= b < N_BUCKETS
+    assert (1 << b) <= max(ticks, 1)
+    if b < N_BUCKETS - 1:  # the top bucket is open-ended
+        assert ticks < (1 << (b + 1))

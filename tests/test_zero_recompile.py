@@ -22,6 +22,7 @@ import jax
 from repro.core import (ChainConfig, ChainSim, ClusterConfig, Coordinator,
                         Txn, TxnDriver, TxnPlanner)
 from repro.core.types import OP_WRITE, Msg, value_from_int, CLIENT_BASE, NOWHERE
+from repro.obs import TelemetryHub
 
 
 def _cluster():
@@ -48,10 +49,16 @@ def _inject_write(sim, gkey, val, node, chain, qid, epoch=0):
 
 
 def test_mixed_lifecycle_never_recompiles():
+    # telemetry defaults ON: the whole lifecycle below doubles as the
+    # telemetry-plane zero-recompile guard, and the hub snapshots sprinkled
+    # through it pin that host-side observation is free of compile effects
+    # (it reads returned states only - the telemetry-leaves rules)
     cl = _cluster()
     co = Coordinator(cl)
     sim = ChainSim(cl, inject_capacity=8, route_capacity=64,
                    reply_capacity=1024)
+    assert sim.telemetry
+    hub = TelemetryHub()
     state = sim.init_state()
     empty = sim.empty_injection()
 
@@ -67,6 +74,7 @@ def test_mixed_lifecycle_never_recompiles():
     co.fail_node(0, 1)
     state = co.install_roles(state)
     state = sim.tick(state, _inject_write(sim, 2, 22, 0, 0, qid=2))
+    hub.snapshot(state)
     state = sim.drain(state, 4)
     co.begin_recovery(0)
     state = co.install_roles(state)
@@ -83,6 +91,7 @@ def test_mixed_lifecycle_never_recompiles():
     state = co.complete_rebalance(state)
     assert co.partition_epoch == 1
     state = sim.drain(state, 4)
+    hub.snapshot(state)
 
     # --- cross-chain 2PC wave through the txn driver --------------------
     drv = TxnDriver(sim, TxnPlanner(cl, coordinator=co))
@@ -102,9 +111,15 @@ def test_mixed_lifecycle_never_recompiles():
         "the scanned drain recompiled across CP surgery"
     )
 
-    # sanity: the lifecycle actually did its job
+    # sanity: the lifecycle actually did its job, and the telemetry plane
+    # observed it without perturbing the jit caches (asserted above)
     assert int(state.metrics.asdict()["migration_moves"]) == 2
     assert co.chains[0].node_ids == [0, 1, 2, 3]
+    hub.snapshot(state)
+    assert len(hub.snapshots) == 3
+    assert int(hub.snapshots[-1].lat_hist.sum()) >= int(
+        hub.snapshots[0].lat_hist.sum())
+    assert hub.percentiles() is not None
 
 
 def test_wave_lifecycle_never_recompiles():
