@@ -26,6 +26,9 @@ Guarded metrics:
   run).  A same-run ratio is host-speed independent, so it gets an
   absolute ``ceilings`` entry (1.05x - the telemetry plane must stay
   within 5%) rather than a baseline multiple.
+* ``BENCH_hockey.json``: the open-loop generator's overhead ratio vs
+  dense-schedule replay (same-run A/B, absolute ceiling 1.10x) and a
+  conservative wall-clock floor on the >=1e6-op fused replay rate.
 * ``BENCH_engine.json``: us_per_query of both protocol engines.  These
   double as the same-run host-speed probe: the tick-cost tolerance is
   scaled by the (clamped) engine-metric ratio to the pinned values, so a
@@ -75,6 +78,16 @@ def collect(out_dir: str = ".") -> dict:
     # (ISSUE: telemetry-on us/tick must stay within 1.05x of compiled-out)
     metrics["latency_tail/telemetry_overhead:max"] = (
         tail["latency_tail/overhead"]["data"]["ratio"])
+    hockey = _rows(os.path.join(out_dir, "BENCH_hockey.json"))
+    # same-run A/B ratio (host-speed independent): the fused on-device
+    # generator must stay within 1.10x of dense-schedule replay
+    metrics["hockey/generator_overhead:max"] = (
+        hockey["hockey/generator_overhead"]["data"]["generator_overhead"])
+    # wall-clock floor for the >=1e6-op fused replay: conservative (~5x
+    # under the pinning host) - it guards "the headline still runs as one
+    # device program", not the host's exact speed
+    metrics["hockey/replayed_ops_per_sec:min"] = (
+        hockey["hockey/headline/replay"]["data"]["replayed_ops_per_sec"])
     engine = _rows(os.path.join(out_dir, "BENCH_engine.json"))
     for name, row in engine.items():
         metrics[f"{name}:us_per_query"] = row["data"]["us_per_query"]
@@ -183,6 +196,12 @@ def update(out_dir: str = ".") -> None:
     payload["floors"]["txn_pipeline/speedup_vs_host:min"] = 5.0
     payload["floors"]["txn_pipeline/commit_tput:min"] = 4.0
     payload["ceilings"]["latency_tail/telemetry_overhead:max"] = 1.05
+    payload["ceilings"]["hockey/generator_overhead:max"] = 1.10
+    # wall-clock metric: pin the floor well under the measured value so
+    # runner variance doesn't trip it (the ratio gate above is the tight
+    # one; this floor only catches the fused program falling off a cliff)
+    payload["floors"]["hockey/replayed_ops_per_sec:min"] = round(
+        fresh["hockey/replayed_ops_per_sec:min"] / 5.0, 2)
     with open(BASELINE, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
         f.write("\n")

@@ -89,7 +89,10 @@ def run_cluster_workload(proto: str, n_chains: int, n_nodes: int = 4, *,
     state = sim.init_state()
     wl = WorkloadConfig(ticks=ticks, queries_per_tick=q,
                         write_fraction=wf, entry_node=entry, seed=seed)
-    state = sim.run(state, make_schedule(cluster, wl), extra_ticks=4 * n_nodes)
+    # assert_drained: the figures' throughput/latency math assumes every
+    # injected op exited; a silent under-drain would shave the tail
+    state = sim.run(state, make_schedule(cluster, wl),
+                    extra_ticks=4 * n_nodes, assert_drained=True)
     return cluster, sim, state
 
 
@@ -122,6 +125,39 @@ def measure_engine_us_per_query(proto: str = "netcraq", n_nodes: int = 4,
     jax.block_until_ready(state.metrics.packets)
     dt = (time.perf_counter() - t0) / iters
     return dt * 1e6 / (batch * n_nodes)
+
+
+def tail_percentiles(state, us_per_tick: float, qs=(50, 99)):
+    """Latency percentiles with overflow-honest source selection.
+
+    Primary source is the DEVICE-side histogram (telemetry plane) - its
+    counts never overflow, so million-op tails stay honest.  The exact
+    ``ReplyLog`` percentile is the cross-check: when the log did NOT
+    overflow the two views see the same exit multiset and their log2
+    buckets must agree exactly (asserted per op class and quantile);
+    when it DID overflow (``TelemetryHub.log_overflowed`` - the log's
+    missing tail is exactly the slow exits) the exact view is withheld
+    instead of silently truncating the tail.
+
+    Returns ``(pct, exact, overflowed)``: ``pct`` / ``exact`` are
+    per-op-class dicts (``exact`` is None when the log overflowed).
+    """
+    from repro.obs import TelemetryHub
+
+    hub = TelemetryHub(us_per_tick=us_per_tick)
+    hub.snapshot(state)
+    pct = hub.percentiles(qs=qs)
+    if TelemetryHub.log_overflowed(state.replies):
+        return pct, None, True
+    exact = TelemetryHub.exact_percentiles(
+        state.replies, qs=qs, us_per_tick=us_per_tick)
+    for cname, entry in pct.items():
+        if entry is None or exact.get(cname) is None:
+            continue
+        for qn, rec in entry.items():
+            assert rec["bucket"] == exact[cname][qn]["bucket"], (
+                cname, qn, rec, exact[cname][qn])
+    return pct, exact, False
 
 
 def replies_stats(state):

@@ -1,0 +1,296 @@
+"""Open-loop hockey-stick curves: latency & goodput vs offered load.
+
+The closed-loop figures (fig3/fig4/...) replay a dense host-built
+schedule, so they can only show the engine at loads it admits.  This
+figure drives the DEVICE-RESIDENT open-loop generator
+(``core/loadgen.py`` + ``ChainSim.run_openloop``): arrivals are drawn
+on device inside the fused scan, offered load beyond lane capacity
+defers into the admission backlog (queueing delay lands in the measured
+``ticks_in_flight``), and only backlog overflow is shed
+(``Metrics.admission_drops``).  Sweeping offered load is a pure
+``LoadGenState`` leaf swap - the whole figure reuses ONE compiled
+program per engine shape (asserted via ``_openloop_scan._cache_size``).
+
+Three benchmark groups:
+
+* ``hockey/<scenario>/qps*`` - the paper-style curves, six scenarios
+  ({uniform, zipf} popularity x {read-mostly, write-heavy, txn-mix}).
+  Tail columns come from the device histograms via
+  ``tail_percentiles`` (bucket parity vs the exact log asserted - the
+  log is sized not to overflow here).  Each scenario must bend: p50 is
+  monotone up to the knee and at least one point sheds.
+* ``hockey/headline/*`` - ONE fused device program replaying >= 1e6
+  client ops (the acceptance target).  Here the reply log is sized to
+  overflow on purpose, so the percentiles exercise the
+  histogram-primary fallback path.
+* ``hockey/overhead/*`` - generator cost A/B at equal admitted load:
+  interleaved min-of-repeats of the fused generate+tick scan vs a
+  dense-schedule replay of the SAME draws (prebuilt via
+  ``materialize_stream`` + ``route_stream``).  The ratio is gated at
+  <= 1.10x by benchmarks/check_perf_regression.py; the dense arm's
+  schedule build + transfer cost is reported separately (that is the
+  wall-clock win of staying on device).
+"""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (BenchRow, tail_percentiles,
+                               tick_latency_us)
+from repro.core import (ChainConfig, ChainSim, ClusterConfig,
+                        make_loadgen, materialize_stream, route_stream,
+                        zipf_cdf)
+from repro.core import loadgen as loadgen_lib
+
+# {uniform, zipf} popularity x {read-mostly, write-heavy, txn-mix}.
+# The last field is the op class whose latency curve must bend: reads
+# spread over all n nodes, but writes (and txn ops, which ride write
+# lanes) pin to the chain head - in write-heavy mixes the head lanes
+# saturate while the read path still has headroom, so the hockey stick
+# shows up in the WRITE class first.
+SCENARIOS = (
+    ("uniform_read", "uniform", 0.10, 0.00, "read"),
+    ("uniform_write", "uniform", 0.50, 0.00, "write"),
+    ("uniform_txn", "uniform", 0.25, 0.25, "write"),
+    ("zipf_read", "zipf", 0.10, 0.00, "read"),
+    ("zipf_write", "zipf", 0.50, 0.00, "write"),
+    ("zipf_txn", "zipf", 0.25, 0.25, "write"),
+)
+
+
+def _totals(state):
+    m = state.metrics
+    return {
+        "offered": int(np.asarray(m.offered).sum()),
+        "shed": int(np.asarray(m.admission_drops).sum()),
+        "delivered": int(np.asarray(state.replies.cursor).sum()),
+    }
+
+
+def sweep_rows(loads=(4, 8, 16, 24, 32, 48), ticks: int = 96):
+    """Six hockey-stick curves over one compiled program per shape."""
+    cluster = ClusterConfig(
+        chain=ChainConfig(n_nodes=4, num_keys=32, num_versions=6),
+        n_chains=2,
+    )
+    # lane capacity = C*n*q = 32 ops/tick: the knee sits mid-sweep
+    sim = ChainSim(cluster, inject_capacity=4, route_capacity=128,
+                   reply_capacity=4096)
+    width = 64  # static arrival lanes: overload must outrun admission
+    upt = tick_latency_us(cluster.chain.header_bytes)
+    # host-side copies: the device cdf leaf rides the DONATED gen, so a
+    # shared jnp buffer would be deleted after the first sweep point
+    u_cdf = np.asarray(make_loadgen(cluster, qps=1.0).key_cdf)
+    z_cdf = np.asarray(zipf_cdf(cluster))
+    g = make_loadgen(cluster, qps=float(loads[0]), backlog_capacity=128)
+    rows = []
+    compiled_after_first = None
+    for sname, skew, wf, tf, gate_cls in SCENARIOS:
+        curve = []
+        for qps in loads:
+            # pure leaf swap - same shapes/dtypes, zero recompiles
+            g = loadgen_lib.reset(g)._replace(
+                qps=jnp.asarray(qps, jnp.float32),
+                write_fraction=jnp.asarray(wf, jnp.float32),
+                txn_fraction=jnp.asarray(tf, jnp.float32),
+                key_cdf=jnp.asarray(
+                    z_cdf if skew == "zipf" else u_cdf, jnp.float32),
+            )
+            state = sim.init_state()
+            state, g = sim.run_openloop(state, g, ticks,
+                                        arrival_width=width,
+                                        extra_ticks=32)
+            if compiled_after_first is None:
+                compiled_after_first = ChainSim._openloop_scan._cache_size()
+            pct, _, overflowed = tail_percentiles(
+                state, upt, qs=(50, 99, 99.9))
+            assert not overflowed, "sweep log is sized with headroom"
+            t = _totals(state)
+            gate = pct[gate_cls]
+            curve.append((qps, gate["p50"]["ticks"], t["shed"]))
+            data = {"qps": qps, "scenario": sname,
+                    "gate_class": gate_cls, **t}
+            for cname in ("read", "write"):
+                entry = pct[cname]
+                if entry is None:
+                    continue
+                for qn in ("p50", "p99", "p999"):
+                    data[f"{cname}_{qn}_ticks"] = entry[qn]["ticks"]
+            rows.append(BenchRow(
+                name=f"hockey/{sname}/qps{qps}",
+                us_per_call=gate["p99"]["us"],
+                derived=(f"{gate_cls}: p50={gate['p50']['ticks']}t "
+                         f"p99={gate['p99']['ticks']}t "
+                         f"p999={gate['p999']['ticks']}t "
+                         f"shed={t['shed']}"),
+                data=data,
+            ))
+        # the curve must BEND: monotone p50 up to the knee (first shed
+        # point), and the knee must exist inside the sweep
+        knee = next((i for i, (_, _, s) in enumerate(curve) if s > 0),
+                    None)
+        assert knee is not None, f"{sname}: no point sheds - raise loads"
+        p50s = [p for _, p, _ in curve[:knee + 1]]
+        assert all(a <= b for a, b in zip(p50s, p50s[1:])), (
+            f"{sname}: p50 not monotone up to the knee: {curve}")
+        rows.append(BenchRow(
+            name=f"hockey/{sname}/knee",
+            us_per_call=0.0,
+            derived=(f"first shed at qps={curve[knee][0]} "
+                     f"(capacity 32 ops/tick)"),
+            data={"knee_qps": curve[knee][0]},
+        ))
+    assert ChainSim._openloop_scan._cache_size() == compiled_after_first, (
+        "load sweep recompiled - a LoadGenState leaf went weak/static")
+    return rows
+
+
+def headline_rows(ticks: int = 2048, qps: float = 520.0):
+    """>= 1e6 client ops replayed by ONE fused device program.
+
+    The reply log is sized to overflow on purpose: million-op tails must
+    come from the device histograms (the ``log_overflowed`` fallback in
+    ``tail_percentiles``), never a truncated log."""
+    cluster = ClusterConfig(
+        chain=ChainConfig(n_nodes=4, num_keys=64, num_versions=6),
+        n_chains=8,
+    )
+    sim = ChainSim(cluster, inject_capacity=16, route_capacity=512,
+                   reply_capacity=32768)
+    width = 1024  # ~0.5 thinning probability at qps=520
+    upt = tick_latency_us(cluster.chain.header_bytes)
+    g = make_loadgen(cluster, qps=qps, write_fraction=0.1,
+                     backlog_capacity=2048)
+    state = sim.init_state()
+    # warm-up compile at the same shapes, then measure one full replay
+    state, g = sim.run_openloop(state, g, ticks, arrival_width=width,
+                                extra_ticks=64)
+    jax.block_until_ready(state.metrics.packets)
+    g = loadgen_lib.reset(g)
+    state = sim.init_state()
+    t0 = time.perf_counter()
+    state, g = sim.run_openloop(state, g, ticks, arrival_width=width,
+                                extra_ticks=64)
+    jax.block_until_ready(state.metrics.packets)
+    wall_s = time.perf_counter() - t0
+    t = _totals(state)
+    assert t["offered"] >= 1_000_000, t
+    pct, exact, overflowed = tail_percentiles(state, upt, qs=(50, 99))
+    assert overflowed and exact is None, (
+        "headline log is sized to overflow - the histogram-primary "
+        "path must engage")
+    read = pct["read"]
+    ops_per_sec = t["offered"] / wall_s
+    return [
+        BenchRow(
+            name="hockey/headline/replay",
+            us_per_call=wall_s * 1e6 / ticks,
+            derived=(f"{t['offered']:,} ops in one program "
+                     f"({ops_per_sec:,.0f} ops/s wall)"),
+            data={"ticks": ticks, "wall_s": wall_s,
+                  "replayed_ops_per_sec": ops_per_sec,
+                  "p50_ticks": read["p50"]["ticks"],
+                  "p99_ticks": read["p99"]["ticks"],
+                  "log_overflowed": overflowed, **t},
+        ),
+    ]
+
+
+@functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(1,))
+def _dense_scan(sim, state, lanes):
+    """Dense-schedule replay arm of the overhead A/B: the same fused
+    scan-of-tick, minus generation (lanes prebuilt on the host).
+    ``state`` is donated - callers rebind it."""
+    def body(st, inj):
+        return sim.tick(st, inj), None
+
+    state, _ = jax.lax.scan(body, state, lanes)
+    return state
+
+
+def overhead_rows(ticks: int = 64, repeats: int = 5):
+    """Generator cost at equal admitted load: fused open-loop scan vs
+    dense replay of the SAME draws.  Interleaved arms, min-of-repeats
+    (the fig_latency_tail overhead model)."""
+    cluster = ClusterConfig(
+        chain=ChainConfig(n_nodes=4, num_keys=64, num_versions=6),
+        n_chains=4,
+    )
+    q = 16
+    sim = ChainSim(cluster, inject_capacity=q, route_capacity=256,
+                   reply_capacity=8192)
+    width, qps = 64, 48.0  # well below the 256 ops/tick capacity:
+    backlog = 64           # both arms admit every draw
+
+    def fresh_gen():
+        return make_loadgen(cluster, qps=qps, write_fraction=0.1,
+                            backlog_capacity=backlog)
+
+    # dense arm input: materialize the same draws ONCE, route + pack on
+    # the host path; the build+transfer below is the cost the fused
+    # path never pays
+    t0 = time.perf_counter()
+    stream = materialize_stream(fresh_gen(), cluster, width, ticks)
+    lanes = route_stream(cluster, stream, q).lanes
+    jax.block_until_ready(lanes.op)
+    build_s = time.perf_counter() - t0
+
+    # warm-up compiles for both arms
+    st, g = sim.run_openloop(sim.init_state(), fresh_gen(), ticks,
+                             arrival_width=width, extra_ticks=0)
+    st = _dense_scan(sim, sim.init_state(), lanes)
+    jax.block_until_ready(st.metrics.packets)
+
+    open_s, dense_s = [], []
+    for _ in range(repeats):
+        state, g = sim.init_state(), fresh_gen()
+        jax.block_until_ready(state.metrics.packets)
+        t0 = time.perf_counter()
+        state, g = sim.run_openloop(state, g, ticks,
+                                    arrival_width=width, extra_ticks=0)
+        jax.block_until_ready(state.metrics.packets)
+        open_s.append(time.perf_counter() - t0)
+
+        state = sim.init_state()
+        jax.block_until_ready(state.metrics.packets)
+        t0 = time.perf_counter()
+        state = _dense_scan(sim, state, lanes)
+        jax.block_until_ready(state.metrics.packets)
+        dense_s.append(time.perf_counter() - t0)
+
+    open_us = min(open_s) * 1e6 / ticks
+    dense_us = min(dense_s) * 1e6 / ticks
+    ratio = open_us / dense_us
+    return [
+        BenchRow(
+            name="hockey/generator_overhead",
+            us_per_call=open_us,
+            derived=(f"{ratio:.3f}x vs dense replay "
+                     f"({open_us:.1f} vs {dense_us:.1f} us/tick)"),
+            data={"open_us_per_tick": open_us,
+                  "dense_us_per_tick": dense_us,
+                  "generator_overhead": ratio, "ticks": ticks},
+        ),
+        BenchRow(
+            name="hockey/dense_build_cost",
+            us_per_call=build_s * 1e6 / ticks,
+            derived=(f"host schedule build+transfer {build_s * 1e3:.1f} ms "
+                     f"({build_s * 1e6 / ticks:.1f} us/tick) - the fused "
+                     "path's wall-clock win"),
+            data={"build_s": build_s},
+        ),
+    ]
+
+
+def run():
+    return sweep_rows() + headline_rows() + overhead_rows()
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

@@ -13,8 +13,8 @@ from __future__ import annotations
 
 from benchmarks import (fig3_read_qps, fig4_latency, fig5_mixed,
                         fig6_scalability, fig7_multichain, fig_failover,
-                        fig_latency_tail, fig_rebalance, fig_tick_cost,
-                        fig_txn, fig_txn_pipeline)
+                        fig_hockey, fig_latency_tail, fig_rebalance,
+                        fig_tick_cost, fig_txn, fig_txn_pipeline)
 from benchmarks.common import (BenchRow, measure_engine_us_per_query,
                                write_bench_json)
 
@@ -49,6 +49,7 @@ BENCHMARKS = [
     ("txn_pipeline", fig_txn_pipeline.run),
     ("rebalance", fig_rebalance.run),
     ("tick_cost", fig_tick_cost.run),
+    ("hockey", fig_hockey.run),
 ]
 
 

@@ -11,6 +11,8 @@ Public surface:
                partition map: lock table, planner, driver, reference oracle,
                and the device-resident wave-table coordinator)
   workload   - paper-evaluation workload generators (incl. transactional)
+  loadgen    - device-resident open-loop generator (traced qps/mix/CDF
+               leaves, admission backpressure; ChainSim.run_openloop)
   metrics    - packet/hop/byte accounting and reply latency log
   telemetry  - device-side telemetry plane (latency histograms, flight-
                recorder ring, sampled packet traces); host consumer lives
@@ -76,7 +78,15 @@ from repro.core.workload import (  # noqa: F401
     RoutedStream,
     TxnWorkloadConfig,
     WorkloadConfig,
+    localize_stream,
     make_schedule,
     make_txn_workload,
+    pack_tick,
     route_stream,
+)
+from repro.core.loadgen import (  # noqa: F401
+    LoadGenState,
+    make_loadgen,
+    materialize_stream,
+    zipf_cdf,
 )

@@ -207,6 +207,43 @@ traced telemetry values inside the jitted stages
 (``if self.telemetry:`` is static - self is position 0).  The
 known-clean/known-bad pair in tests/lint_corpus/telemetry_{clean,bad}.py
 pins this coverage.
+
+Open-loop harness rules (on-device RNG as traced state)
+-------------------------------------------------------
+``ChainSim.run_openloop`` fuses workload *generation* into the donated
+scan (``core/loadgen.py``): each tick's arrivals are drawn on device
+from JAX's counter-based PRNG keyed by ``(seed, tick, lane)``, thinned
+against the traced offered-load scalar, admitted against lane capacity
+with a deferred-arrival backlog, and only then handed to ``tick``.  The
+contract extends the traced-leaf discipline to the generator:
+
+* every generator knob (``LoadGenState.qps``, op mix, key CDF, burst
+  shape) and the backlog are TRACED leaves of the scan carry - sweeping
+  offered load or swapping uniform->zipf popularity is ``_replace`` on
+  the state, never a new program.  A 20-point hockey-stick sweep
+  compiles ONCE;
+* the PRNG is counter-based and stateless: lane draws are pure
+  functions of ``(seed, t, lane)`` via ``fold_in``, never a carried
+  PRNG key threaded through host code - so any tick's arrivals can be
+  re-derived (the follow-up-COMMIT trick) and the whole stream can be
+  host-materialized (``loadgen.materialize_stream``) for the
+  bit-identical equivalence check against the ``route_stream`` path;
+* both paths localize and pack through the SAME
+  ``workload.localize_stream`` / ``workload.pack_tick`` helpers, so the
+  equivalence contract holds by construction (below saturation - see
+  ``core/loadgen.py``);
+* ``run_openloop`` donates ``state`` AND ``gen``: callers rebind both
+  (``state, gen = sim.run_openloop(state, gen, ticks)``).
+
+Machine-checked by repro-lint: a generator rate/CDF baked in as a
+Python-level constant of a jitted draw is RL002 (the compiled program
+would replay one frozen load forever - the exact bug the traced ``qps``
+leaf exists to prevent), weak python literals into ``LoadGenState`` or
+arrival ``Msg`` lanes are RL003 (the weak->strong flip recompiles the
+donated scan and silently forks the counter-based draws), and RL001
+guards the rebind-both contract at the jitted scan's call sites.  The
+known-clean/known-bad pair in tests/lint_corpus/loadgen_{clean,bad}.py
+pins this coverage.
 """
 from __future__ import annotations
 
@@ -218,6 +255,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core import craq, netchain, store as store_lib
+from repro.core import loadgen as loadgen_lib
 from repro.core import telemetry as telemetry_lib
 from repro.core import txn as txn_lib
 from repro.core.metrics import Metrics, ReplyLog
@@ -1038,6 +1076,10 @@ class ChainSim:
             wave_commits=metrics.wave_commits,
             wave_aborts=metrics.wave_aborts,
             wave_occupancy=metrics.wave_occupancy,
+            # bumped by the open-loop generator stage in ``run_openloop``
+            # (admission happens before the injection reaches the tick)
+            offered=metrics.offered,
+            admission_drops=metrics.admission_drops,
             conflict_heat=new_heat,
         )
 
@@ -1192,9 +1234,17 @@ class ChainSim:
         state, _ = jax.lax.scan(body, state, None, length=ticks)
         return state
 
-    def run(self, state: SimState, schedule: Msg, extra_ticks: int = 16) -> SimState:
+    def run(self, state: SimState, schedule: Msg, extra_ticks: int = 16,
+            assert_drained: bool = False) -> SimState:
         """schedule: [T, C, n, c_in] (or legacy [T, n, c_in]) injection per
-        tick; then drain.  ``state`` is donated (see ``tick``)."""
+        tick; then drain.  ``state`` is donated (see ``tick``).
+
+        ``assert_drained=True`` raises if any op is still in flight after
+        the ``extra_ticks`` drain (``inflight``) - throughput/latency math
+        over a run that silently stranded ops undercounts both, so
+        benchmarks opt in and size their drains to pass.  Deliberate
+        under-drains (measuring a half-full pipeline) keep the default.
+        """
         if schedule.op.ndim == 3:
             assert self.C == 1, (
                 f"schedule lacks the chain axis but cluster has C={self.C}"
@@ -1207,7 +1257,87 @@ class ChainSim:
         state, _ = jax.lax.scan(body, state, schedule)
         if extra_ticks:
             state = self.drain(state, extra_ticks)
+        if assert_drained:
+            left = self.inflight(state)
+            assert left == 0, (
+                f"{left} ops still in flight after extra_ticks="
+                f"{extra_ticks} drain - size the drain window up or the "
+                "run's throughput/latency accounting is short"
+            )
         return state
+
+    def inflight(self, state: SimState) -> int:
+        """Host-side count of ops still inside the engine: live inbox
+        slots plus (with a wave table) occupied coordinator slots and
+        buffered control replies.  Transfers only the masks it reduces -
+        the end-of-run accounting ``run(..., assert_drained=True)`` and
+        ``run_openloop(..., assert_drained=True)`` check."""
+        n = int(jnp.sum(state.inbox.op != OP_NOP))
+        if self.wave_depth:
+            n += int(jnp.sum(state.wave.phase != txn_lib.WAVE_FREE))
+            n += int(jnp.sum(state.wave.coord_in.op != OP_NOP))
+        return n
+
+    @functools.partial(jax.jit, static_argnums=(0, 3, 4, 5),
+                       donate_argnums=(1, 2))
+    def _openloop_scan(self, state: SimState, gen, ticks: int,
+                       arrival_width: int, extra_ticks: int):
+        """The fused generate+tick scan (one device program; see
+        ``run_openloop``).  ``state`` AND ``gen`` are donated - callers
+        must rebind both."""
+        def body(carry, _):
+            st, g = carry
+            inj, g, offered, shed = loadgen_lib.gen_tick(
+                g, self.cluster, arrival_width, self.c_in, st.t
+            )
+            st = st._replace(metrics=st.metrics._replace(
+                offered=st.metrics.offered + offered,
+                admission_drops=st.metrics.admission_drops + shed,
+            ))
+            st = self.tick(st, inj)
+            return (st, g), None
+
+        (state, gen), _ = jax.lax.scan(
+            body, (state, gen), None, length=ticks
+        )
+        if extra_ticks:
+            state = self.drain(state, extra_ticks)
+        return state, gen
+
+    def run_openloop(self, state: SimState, gen, ticks: int,
+                     arrival_width: int | None = None,
+                     extra_ticks: int = 16,
+                     assert_drained: bool = False):
+        """Open-loop run: ``ticks`` ticks of on-device generation + tick
+        fused into ONE donated ``lax.scan`` (then an in-program drain) -
+        no host-materialized schedule, no H2D transfer, and the offered
+        load/op-mix/popularity knobs are traced ``LoadGenState`` leaves,
+        so a whole load sweep reuses one compiled program (open-loop
+        harness rules, module docstring).
+
+        ``arrival_width`` is the static fresh-candidate lane count per
+        tick (default: one cluster's worth of injection lanes,
+        ``C * n * c_in``); the same width again carries follow-up
+        COMMITs.  Offered load beyond lane capacity defers into the
+        generator's backlog and is shed (``Metrics.admission_drops``)
+        only past backlog capacity.
+
+        Returns ``(state, gen)`` - BOTH inputs are donated, rebind both:
+        ``state, gen = sim.run_openloop(state, gen, ticks)``.
+        """
+        if arrival_width is None:
+            arrival_width = self.C * self.n * self.c_in
+        state, gen = self._openloop_scan(
+            state, gen, ticks, arrival_width, extra_ticks
+        )
+        if assert_drained:
+            left = self.inflight(state)
+            assert left == 0, (
+                f"{left} ops still in flight after extra_ticks="
+                f"{extra_ticks} drain - size the drain window up or the "
+                "run's throughput/latency accounting is short"
+            )
+        return state, gen
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,306 @@
+"""Device-resident open-loop workload generation (the load harness).
+
+Every benchmark before this module was closed-loop: the host materialized
+a dense ``[T, C, n, q]`` schedule (``make_schedule`` / ``route_stream``),
+paid the O(T) build + host-to-device transfer, and the engine could never
+express *overload* - arrivals beyond lane capacity were silently clipped
+at pack time.  This module moves generation INTO the jitted scan:
+
+* each tick's candidate arrivals are a pure function of
+  ``(seed, tick, slot)`` through JAX's counter-based threefry PRNG
+  (``fold_in(PRNGKey(seed), t)`` then per-slot uniform lanes), so the
+  same draws can be replayed on the host (``materialize_stream``) for
+  the bit-identical equivalence check, and any tick can be re-derived
+  without carrying history;
+* the offered load is a **traced** leaf (``LoadGenState.qps``), as are
+  the op mix, key-popularity CDF and burst shape - a 20-point load sweep
+  or a uniform->zipf scenario swap is pure state swapping through ONE
+  compiled ``ChainSim.run_openloop`` program, zero recompiles (the same
+  contract ``SimState`` keeps for membership and the partition map);
+* arrivals that do not fit this tick's injection lanes are NOT clipped:
+  they defer into a device-side FIFO backlog (keeping their original
+  ``t_inject``, so queueing delay lands in ``ticks_in_flight`` and the
+  latency-vs-offered-load curve bends at saturation like a real open
+  loop), and only arrivals beyond the backlog's capacity are shed -
+  counted per owning chain in ``Metrics.admission_drops``.
+
+Arrival law: each of the ``width`` fresh candidate lanes keeps with
+probability ``rate_t / width`` (Binomial(width, rate/width), the standard
+Poisson(rate) thinning approximation; exact draw-for-draw replayable),
+where ``rate_t = qps * burst_mult`` during the first ``burst_len`` ticks
+of every ``burst_period`` and ``qps`` otherwise.  Ops split
+write/txn/read by ``write_fraction`` / ``txn_fraction``; keys come from
+inverse-CDF sampling of ``key_cdf`` over the cluster's in-use GLOBAL key
+space (uniform or Zipf - swap the leaf, not the program).
+
+Transaction mix: a ``txn_fraction`` lane issues ``OP_PREPARE`` (txn id =
+its qid); the generator re-derives last tick's draws counter-based and
+issues the matching ``OP_COMMIT`` one tick later - a two-shot client with
+no host planner.  Under backpressure a deferred PREPARE's COMMIT can
+arrive first; the head safely NACKs the orphan release (``OP_TXN_REPLY``
+seq = -1) and the late PREPARE's lock is released only by a later
+conflicting cycle - modelled as client-abandoned transactions, which is
+exactly the overload pathology an open-loop harness exists to surface.
+
+Equivalence contract: at the same ``LoadGenState``, the fused
+``run_openloop`` path and the host-materialized
+``materialize_stream`` -> ``route_stream`` -> ``run`` path produce
+bit-identical stores and reply sets **provided no arrival deferred**
+(the run stayed below saturation: ``admission_drops == 0`` and the
+backlog stayed empty).  Both paths share ``localize_stream`` and
+``pack_tick`` from ``core/workload.py``, and an all-NOP backlog prefix
+cannot perturb the stable owner-sort packing, so the contract holds by
+construction - ``tests/test_loadgen.py`` pins it.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import (
+    CLIENT_BASE,
+    NOWHERE,
+    OP_COMMIT,
+    OP_PREPARE,
+    OP_READ,
+    OP_WRITE,
+    ClusterConfig,
+    Msg,
+    as_cluster,
+)
+from repro.core.workload import localize_stream, pack_tick
+
+
+def _empty_backlog(capacity: int, value_words: int) -> Msg:
+    """An all-NOP backlog whose leaves are DISTINCT buffers.
+
+    ``Msg.empty`` shares one zeros array across several fields; a pytree
+    that rides a donated scan must not alias its own leaves (XLA rejects
+    donating the same buffer twice), so copy each leaf apart."""
+    return Msg(*[jnp.array(x) for x in Msg.empty(capacity, value_words)])
+
+
+class LoadGenState(NamedTuple):
+    """Traced knobs + deferred-arrival backlog of the open-loop generator.
+
+    Every leaf is traced state of the donated ``run_openloop`` scan
+    (SimState-style): sweeping load, op mix, popularity or burst shape is
+    ``_replace`` on these leaves - never a recompile.  Scalars are
+    dtype-pinned (float32 / int32); assign with ``jnp.asarray(x, dtype)``
+    only (a weak python literal would flip the abstract value and
+    recompile - RL003, see the loadgen corpus pair).
+    """
+
+    seed: jax.Array            # [] int32 PRNG root (counter-based replay key)
+    qps: jax.Array             # [] float32 mean offered ops/tick, cluster-wide
+    write_fraction: jax.Array  # [] float32 P(op = WRITE)
+    txn_fraction: jax.Array    # [] float32 P(op = PREPARE->COMMIT pair)
+    key_cdf: jax.Array         # [G] float32 cumulative popularity over the
+                               #    in-use GLOBAL key space
+    burst_period: jax.Array    # [] int32 ticks per burst cycle
+    burst_len: jax.Array       # [] int32 leading ticks of the cycle bursting
+    burst_mult: jax.Array      # [] float32 rate multiplier inside a burst
+    backlog: Msg               # [B] deferred arrivals, GLOBAL keys, FIFO
+                               #    (original t_inject preserved - backlog
+                               #    wait is real measured latency)
+
+
+def make_loadgen(
+    cfg,
+    *,
+    qps: float,
+    write_fraction: float = 0.0,
+    txn_fraction: float = 0.0,
+    key_skew: str = "uniform",
+    zipf_a: float = 1.2,
+    seed: int = 0,
+    burst_period: int = 1,
+    burst_len: int = 0,
+    burst_mult: float = 1.0,
+    backlog_capacity: int = 256,
+) -> LoadGenState:
+    """Build a generator state for ``cfg``'s in-use global key space.
+
+    The key CDF is computed host-side ONCE; scenario sweeps reuse the
+    state via ``_replace`` (same shapes, same dtypes -> same compiled
+    program).  ``key_skew="zipf"`` ranks global keys by id with
+    ``P(g) ~ (g+1)^-zipf_a`` (the ``WorkloadConfig`` construction lifted
+    to global keys - hot keys interleave over chains under the home map).
+    """
+    cluster = as_cluster(cfg)
+    G = cluster.num_global_keys
+    if key_skew == "zipf":
+        w = np.arange(1, G + 1, dtype=np.float64) ** (-zipf_a)
+    else:
+        assert key_skew == "uniform", key_skew
+        w = np.ones((G,), dtype=np.float64)
+    cdf = np.cumsum(w / w.sum())
+    return LoadGenState(
+        seed=jnp.asarray(seed, jnp.int32),
+        qps=jnp.asarray(qps, jnp.float32),
+        write_fraction=jnp.asarray(write_fraction, jnp.float32),
+        txn_fraction=jnp.asarray(txn_fraction, jnp.float32),
+        key_cdf=jnp.asarray(cdf, jnp.float32),
+        burst_period=jnp.asarray(burst_period, jnp.int32),
+        burst_len=jnp.asarray(burst_len, jnp.int32),
+        burst_mult=jnp.asarray(burst_mult, jnp.float32),
+        backlog=_empty_backlog(backlog_capacity, cluster.chain.value_words),
+    )
+
+
+def reset(gen: LoadGenState) -> LoadGenState:
+    """Fresh (empty) backlog, identical shapes/dtypes - start the next
+    sweep point without recompiling anything."""
+    b = gen.backlog
+    return gen._replace(
+        backlog=_empty_backlog(b.op.shape[0], b.value.shape[1])
+    )
+
+
+def zipf_cdf(cfg, zipf_a: float = 1.2) -> jax.Array:
+    """The ``key_skew="zipf"`` popularity leaf alone - swap it into an
+    existing state (``gen._replace(key_cdf=zipf_cdf(cluster))``) to flip
+    scenarios mid-sweep with zero recompiles."""
+    cluster = as_cluster(cfg)
+    G = cluster.num_global_keys
+    w = np.arange(1, G + 1, dtype=np.float64) ** (-zipf_a)
+    return jnp.asarray(np.cumsum(w / w.sum()), jnp.float32)
+
+
+def draw_tick(gen: LoadGenState, width: int, value_words: int, t) -> Msg:
+    """The tick-``t`` fresh candidate lanes: a pure function of
+    ``(gen.seed, t, lane)`` - counter-based, so ``materialize_stream``
+    and the follow-up COMMIT derivation replay it exactly.
+
+    Returns a ``[width]`` ``Msg`` with GLOBAL keys; dead lanes are NOPs.
+    Lane ``i`` of tick ``t`` is live with probability ``rate_t / width``
+    and gets the cluster-unique qid ``t * 2 * width + i`` (the upper half
+    of each tick's qid block is reserved for follow-up COMMITs).
+    """
+    key = jax.random.fold_in(jax.random.PRNGKey(gen.seed), t)
+    k_thin, k_key, k_op, k_val = jax.random.split(key, 4)
+    in_burst = (t % gen.burst_period) < gen.burst_len
+    rate = gen.qps * jnp.where(in_burst, gen.burst_mult, jnp.float32(1.0))
+    p = jnp.clip(rate / jnp.float32(width), 0.0, 1.0)
+    live = jax.random.uniform(k_thin, (width,)) < p
+    G = gen.key_cdf.shape[0]
+    u_key = jax.random.uniform(k_key, (width,))
+    gkey = jnp.searchsorted(gen.key_cdf, u_key).astype(jnp.int32)
+    gkey = jnp.clip(gkey, 0, G - 1)
+    u_op = jax.random.uniform(k_op, (width,))
+    is_wr = u_op < gen.write_fraction
+    is_tx = ~is_wr & (u_op < gen.write_fraction + gen.txn_fraction)
+    vals = jax.random.randint(k_val, (width,), 1, 1 << 20, jnp.int32)
+    lane = jnp.arange(width, dtype=jnp.int32)
+    qid = t * (2 * width) + lane
+    # PREPARE lanes carry the write value in word 0 too: the head ignores
+    # it, but the re-derived follow-up COMMIT reuses it verbatim.
+    value = jnp.zeros((width, value_words), jnp.int32)
+    value = value.at[:, 0].set(jnp.where(is_wr | is_tx, vals, 0))
+    return Msg(
+        op=jnp.where(
+            is_wr, OP_WRITE, jnp.where(is_tx, OP_PREPARE, OP_READ)
+        ).astype(jnp.int32),
+        key=gkey,
+        value=value,
+        # PREPARE's seq IS the transaction id (head lock-stage contract)
+        seq=jnp.where(is_tx, qid, -1).astype(jnp.int32),
+        src=(CLIENT_BASE + qid % 1024).astype(jnp.int32),
+        dst=jnp.full((width,), NOWHERE, jnp.int32),
+        client=(CLIENT_BASE + qid % 1024).astype(jnp.int32),
+        entry=jnp.zeros((width,), jnp.int32),
+        qid=qid.astype(jnp.int32),
+        t_inject=jnp.broadcast_to(t, (width,)).astype(jnp.int32),
+        extra=jnp.zeros((width,), jnp.int32),
+        ver=jnp.zeros((width,), jnp.int32),
+    ).mask(live)
+
+
+def followup_commits(gen: LoadGenState, width: int, value_words: int,
+                     t) -> Msg:
+    """Tick ``t``'s OP_COMMITs for tick ``t-1``'s PREPAREs, re-derived
+    counter-based (no carried history): same key, same client, seq = the
+    PREPARE's qid (= txn id), value = the PREPARE's drawn write value,
+    qid = the upper half of tick ``t-1``'s qid block."""
+    prev = draw_tick(gen, width, value_words, t - 1)
+    live = (prev.op == OP_PREPARE) & (t > 0)
+    return prev._replace(
+        op=jnp.full((width,), OP_COMMIT, jnp.int32),
+        qid=prev.qid + jnp.asarray(width, jnp.int32),
+        t_inject=jnp.broadcast_to(t, (width,)).astype(jnp.int32),
+    ).mask(live)
+
+
+def _per_chain(owner, mask, n_chains: int):
+    """Count ``mask`` entries per owning chain -> [C] int32."""
+    chains = jnp.arange(n_chains, dtype=jnp.int32)
+    return jnp.sum(
+        (owner[None, :] == chains[:, None]) & mask[None, :], axis=1
+    ).astype(jnp.int32)
+
+
+def gen_tick(gen: LoadGenState, cluster: ClusterConfig, width: int,
+             queries_per_node: int, t):
+    """One tick of on-device arrival generation + admission control.
+
+    Draws this tick's fresh lanes and follow-up COMMITs, prepends the
+    deferred backlog (FIFO: oldest arrivals claim lanes first), localizes
+    and packs through the SAME helpers ``route_stream`` uses, and defers
+    whatever did not fit back into the backlog - shedding (and counting)
+    only what the backlog cannot hold.
+
+    Returns ``(injection, gen', offered, shed)``: the packed
+    ``[C, n, q]`` injection, the updated generator (rebind it - it rides
+    the donated scan carry), and per-chain [C] counts of newly offered
+    ops and admission-shed ops for ``Metrics.offered`` /
+    ``Metrics.admission_drops``.
+    """
+    vw = cluster.chain.value_words
+    C = cluster.n_chains
+    B = gen.backlog.op.shape[0]
+    fresh = draw_tick(gen, width, vw, t)
+    commits = followup_commits(gen, width, vw, t)
+    cat = lambda *xs: jnp.concatenate(xs, axis=0)
+    new = jax.tree.map(cat, fresh, commits)
+    combined: Msg = jax.tree.map(cat, gen.backlog, new)
+    localized, owner, live, _oor = localize_stream(cluster, combined)
+    injection, admitted, _dropped = pack_tick(
+        cluster, queries_per_node, localized, owner
+    )
+    # offered = NEW client ops this tick (the backlog's were counted the
+    # tick they were generated)
+    offered = _per_chain(owner[B:], live[B:], C)
+    # live arrivals that found no lane defer FIFO into the next backlog,
+    # in their original GLOBAL-key form; beyond capacity B they are shed
+    leftover = live & ~admitted
+    rank = jnp.cumsum(leftover.astype(jnp.int32)) - 1
+    shed = _per_chain(owner, leftover & (rank >= B), C)
+    order = jnp.argsort(~leftover, stable=True)  # leftovers first, FIFO
+    deferred: Msg = jax.tree.map(lambda x: x[order][:B], combined)
+    keep = jnp.arange(B, dtype=jnp.int32) < jnp.minimum(
+        jnp.sum(leftover.astype(jnp.int32)), B
+    )
+    return injection, gen._replace(backlog=deferred.mask(keep)), offered, shed
+
+
+def materialize_stream(gen: LoadGenState, cluster: ClusterConfig,
+                       width: int, ticks: int) -> Msg:
+    """Host-materializable twin of the fused generator: the flat
+    ``[T, 2 * width]`` GLOBAL-key stream ``run_openloop`` would inject at
+    the same state - feed it through ``route_stream`` + ``ChainSim.run``
+    for the bit-identical equivalence check (valid below saturation; see
+    the module docstring's equivalence contract)."""
+    cluster = as_cluster(cluster)
+    vw = cluster.chain.value_words
+
+    def one(t):
+        fresh = draw_tick(gen, width, vw, t)
+        commits = followup_commits(gen, width, vw, t)
+        return jax.tree.map(
+            lambda a, b: jnp.concatenate([a, b], axis=0), fresh, commits
+        )
+
+    return jax.vmap(one)(jnp.arange(ticks, dtype=jnp.int32))

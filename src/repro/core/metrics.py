@@ -58,6 +58,17 @@ class Metrics(NamedTuple):
     wave_aborts: jax.Array    # wave transactions completed as aborted
     wave_occupancy: jax.Array # sum over ticks of occupied wave slots - divide
                               # by ticks for mean coordinator occupancy
+    offered: jax.Array        # client ops the open-loop generator addressed
+                              # to this chain (pre-admission; includes the
+                              # ops later shed) - the denominator of every
+                              # offered-vs-served curve.  Bumped by
+                              # ``ChainSim.run_openloop``, never by the tick
+    admission_drops: jax.Array  # open-loop arrivals shed at admission: the
+                                # generator's deferred-arrival backlog was
+                                # full, so the op never entered an inbox.
+                                # Distinct from ``drops`` (in-fabric losses)
+                                # - nonzero admission_drops IS the overload
+                                # signal past the hockey-stick knee
     conflict_heat: jax.Array  # [B] per-bucket PREPARE-NACK counts (the
                               # ROADMAP item-1 telemetry hook: a raw integral
                               # the CP can EWMA-decay host-side to find hot
@@ -70,7 +81,7 @@ class Metrics(NamedTuple):
         conflict heat)."""
         z = jnp.zeros((), jnp.int32)
         return Metrics(
-            *([z] * 21),
+            *([z] * 23),
             conflict_heat=jnp.zeros((num_buckets,), jnp.int32),
         )
 
@@ -143,13 +154,23 @@ class ReplyLog(NamedTuple):
                                 #     routing - it is NOT a pure KV-pass
                                 #     counter (the old field name, `procs`,
                                 #     claimed it was).
+    lost: jax.Array      # [] int32 replies that exited but could NOT be
+                         #     logged because the log was full.  The cursor
+                         #     alone cannot distinguish "exactly full" from
+                         #     "overflowed" (it saturates at capacity), so
+                         #     this counter is the explicit overflow flag
+                         #     the percentile fallback keys on
+                         #     (``TelemetryHub.log_overflowed``): a nonzero
+                         #     ``lost`` means the log's tail is truncated
+                         #     and only the device histograms are honest.
     cursor: jax.Array    # [] int32 next free slot
 
     @staticmethod
     def empty(capacity: int) -> "ReplyLog":
         neg = jnp.full((capacity,), -1, jnp.int32)
         z = jnp.zeros((capacity,), jnp.int32)
-        return ReplyLog(neg, z, z, z, z, z, z, z, z, jnp.zeros((), jnp.int32))
+        return ReplyLog(neg, z, z, z, z, z, z, z, z,
+                        jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32))
 
     @property
     def chain_stacked(self) -> bool:
@@ -166,10 +187,12 @@ class ReplyLog(NamedTuple):
         """
         import numpy as np
 
+        n_rows = len(self._fields) - 2  # [R] record fields; lost/cursor are []
         if not self.chain_stacked:
             n = int(self.cursor)
             flat = ReplyLog(
-                *[np.asarray(f)[:n] for f in self[:-1]],
+                *[np.asarray(f)[:n] for f in self[:n_rows]],
+                lost=np.int32(self.lost),
                 cursor=np.int32(n),
             )
             return flat
@@ -182,7 +205,11 @@ class ReplyLog(NamedTuple):
                 [field[c, : cur[c]] for c in range(C)], axis=0
             )
 
-        return ReplyLog(*[cat(f) for f in self[:-1]], cursor=np.int32(cur.sum()))
+        return ReplyLog(
+            *[cat(f) for f in self[:n_rows]],
+            lost=np.int32(np.asarray(self.lost).sum()),
+            cursor=np.int32(cur.sum()),
+        )
 
     def append(self, exits, t_done, dense: bool = False) -> "ReplyLog":
         """Record exiting replies (masked Msg-like fields) into the log.
@@ -202,6 +229,9 @@ class ReplyLog(NamedTuple):
         ok = live & (slot < cap)
         tgt = jnp.where(ok, slot, cap)  # overflow scatters OOB -> dropped
         new_cursor = jnp.minimum(self.cursor + live.sum(), cap)
+        # exits that exist but found no free slot: the explicit overflow
+        # counter (see the ``lost`` field docstring)
+        new_lost = self.lost + (live.sum() - ok.sum()).astype(jnp.int32)
 
         if dense:
             def put(buf, val):
@@ -220,6 +250,7 @@ class ReplyLog(NamedTuple):
                     self.ticks_in_flight,
                     jnp.full_like(exits.qid, t_done) - exits.t_inject,
                 ),
+                lost=new_lost,
                 cursor=new_cursor,
             )
 
@@ -246,6 +277,7 @@ class ReplyLog(NamedTuple):
             ticks_in_flight=jnp.where(
                 fresh, t_done - exits.t_inject[pc], self.ticks_in_flight
             ),
+            lost=new_lost,
             cursor=new_cursor,
         )
 

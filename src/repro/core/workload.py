@@ -17,6 +17,7 @@ chain's head; reads spread over the owning chain's nodes (or target
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import NamedTuple
 
 import jax
@@ -158,6 +159,110 @@ class RoutedStream(NamedTuple):
                           #    them for served load
 
 
+def localize_stream(cluster: ClusterConfig, stream: Msg, pmap=None):
+    """Rewrite a global-key client stream to chain-local routed form.
+
+    Shared by ``route_stream`` (host-materialized schedules) and
+    ``core/loadgen.py`` (the on-device open-loop generator) so both paths
+    localize identically - the bit-identical-stores equivalence contract
+    holds by construction, not by parallel maintenance.
+
+    Shape-agnostic (elementwise over whatever batch dims ``stream``
+    carries).  Returns ``(localized, owner, live, out_of_range)``:
+    ``localized`` has ``key`` rewritten to the chain-local register index
+    and ``ver`` stamped with the map epoch; ``owner`` is the owning chain
+    per entry (``n_chains`` parks NOPs and out-of-range keys); ``live``
+    marks routable entries, ``out_of_range`` offered-but-unroutable ones.
+    """
+    offered = stream.op != OP_NOP
+    # Keys outside the global key space have no owning register anywhere;
+    # park them (downstream store indexing would silently clamp-alias).
+    in_range = (stream.key >= 0) & (stream.key < cluster.num_global_keys)
+    live = offered & in_range
+    gkey = jnp.where(live, stream.key, 0)
+    owner = jnp.where(
+        live, cluster.key_to_chain(gkey, pmap), cluster.n_chains
+    )
+    local = cluster.key_to_slot(gkey, pmap)
+    epoch = jnp.asarray(0 if pmap is None else pmap.epoch, jnp.int32)
+    localized = stream._replace(
+        key=jnp.where(live, local, 0),
+        ver=jnp.where(live, epoch, stream.ver),
+    )
+    return localized, owner, live, offered & ~in_range
+
+
+def pack_tick(
+    cluster: ClusterConfig, queries_per_node: int, msgs: Msg,
+    owner_row: jax.Array,
+):
+    """Pack one tick's flat localized queries into ``[C, n, q]`` lanes.
+
+    ``msgs`` is a flat ``[Q]`` batch already localized by
+    ``localize_stream``; ``owner_row`` its per-entry owning chain
+    (``n_chains`` = parked).  Writes and transaction ops fill the head's
+    slots from the top, reads round-robin over the chain's nodes from the
+    bottom - collision-free by construction.  Returns
+    ``(lanes, admitted, dropped)``: the packed ``[C, n, q]`` ``Msg``, the
+    ``[Q]`` bool admission mask in the CALLER's entry order (the open-loop
+    generator defers ``live & ~admitted`` entries to its backlog), and the
+    count of live entries that did not fit.
+
+    Leading NOP entries are invisible to the packing: the stable
+    owner-sort parks them last, so prepending an (all-NOP) backlog buffer
+    cannot perturb where live entries land - load-bearing for the
+    generator/materialized equivalence contract.
+    """
+    C, n, q = cluster.n_chains, cluster.n_nodes, queries_per_node
+    # Stable sort by owning chain (parked NOPs sort last as chain C).
+    order = jnp.argsort(owner_row, stable=True)
+    m: Msg = jax.tree.map(lambda x: x[order], msgs)
+    own = owner_row[order]
+    # Transaction ops (PREPARE/COMMIT/ABORT) are resolved by the owning
+    # chain's head lock stage, so they ride the write lanes.
+    is_w = (m.op == OP_WRITE) | is_txn_op(m.op)
+    is_r = m.op == OP_READ
+    # Per-chain ranks among writes / among reads: global cumsum minus
+    # the cumsum at the chain's segment start.
+    cw = jnp.cumsum(is_w.astype(jnp.int32))
+    cr = jnp.cumsum(is_r.astype(jnp.int32))
+    starts = jnp.searchsorted(own, jnp.arange(C + 1))      # [C+1]
+    pre_w = jnp.concatenate([jnp.zeros(1, jnp.int32), cw])[starts]
+    pre_r = jnp.concatenate([jnp.zeros(1, jnp.int32), cr])[starts]
+    oc = jnp.clip(own, 0, C - 1)
+    w_rank = cw - 1 - pre_w[oc]
+    r_rank = cr - 1 - pre_r[oc]
+    n_w = pre_w[oc + 1] - pre_w[oc]      # writes bound for this chain
+    # Collision-free lanes: writes fill the head's slots from the top,
+    # reads round-robin over the chain's nodes from the bottom; reads
+    # on the head stop where the write region begins.
+    node = jnp.where(is_w, 0, r_rank % n)
+    slot = jnp.where(is_w, q - 1 - w_rank, r_rank // n)
+    node0_cap = jnp.maximum(q - n_w, 0)
+    ok_w = is_w & (own < C) & (w_rank < q)
+    ok_r = is_r & (own < C) & (
+        slot < jnp.where(node == 0, node0_cap, q)
+    )
+    ok = ok_w | ok_r
+    flat_idx = jnp.where(ok, own * (n * q) + node * q + slot, C * n * q)
+
+    lanes = Msg.empty(C * n * q, cluster.chain.value_words)
+    packed = Msg(*[
+        e.at[flat_idx].set(v, mode="drop") for e, v in zip(lanes, m)
+    ])
+    lane_node = (jnp.arange(C * n * q, dtype=jnp.int32) // q) % n
+    packed = packed._replace(
+        dst=jnp.where(packed.op != OP_NOP, lane_node, NOWHERE),
+        qid=jnp.where(packed.op != OP_NOP, packed.qid, -1),
+    )
+    dropped_t = jnp.sum(m.op != OP_NOP) - jnp.sum(ok)
+    # admission mask back in the caller's entry order
+    admitted = jnp.zeros_like(ok).at[order].set(ok)
+    return jax.tree.map(
+        lambda x: x.reshape((C, n, q) + x.shape[1:]), packed
+    ), admitted, dropped_t
+
+
 def route_stream(
     cluster: ClusterConfig, stream: Msg, queries_per_node: int,
     pmap=None, live_pmap=None,
@@ -182,17 +287,13 @@ def route_stream(
     old owner, which NACK-redirects them - see the partition-epoch rules
     in ``core/chain.py``).
     """
-    T, Q = stream.op.shape
-    C, n, q = cluster.n_chains, cluster.n_nodes, queries_per_node
-    offered = stream.op != OP_NOP
-    # Keys outside the global key space have no owning register anywhere;
-    # park them (downstream store indexing would silently clamp-alias).
-    in_range = (stream.key >= 0) & (stream.key < cluster.num_global_keys)
-    live = offered & in_range
-    n_out_of_range = jnp.sum(offered & ~in_range)
+    C = cluster.n_chains
+    stream_local, owner, live, out_of_range = localize_stream(
+        cluster, stream, pmap
+    )
+    n_out_of_range = jnp.sum(out_of_range)
     gkey = jnp.where(live, stream.key, 0)
-    owner = jnp.where(live, cluster.key_to_chain(gkey, pmap), C)  # C = parked
-    local = cluster.key_to_slot(gkey, pmap)
+    local = stream_local.key
     epoch = jnp.asarray(0 if pmap is None else pmap.epoch, jnp.int32)
     if live_pmap is None:
         n_stale = jnp.zeros((), jnp.int32)
@@ -209,59 +310,10 @@ def route_stream(
         se = jnp.asarray(live_pmap.slot_epoch)[oc, lc]
         sb = jnp.asarray(live_pmap.slot_bucket)[oc, lc]
         n_stale = jnp.sum(live & ((epoch < se) | (sb < 0)))
-    stream = stream._replace(
-        key=jnp.where(live, local, 0),
-        ver=jnp.where(live, epoch, stream.ver),
-    )
 
-    def pack_tick(msgs: Msg, owner_row: jax.Array):
-        # Stable sort by owning chain (parked NOPs sort last as chain C).
-        order = jnp.argsort(owner_row, stable=True)
-        m: Msg = jax.tree.map(lambda x: x[order], msgs)
-        own = owner_row[order]
-        # Transaction ops (PREPARE/COMMIT/ABORT) are resolved by the owning
-        # chain's head lock stage, so they ride the write lanes.
-        is_w = (m.op == OP_WRITE) | is_txn_op(m.op)
-        is_r = m.op == OP_READ
-        # Per-chain ranks among writes / among reads: global cumsum minus
-        # the cumsum at the chain's segment start.
-        cw = jnp.cumsum(is_w.astype(jnp.int32))
-        cr = jnp.cumsum(is_r.astype(jnp.int32))
-        starts = jnp.searchsorted(own, jnp.arange(C + 1))      # [C+1]
-        pre_w = jnp.concatenate([jnp.zeros(1, jnp.int32), cw])[starts]
-        pre_r = jnp.concatenate([jnp.zeros(1, jnp.int32), cr])[starts]
-        oc = jnp.clip(own, 0, C - 1)
-        w_rank = cw - 1 - pre_w[oc]
-        r_rank = cr - 1 - pre_r[oc]
-        n_w = pre_w[oc + 1] - pre_w[oc]      # writes bound for this chain
-        # Collision-free lanes: writes fill the head's slots from the top,
-        # reads round-robin over the chain's nodes from the bottom; reads
-        # on the head stop where the write region begins.
-        node = jnp.where(is_w, 0, r_rank % n)
-        slot = jnp.where(is_w, q - 1 - w_rank, r_rank // n)
-        node0_cap = jnp.maximum(q - n_w, 0)
-        ok_w = is_w & (own < C) & (w_rank < q)
-        ok_r = is_r & (own < C) & (
-            slot < jnp.where(node == 0, node0_cap, q)
-        )
-        ok = ok_w | ok_r
-        flat_idx = jnp.where(ok, own * (n * q) + node * q + slot, C * n * q)
-
-        lanes = Msg.empty(C * n * q, cluster.chain.value_words)
-        packed = Msg(*[
-            e.at[flat_idx].set(v, mode="drop") for e, v in zip(lanes, m)
-        ])
-        lane_node = (jnp.arange(C * n * q, dtype=jnp.int32) // q) % n
-        packed = packed._replace(
-            dst=jnp.where(packed.op != OP_NOP, lane_node, NOWHERE),
-            qid=jnp.where(packed.op != OP_NOP, packed.qid, -1),
-        )
-        dropped_t = jnp.sum(m.op != OP_NOP) - jnp.sum(ok)
-        return jax.tree.map(
-            lambda x: x.reshape((C, n, q) + x.shape[1:]), packed
-        ), dropped_t
-
-    lanes, dropped_per_tick = jax.vmap(pack_tick)(stream, owner)
+    lanes, _, dropped_per_tick = jax.vmap(
+        functools.partial(pack_tick, cluster, queries_per_node)
+    )(stream_local, owner)
     return RoutedStream(
         lanes=lanes,
         dropped=dropped_per_tick.sum().astype(jnp.int32),

@@ -158,6 +158,17 @@ class TelemetryHub:
         return out
 
     @staticmethod
+    def log_overflowed(replies: ReplyLog) -> bool:
+        """True when the reply log dropped at least one exiting reply
+        (``ReplyLog.lost`` - the cursor alone saturates at capacity and
+        cannot tell "exactly full" from "overflowed").  When True,
+        ``exact_percentiles`` is computed over a TRUNCATED sample whose
+        missing tail is exactly the late (slow) exits - benchmarks must
+        fall back to the device histograms (``percentiles``), whose
+        counts never overflow.  Transfers only the [C] ``lost`` leaf."""
+        return int(np.asarray(replies.lost).sum()) > 0
+
+    @staticmethod
     def exact_percentiles(replies: ReplyLog, qs=DEFAULT_QS,
                           us_per_tick: float | None = None,
                           n_buckets: int = 16) -> dict:

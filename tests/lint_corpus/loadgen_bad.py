@@ -1,0 +1,58 @@
+"""Known-bad exemplar: an open-loop generator breaking the harness rules.
+
+The open-loop harness (core/chain.py module docstring, "open-loop
+harness rules") carries every generator knob - offered load, op mix,
+popularity CDF, burst shape - as *traced* ``LoadGenState`` leaves of
+the donated scan.  This twin keeps the shapes but breaks the contract
+in exactly the two ways repro-lint machine-checks: a jitted drawer
+reading a module-level rate schedule / closing over the popularity CDF
+(RL002 - the load sweep bakes the workload into the executable, so a
+sweep point either replays the stale workload or recompiles), and weak
+python literals flowing into the generator's strong float32/int32
+lanes (RL003 - the weak->strong flip recompiles the fused scan, the
+exact failure ``test_openloop_sweep_never_recompiles`` guards).
+"""
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+RATE_TABLE = jnp.ones((16,), jnp.float32)  # module-level rate schedule
+
+
+class LoadGen(NamedTuple):
+    qps: jax.Array
+    burst_len: jax.Array
+    key_cdf: jax.Array
+
+
+@jax.jit
+def arrivals(t, u):
+    # BAD (RL002): the rate schedule is baked into the executable as a
+    # constant - sweeping offered load replays the stale table
+    return u < RATE_TABLE[t % 16]
+
+
+def make_key_sampler():
+    cdf = jnp.linspace(0.0, 1.0, 16)
+
+    @jax.jit
+    def keys(u):
+        return jnp.searchsorted(cdf, u)  # BAD (RL002): closure-captured CDF
+
+    return keys
+
+
+def fresh(cdf):
+    return LoadGen(
+        qps=jnp.asarray(4.0, jnp.float32),
+        burst_len=0,  # BAD (RL003): weak literal into the int32 lane
+        key_cdf=cdf,
+    )
+
+
+def sweep_point(gen):
+    return gen._replace(
+        qps=6.0,       # BAD (RL003): weak float into the float32 lane
+        burst_len=3,   # BAD (RL003): weak int into the int32 lane
+    )

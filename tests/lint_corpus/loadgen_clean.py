@@ -1,0 +1,46 @@
+"""Clean twin: the open-loop generator under the harness rules.
+
+Same shapes as loadgen_bad.py, written the way core/loadgen.py actually
+carries its knobs: the rate schedule and popularity CDF thread through
+jitted code as *traced arguments* (never module constants or closures),
+and every generator lane is dtype-pinned at construction and at every
+sweep-point ``_replace`` (open-loop harness rules, core/chain.py).
+"""
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class LoadGen(NamedTuple):
+    qps: jax.Array
+    burst_len: jax.Array
+    key_cdf: jax.Array
+
+
+@jax.jit
+def arrivals(rate_table, t, u):
+    # the rate schedule flows in as a traced leaf - a sweep swaps state
+    return u < rate_table[t % 16]
+
+
+def make_key_sampler():
+    def keys(cdf, u):
+        return jnp.searchsorted(cdf, u)  # cdf is a traced argument
+
+    return jax.jit(keys)
+
+
+def fresh(cdf):
+    return LoadGen(
+        qps=jnp.asarray(4.0, jnp.float32),
+        burst_len=jnp.asarray(0, jnp.int32),
+        key_cdf=cdf,
+    )
+
+
+def sweep_point(gen):
+    return gen._replace(
+        qps=jnp.asarray(6.0, jnp.float32),
+        burst_len=jnp.asarray(3, jnp.int32),
+    )

@@ -106,6 +106,21 @@ def test_telemetry_exemplars_pin_the_telemetry_leaves_rules():
     assert clean.findings == [], clean.findings
 
 
+def test_loadgen_exemplars_pin_the_openloop_harness_rules():
+    """The open-loop harness contract in core/chain.py points here: the
+    bad twin bakes the workload into the executable in exactly the two
+    machine-checked ways (RL002 module-level rate schedule /
+    closure-captured popularity CDF inside jitted drawers, RL003 weak
+    literals into the generator's float32/int32 sweep lanes) and nothing
+    else fires on it; the clean twin - written the way core/loadgen.py
+    actually threads its knobs - is strict-silent."""
+    bad = _lint_corpus_file("loadgen_bad.py")
+    per_rule = bad.per_rule()
+    assert per_rule == {"RL002": 2, "RL003": 3}, bad.findings
+    clean = _lint_corpus_file("loadgen_clean.py", strict=True)
+    assert clean.findings == [], clean.findings
+
+
 # --------------------------------------------------------------------------
 # 2. pragmas
 # --------------------------------------------------------------------------

@@ -1,0 +1,203 @@
+"""Open-loop generator contracts (core/loadgen.py + ChainSim.run_openloop).
+
+Pins the three load-bearing properties of the device-resident harness:
+
+* EQUIVALENCE - below saturation, the fused generate+tick scan and the
+  host-materialized ``materialize_stream`` -> ``route_stream`` ->
+  ``run`` replay of the SAME counter-based draws produce bit-identical
+  stores and the same reply multiset (both paths share
+  ``localize_stream`` / ``pack_tick``; an all-NOP backlog prefix cannot
+  perturb the stable owner-sort packing).
+* BACKPRESSURE - offered load beyond lane capacity defers (original
+  ``t_inject`` preserved, so queueing delay is measured latency) and
+  sheds only past backlog capacity, with exact conservation:
+  offered == delivered + shed + still-deferred.
+* ACCOUNTING - ``Metrics.offered`` tracks the thinned arrival law,
+  ``ReplyLog.lost`` flags overflow instead of silently truncating the
+  tail, and ``run_openloop`` really donates BOTH carries.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (ChainConfig, ChainSim, ClusterConfig, make_loadgen,
+                        materialize_stream, route_stream)
+from repro.core import loadgen as loadgen_lib
+from repro.core.types import OP_NOP
+from repro.obs import TelemetryHub
+
+
+def _cluster(n_chains=2, n_nodes=3, num_keys=16):
+    return ClusterConfig(
+        chain=ChainConfig(n_nodes=n_nodes, num_keys=num_keys,
+                          num_versions=6),
+        n_chains=n_chains,
+    )
+
+
+def _sim(cl, q=8, reply_capacity=4096):
+    return ChainSim(cl, inject_capacity=q, route_capacity=128,
+                    reply_capacity=reply_capacity)
+
+
+def _reply_tuples(state):
+    log = state.replies.merged()
+    n = int(log.cursor)
+    cols = [np.asarray(x)[:n] for x in
+            (log.qid, log.op, log.seq, log.ticks_in_flight, log.hops)]
+    return sorted(zip(*cols))
+
+
+@pytest.mark.parametrize("key_skew,wf,tf", [
+    ("uniform", 0.25, 0.0),
+    ("zipf", 0.25, 0.2),
+])
+def test_openloop_matches_materialized_replay(key_skew, wf, tf):
+    """Bit-identical stores + identical reply multiset vs the dense
+    host path, at the same LoadGenState, below saturation (the burst
+    leaves are exercised too - both arms re-derive the same draws)."""
+    cl = _cluster()
+    width, ticks, q = 8, 20, 8
+    mk = lambda: make_loadgen(cl, qps=5.0, write_fraction=wf,
+                              txn_fraction=tf, key_skew=key_skew,
+                              seed=7, burst_period=5, burst_len=2,
+                              burst_mult=2.0, backlog_capacity=32)
+
+    sim = _sim(cl, q=q)
+    state, g = sim.run_openloop(sim.init_state(), mk(), ticks,
+                                arrival_width=width, extra_ticks=16,
+                                assert_drained=True)
+    # the contract's validity condition: the run stayed below saturation
+    assert int(np.asarray(state.metrics.admission_drops).sum()) == 0
+    assert int(np.asarray((g.backlog.op != OP_NOP).sum())) == 0
+
+    routed = route_stream(cl, materialize_stream(mk(), cl, width, ticks), q)
+    assert int(routed.dropped) == 0, "dense arm clipped - not comparable"
+    ref = _sim(cl, q=q).run(_sim(cl, q=q).init_state(), routed.lanes,
+                            extra_ticks=16, assert_drained=True)
+
+    same = jax.tree.map(lambda a, b: bool(np.array_equal(a, b)),
+                        state.stores, ref.stores)
+    assert all(jax.tree.leaves(same)), "stores diverged"
+    a, b = _reply_tuples(state), _reply_tuples(ref)
+    assert len(a) > 0 and a == b, (len(a), len(b))
+
+
+def test_backpressure_defers_then_sheds_with_exact_conservation():
+    """Writes-only overload: every admitted op exits as exactly one
+    reply, so offered == delivered + shed + still-deferred holds as an
+    integer identity; deferral shows up as measured queueing delay."""
+    cl = _cluster()
+    q = 4  # lane capacity C*n*q = 24/tick, head lanes C*q = 8/tick
+    sim = _sim(cl, q=q, reply_capacity=8192)
+    g = make_loadgen(cl, qps=20.0, write_fraction=1.0,
+                     backlog_capacity=16)
+    state, g = sim.run_openloop(sim.init_state(), g, 40,
+                                arrival_width=48, extra_ticks=24,
+                                assert_drained=True)
+    offered = int(np.asarray(state.metrics.offered).sum())
+    shed = int(np.asarray(state.metrics.admission_drops).sum())
+    deferred = int(np.asarray((g.backlog.op != OP_NOP).sum()))
+    delivered = int(np.asarray(state.replies.cursor).sum())
+    assert not TelemetryHub.log_overflowed(state.replies)
+    assert shed > 0, "overload never shed - backpressure untested"
+    assert offered == delivered + shed + deferred, (
+        offered, delivered, shed, deferred)
+    # deferred admission keeps the original t_inject: under overload the
+    # measured in-flight time includes backlog wait
+    log = state.replies.merged()
+    tif = np.asarray(log.ticks_in_flight)[:int(log.cursor)]
+    assert tif.max() > 4, "no admitted op shows queueing delay"
+
+
+def test_offered_tracks_the_arrival_law():
+    """Binomial(width, qps/width) thinning: the offered total over many
+    ticks concentrates on qps * ticks."""
+    cl = _cluster()
+    sim = _sim(cl, q=8)
+    g = make_loadgen(cl, qps=8.0, backlog_capacity=32)
+    state, g = sim.run_openloop(sim.init_state(), g, 64,
+                                arrival_width=16, extra_ticks=16)
+    offered = int(np.asarray(state.metrics.offered).sum())
+    assert 0.8 * 512 < offered < 1.2 * 512, offered
+
+
+def test_latency_grows_with_offered_load():
+    """The hockey stick in miniature: mean in-flight time under
+    overload strictly dominates the unloaded run."""
+    cl = _cluster()
+
+    def mean_tif(qps, width):
+        sim = _sim(cl, q=4, reply_capacity=8192)
+        g = make_loadgen(cl, qps=qps, write_fraction=0.5,
+                         backlog_capacity=64)
+        state, g = sim.run_openloop(sim.init_state(), g, 40,
+                                    arrival_width=width, extra_ticks=32,
+                                    assert_drained=True)
+        log = state.replies.merged()
+        return float(np.asarray(log.ticks_in_flight)[:int(log.cursor)].mean())
+
+    assert mean_tif(24.0, 48) > mean_tif(2.0, 48) + 1.0
+
+
+def test_txn_mix_commits_land():
+    """The two-shot PREPARE -> COMMIT client drives the head's lock
+    stage end to end at low load (no deferral, so no orphan commits)."""
+    cl = _cluster()
+    sim = _sim(cl, q=8)
+    g = make_loadgen(cl, qps=4.0, txn_fraction=1.0, backlog_capacity=32)
+    state, g = sim.run_openloop(sim.init_state(), g, 24,
+                                arrival_width=8, extra_ticks=16,
+                                assert_drained=True)
+    assert int(np.asarray(state.metrics.admission_drops).sum()) == 0
+    md = state.metrics.total().asdict()
+    assert md["txn_commits"] > 0, md
+
+
+def test_replylog_lost_flags_overflow():
+    """A log sized under the delivered count reports lost > 0 and trips
+    ``TelemetryHub.log_overflowed`` (histogram-primary fallback); a
+    log with headroom reports lost == 0."""
+    cl = _cluster()
+    small = _sim(cl, q=8, reply_capacity=16)
+    g = make_loadgen(cl, qps=8.0, backlog_capacity=32)
+    state, g = small.run_openloop(small.init_state(), g, 32,
+                                  arrival_width=16, extra_ticks=16)
+    assert TelemetryHub.log_overflowed(state.replies)
+    assert int(np.asarray(state.replies.lost).sum()) > 0
+    # the histogram plane still has every exit: delivered beyond the
+    # log's capacity is exactly what `lost` counts
+    delivered = int(np.asarray(state.replies.cursor).sum())
+    lost = int(np.asarray(state.replies.lost).sum())
+    hist = int(np.asarray(state.telemetry.lat_hist).sum())
+    assert hist == delivered + lost
+
+    big = _sim(cl, q=8, reply_capacity=8192)
+    g2 = make_loadgen(cl, qps=8.0, backlog_capacity=32)
+    state2, g2 = big.run_openloop(big.init_state(), g2, 32,
+                                  arrival_width=16, extra_ticks=16)
+    assert not TelemetryHub.log_overflowed(state2.replies)
+    assert int(np.asarray(state2.replies.lost).sum()) == 0
+
+
+def test_run_openloop_donates_both_carries():
+    """Rebind-both contract: after ``run_openloop`` the OLD state and
+    the OLD generator are both gone (donated into the outputs)."""
+    cl = _cluster()
+    sim = _sim(cl, q=4)
+    g = make_loadgen(cl, qps=2.0, backlog_capacity=16)
+    state = sim.init_state()
+    new_state, new_g = sim.run_openloop(state, g, 4, arrival_width=8,
+                                        extra_ticks=4)
+    with pytest.raises(RuntimeError, match="deleted|donated"):
+        np.asarray(state.stores.values)
+    with pytest.raises(RuntimeError, match="deleted|donated"):
+        np.asarray(g.qps)
+    # the outputs are intact and reusable
+    newer, _ = sim.run_openloop(new_state, new_g, 4, arrival_width=8,
+                                extra_ticks=4)
+    assert int(np.asarray(newer.metrics.offered).sum()) >= 0

@@ -18,9 +18,11 @@ import numpy as np
 import pytest
 
 import jax
+import jax.numpy as jnp
 
 from repro.core import (ChainConfig, ChainSim, ClusterConfig, Coordinator,
-                        Txn, TxnDriver, TxnPlanner)
+                        Txn, TxnDriver, TxnPlanner, make_loadgen, zipf_cdf)
+from repro.core import loadgen as loadgen_lib
 from repro.core.types import OP_WRITE, Msg, value_from_int, CLIENT_BASE, NOWHERE
 from repro.obs import TelemetryHub
 
@@ -178,6 +180,47 @@ def test_wave_lifecycle_never_recompiles():
     assert Coordinator.waves_drained(state)
     md = state.metrics.total().asdict()
     assert md["wave_commits"] == 4 and md["wave_aborts"] == 0, md
+
+
+def test_openloop_sweep_never_recompiles():
+    """The open-loop harness extends the zero-recompile contract to the
+    WORKLOAD: offered load, op mix, key popularity and burst shape are
+    traced ``LoadGenState`` leaves, so a whole load sweep - including a
+    uniform -> zipf scenario flip and a burst-shape change - reuses the
+    one compiled ``_openloop_scan`` program."""
+    cl = _cluster()
+    sim = ChainSim(cl, inject_capacity=4, route_capacity=64,
+                   reply_capacity=2048)
+    g = make_loadgen(cl, qps=2.0, backlog_capacity=32)
+    # host-side copy: the cdf leaf rides the donated scan carry, so a
+    # shared device buffer would be deleted after the first point
+    z_cdf = np.asarray(zipf_cdf(cl))
+    state = sim.init_state()
+    state, g = sim.run_openloop(state, g, 8, arrival_width=16,
+                                extra_ticks=4)
+    warm = ChainSim._openloop_scan._cache_size()
+
+    for qps, wf, tf in ((4.0, 0.0, 0.0), (10.0, 0.5, 0.0),
+                        (20.0, 0.25, 0.25)):
+        g = loadgen_lib.reset(g)._replace(
+            qps=jnp.asarray(qps, jnp.float32),
+            write_fraction=jnp.asarray(wf, jnp.float32),
+            txn_fraction=jnp.asarray(tf, jnp.float32),
+            key_cdf=jnp.asarray(z_cdf, jnp.float32),
+            burst_period=jnp.asarray(5, jnp.int32),
+            burst_len=jnp.asarray(2, jnp.int32),
+            burst_mult=jnp.asarray(3.0, jnp.float32),
+        )
+        state = sim.init_state()
+        state, g = sim.run_openloop(state, g, 8, arrival_width=16,
+                                    extra_ticks=4)
+
+    assert ChainSim._openloop_scan._cache_size() == warm, (
+        "the load sweep recompiled the fused open-loop scan - a "
+        "LoadGenState leaf went weak/static"
+    )
+    # sanity: the sweep actually injected traffic
+    assert int(np.asarray(state.metrics.offered).sum()) > 0
 
 
 def test_tick_donates_its_input_state():
