@@ -88,6 +88,14 @@ def collect(out_dir: str = ".") -> dict:
     # device program", not the host's exact speed
     metrics["hockey/replayed_ops_per_sec:min"] = (
         hockey["hockey/headline/replay"]["data"]["replayed_ops_per_sec"])
+    chaos = _rows(os.path.join(out_dir, "BENCH_chaos.json"))
+    # exact simulator counts, not wall clock: the chaos suite's drain
+    # invariant (no finite-lease cell may strand a lock) and the storm's
+    # throughput-recovery fraction (after/before, a same-run ratio)
+    metrics["chaos/leaked_locks:max"] = (
+        chaos["chaos/leaked_locks"]["data"]["leaked_locks_max"])
+    metrics["chaos/recovery_fraction:min"] = (
+        chaos["chaos/storm_recovery"]["data"]["recovery_fraction"])
     engine = _rows(os.path.join(out_dir, "BENCH_engine.json"))
     for name, row in engine.items():
         metrics[f"{name}:us_per_query"] = row["data"]["us_per_query"]
@@ -197,6 +205,13 @@ def update(out_dir: str = ".") -> None:
     payload["floors"]["txn_pipeline/commit_tput:min"] = 4.0
     payload["ceilings"]["latency_tail/telemetry_overhead:max"] = 1.05
     payload["ceilings"]["hockey/generator_overhead:max"] = 1.10
+    # drain invariant: a single leaked lock is a correctness regression,
+    # not a perf wobble - no tolerance, no host scaling
+    payload["ceilings"]["chaos/leaked_locks:max"] = 0.0
+    # the storm must recover most of its pre-failure delivery rate; the
+    # measured value sits near 1.0, the floor only catches a cluster that
+    # stays degraded after the CP spliced everything back
+    payload["floors"]["chaos/recovery_fraction:min"] = 0.5
     # wall-clock metric: pin the floor well under the measured value so
     # runner variance doesn't trip it (the ratio gate above is the tight
     # one; this floor only catches the fused program falling off a cliff)

@@ -1,0 +1,293 @@
+"""Chaos headline: lock-lease leakage sweep + disturbance matrix.
+
+The robustness figure for the lock-lease rules (core/chain.py) and the
+declarative chaos suite (core/chaos.py).  Three benchmark groups:
+
+* ``chaos/lease/*`` - abandoned-lock leakage vs ``lease_ticks``.  An
+  abandoning txn-mix workload (clients that never send their COMMIT)
+  runs the same scenario at ``LEASE_OFF`` and at finite leases:
+
+    - at OFF the leak grows with the horizon (doubling the run roughly
+      doubles the stranded locks - *unbounded*), and nothing is ever
+      reclaimed (``lease_expiries == 0``);
+    - at every finite lease the table drains to ZERO held locks
+      (bounded and recovered), with the reclaim count in
+      ``lease_expiries``;
+    - the false-expiry arm (abandon = 0, lease tighter than the 2PC
+      round trip) measures the cost of over-tight leases - live
+      transactions force-aborted, their straggler COMMITs NACKed via
+      the version counters - while the serial-reference oracle still
+      holds (an expired-then-committed write is NEVER applied).
+
+* ``chaos/matrix/*`` - the nightly sweep {uniform, zipf} x {read-mostly,
+  write-heavy, txn-mix} x {none, storm, migration, stale}: every cell
+  runs under ``run_scenario``'s full drain invariants (stores == serial
+  reference, leaked locks == 0, live replicas converged, inflight == 0).
+  ``chaos/leaked_locks`` aggregates the max leak over every finite-lease
+  cell - gated at 0 by benchmarks/check_perf_regression.py.
+
+* ``chaos/storm_recovery`` - throughput dip -> recovery through a
+  failure storm: per-segment delivered rates before / during / after
+  the storm, with the recovery fraction (after / before) gated by a
+  floor.  The whole figure - every cell, every disturbance - reuses ONE
+  compiled open-loop scan (cache sizes pinned; recompiling under chaos
+  would be its own outage).
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import BenchRow
+from repro.core import (ChainConfig, ChainSim, ClusterConfig, LEASE_OFF,
+                        failure_storm, make_loadgen, migration_wave,
+                        none_scenario, run_scenario, stale_clients,
+                        zipf_cdf)
+from repro.core import loadgen as loadgen_lib
+
+MIXES = (
+    ("read_mostly", 0.10, 0.05),
+    ("write_heavy", 0.45, 0.05),
+    ("txn_mix", 0.25, 0.25),
+)
+SKEWS = ("uniform", "zipf")
+LEASE = 16          # the matrix's lease: ~4x the 2PC round trip here
+ABANDON = 0.10      # every matrix cell has abandoning clients to survive
+SEG = 8
+TICKS = 96
+
+
+def _cluster():
+    return ClusterConfig(
+        chain=ChainConfig(n_nodes=4, num_keys=12, num_versions=6),
+        n_chains=2, buckets_per_chain=2, spare_keys=4,
+    )
+
+
+def _sim(cluster):
+    return ChainSim(cluster, inject_capacity=8, route_capacity=128,
+                    reply_capacity=16384)
+
+
+def _gen(cluster, **kw):
+    return make_loadgen(cluster, qps=6.0, seed=11, backlog_capacity=64,
+                        **kw)
+
+
+def _scenario(kind, total_ticks=TICKS):
+    if kind == "none":
+        return none_scenario(total_ticks, SEG)
+    if kind == "storm":
+        return failure_storm(2, total_ticks, SEG)
+    if kind == "migration":
+        return migration_wave([(0, 1), (3, 0)], total_ticks, SEG)
+    assert kind == "stale", kind
+    return stale_clients(1, 1, total_ticks, SEG)
+
+
+def lease_rows(sim, cluster):
+    """Leakage vs lease_ticks, plus the false-expiry cost arm."""
+    rows = []
+    leak_off = {}
+    for horizon in (64, 128):
+        g = _gen(cluster, write_fraction=0.25, txn_fraction=0.25,
+                 abandon_fraction=0.25)
+        _, _, rep = run_scenario(
+            sim, g, none_scenario(horizon, SEG),
+            lease_ticks=LEASE_OFF, check=False,
+        )
+        leak_off[horizon] = rep["leaked_locks"]
+        assert rep["metrics"]["lease_expiries"] == 0, rep["metrics"]
+        rows.append(BenchRow(
+            name=f"chaos/lease/off_t{horizon}",
+            us_per_call=0.0,
+            derived=(f"{rep['leaked_locks']} locks stranded after "
+                     f"{horizon} ticks (lease off - nothing reclaimed)"),
+            data={"lease_ticks": None, "horizon": horizon,
+                  "leaked_locks": rep["leaked_locks"],
+                  "held_trajectory": [s["held_locks"]
+                                      for s in rep["samples"]],
+                  "lease_expiries": 0},
+        ))
+    assert leak_off[64] > 0, "abandonment never stranded a lock"
+    assert leak_off[128] > leak_off[64], (
+        f"leak did not grow with the horizon: {leak_off} - the unbounded "
+        "arm of the figure is broken")
+
+    finite_leak_max = 0
+    for lease in (64, 32, 16, 8):
+        g = _gen(cluster, write_fraction=0.25, txn_fraction=0.25,
+                 abandon_fraction=0.25)
+        _, _, rep = run_scenario(
+            sim, g, none_scenario(128, SEG), lease_ticks=lease,
+        )
+        finite_leak_max = max(finite_leak_max, rep["leaked_locks"])
+        assert rep["metrics"]["lease_expiries"] > 0, (
+            f"lease={lease}: abandonment at 0.25 must trigger reclaims")
+        rows.append(BenchRow(
+            name=f"chaos/lease/t{lease}",
+            us_per_call=0.0,
+            derived=(f"0 leaked, {rep['metrics']['lease_expiries']} "
+                     f"reclaimed, serial ref over "
+                     f"{rep['serial_keys']} keys"),
+            data={"lease_ticks": lease, "horizon": 128,
+                  "leaked_locks": rep["leaked_locks"],
+                  "held_trajectory": [s["held_locks"]
+                                      for s in rep["samples"]],
+                  "lease_expiries": rep["metrics"]["lease_expiries"]},
+        ))
+
+    # false-expiry arm: NO abandonment, lease tighter than the PREPARE ->
+    # COMMIT round trip - live txns get force-expired and their straggler
+    # COMMITs NACKed, yet the serial reference must STILL hold
+    false_exp = {}
+    for lease in (2, 4):
+        g = _gen(cluster, write_fraction=0.25, txn_fraction=0.25)
+        _, _, rep = run_scenario(
+            sim, g, none_scenario(128, SEG), lease_ticks=lease,
+        )
+        false_exp[lease] = rep["metrics"]["lease_expiries"]
+        rows.append(BenchRow(
+            name=f"chaos/lease/false_expiry_t{lease}",
+            us_per_call=0.0,
+            derived=(f"{rep['metrics']['lease_expiries']} live txns "
+                     f"force-expired (no abandonment), serial ref holds "
+                     f"over {rep['serial_keys']} keys"),
+            data={"lease_ticks": lease, "abandon_fraction": 0.0,
+                  "false_expiries": rep["metrics"]["lease_expiries"],
+                  "txn_commits": rep["metrics"]["txn_commits"],
+                  "leaked_locks": rep["leaked_locks"]},
+        ))
+    assert false_exp[2] > 0, (
+        "a 2-tick lease never expired a live txn - the false-expiry arm "
+        "is not measuring anything")
+    return rows, finite_leak_max
+
+
+def matrix_rows(sim, cluster):
+    """{skew} x {mix} x {disturbance}, full invariants in every cell."""
+    u_cdf = np.asarray(make_loadgen(cluster, qps=1.0).key_cdf)
+    z_cdf = np.asarray(zipf_cdf(cluster))
+    g = _gen(cluster)
+    rows, leak_max = [], 0
+    for skew in SKEWS:
+        for mname, wf, tf in MIXES:
+            for kind in ("none", "storm", "migration", "stale"):
+                g = loadgen_lib.reset(g)._replace(
+                    qps=jnp.asarray(6.0, jnp.float32),
+                    write_fraction=jnp.asarray(wf, jnp.float32),
+                    txn_fraction=jnp.asarray(tf, jnp.float32),
+                    abandon_fraction=jnp.asarray(ABANDON, jnp.float32),
+                    key_cdf=jnp.asarray(
+                        z_cdf if skew == "zipf" else u_cdf, jnp.float32),
+                )
+                t0 = time.perf_counter()
+                _, g, rep = run_scenario(
+                    sim, g, _scenario(kind), lease_ticks=LEASE,
+                )
+                wall = time.perf_counter() - t0
+                leak_max = max(leak_max, rep["leaked_locks"])
+                m = rep["metrics"]
+                rows.append(BenchRow(
+                    name=f"chaos/matrix/{skew}_{mname}_{kind}",
+                    us_per_call=wall * 1e6,
+                    derived=(f"serial ref over {rep['serial_keys']} keys, "
+                             f"0 leaked, {m['lease_expiries']} reclaimed, "
+                             f"stale={m['stale_routes']}"),
+                    data={"skew": skew, "mix": mname, "disturbance": kind,
+                          "leaked_locks": rep["leaked_locks"],
+                          "serial_keys": rep["serial_keys"],
+                          "lease_expiries": m["lease_expiries"],
+                          "stale_routes": m["stale_routes"],
+                          "txn_commits": m["txn_commits"],
+                          "delivered": rep["samples"][-1]["replies"]},
+                ))
+                if kind in ("migration", "stale"):
+                    assert m["stale_routes"] > 0, (
+                        f"{skew}/{mname}/{kind}: the post-move generator "
+                        "never hit the stale-route gate")
+    return rows, leak_max
+
+
+def storm_recovery_rows(sim, cluster):
+    """Throughput dip -> recovery through the failure storm, with the
+    zero-recompile accounting for the whole lifecycle."""
+    g = _gen(cluster, write_fraction=0.25, txn_fraction=0.25,
+             abandon_fraction=ABANDON)
+    scenario = failure_storm(2, 192, SEG)
+    _, _, rep = run_scenario(sim, g, scenario, lease_ticks=LEASE)
+    fail_at, recover_at = scenario.events[0].tick, scenario.events[-1].tick
+
+    # per-segment delivery rates from the boundary samples (sample t
+    # includes the freeze-window settle ticks, so rates stay honest)
+    s = rep["samples"]
+    rates = {"before": [], "during": [], "after": []}
+    for a, b in zip(s, s[1:]):
+        dt = b["t"] - a["t"]
+        if dt <= 0:
+            continue
+        r = (b["replies"] - a["replies"]) / dt
+        if b["t"] <= fail_at:
+            rates["before"].append(r)
+        elif a["t"] >= recover_at:
+            rates["after"].append(r)
+        else:
+            rates["during"].append(r)
+    mean = lambda xs: sum(xs) / len(xs) if xs else 0.0
+    before, during, after = (mean(rates[k])
+                             for k in ("before", "during", "after"))
+    assert before > 0, rates
+    recovery = after / before
+    deltas = {k: a - b for k, (b, a) in rep["cache_sizes"].items()}
+    assert all(d == 0 for d in deltas.values()), (
+        f"the storm lifecycle recompiled: {rep['cache_sizes']}")
+    return [BenchRow(
+        name="chaos/storm_recovery",
+        us_per_call=0.0,
+        derived=(f"replies/tick {before:.2f} -> {during:.2f} (storm) -> "
+                 f"{after:.2f}; recovery {recovery:.2f}x, 0 recompiles"),
+        data={"rate_before": before, "rate_during": during,
+              "rate_after": after, "recovery_fraction": recovery,
+              "cache_deltas": deltas},
+    )], recovery
+
+
+def run():
+    cluster = _cluster()
+    sim = _sim(cluster)
+    # warm the one compiled scan, then pin it for the WHOLE figure
+    g = _gen(cluster)
+    _, _, rep0 = run_scenario(sim, g, none_scenario(2 * SEG, SEG),
+                              lease_ticks=LEASE)
+    warm = {k: b for k, (_, b) in rep0["cache_sizes"].items()}
+
+    rows, leak_lease = lease_rows(sim, cluster)
+    mrows, leak_matrix = matrix_rows(sim, cluster)
+    rows += mrows
+    srows, recovery = storm_recovery_rows(sim, cluster)
+    rows += srows
+
+    cold = {k: ChainSim.tick._cache_size() if k == "tick"
+            else (ChainSim.drain._cache_size() if k == "drain"
+                  else ChainSim._openloop_scan._cache_size())
+            for k in warm}
+    assert cold == warm, (
+        f"the figure recompiled after warm-up: {warm} -> {cold}")
+
+    leak_max = max(leak_lease, leak_matrix)
+    rows.append(BenchRow(
+        name="chaos/leaked_locks",
+        us_per_call=0.0,
+        derived=(f"max leaked locks over every finite-lease cell: "
+                 f"{leak_max} (gated at 0)"),
+        data={"leaked_locks_max": leak_max,
+              "recovery_fraction": recovery},
+    ))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

@@ -12,9 +12,10 @@ EXPERIMENTS.md §Benchmarks).
 from __future__ import annotations
 
 from benchmarks import (fig3_read_qps, fig4_latency, fig5_mixed,
-                        fig6_scalability, fig7_multichain, fig_failover,
-                        fig_hockey, fig_latency_tail, fig_rebalance,
-                        fig_tick_cost, fig_txn, fig_txn_pipeline)
+                        fig6_scalability, fig7_multichain, fig_chaos,
+                        fig_failover, fig_hockey, fig_latency_tail,
+                        fig_rebalance, fig_tick_cost, fig_txn,
+                        fig_txn_pipeline)
 from benchmarks.common import (BenchRow, measure_engine_us_per_query,
                                write_bench_json)
 
@@ -50,6 +51,7 @@ BENCHMARKS = [
     ("rebalance", fig_rebalance.run),
     ("tick_cost", fig_tick_cost.run),
     ("hockey", fig_hockey.run),
+    ("chaos", fig_chaos.run),
 ]
 
 

@@ -13,6 +13,9 @@ Public surface:
   workload   - paper-evaluation workload generators (incl. transactional)
   loadgen    - device-resident open-loop generator (traced qps/mix/CDF
                leaves, admission backpressure; ChainSim.run_openloop)
+  chaos      - declarative disturbance scenarios (failure storms, migration
+               waves, stale/abandoning clients) replayed as tick-indexed
+               event tables between fused open-loop segments
   metrics    - packet/hop/byte accounting and reply latency log
   telemetry  - device-side telemetry plane (latency histograms, flight-
                recorder ring, sampled packet traces); host consumer lives
@@ -44,6 +47,7 @@ from repro.core.types import (  # noqa: F401
     NOWHERE,
     TO_CLIENT,
     WAVE_BASE,
+    LEASE_OFF,
     NETCRAQ_HEADER_BYTES,
     N_OPCLASS,
     OPCLASS_NAMES,
@@ -70,9 +74,20 @@ from repro.core.txn import (  # noqa: F401
     TxnWaveDriver,
     WaveState,
     committed_view,
+    held_locks,
     locks_all_free,
     reference_execute,
     serial_order,
+    set_lease,
+)
+from repro.core.chaos import (  # noqa: F401
+    ChaosEvent,
+    ChaosScenario,
+    failure_storm,
+    migration_wave,
+    none_scenario,
+    run_scenario,
+    stale_clients,
 )
 from repro.core.workload import (  # noqa: F401
     RoutedStream,

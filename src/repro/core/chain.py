@@ -85,6 +85,47 @@ Machine-checked by repro-lint: lock words are strong-int32 lanes of
 and RL001 guards the drain loops that wait on ``locks_all_free``
 (every ``state = sim.tick(state, ...)`` rebinding is verified).
 
+Lock-lease rules (bounded reclamation of abandoned locks)
+---------------------------------------------------------
+In-network lock state has no client process to die with (the NetChain
+argument), so a lock whose holder abandons its transaction - the
+documented overload pathology in ``core/loadgen.py`` - would otherwise
+poison its key forever.  The lease discipline bounds that:
+
+* ``LockTable.lease`` is a [C, K] traced leaf stamping each grant with
+  its acquisition tick (``head_txn_stage`` writes it alongside
+  ``holder``); ``LockTable.lease_ticks`` is the [C] per-chain lease
+  length.  Both are *data*: sweeping the lease (or disabling it with
+  ``types.LEASE_OFF``) is a ``_replace`` on the state
+  (``txn.set_lease``), never a new program - at ``LEASE_OFF`` the
+  engine is bit-identical to the pre-lease one.
+* ``txn.lease_expiry_stage`` runs inside the jitted tick immediately
+  *before* the lock stage: a key held past its lease is reclaimed
+  (holder/client/lease cleared, counted in ``Metrics.lease_expiries``)
+  and its **version counter is bumped**, so a straggler COMMIT from the
+  expired holder - arriving this very tick or any later one - fails the
+  ``holder == txn_id`` release validation and is NACKed
+  (``OP_TXN_REPLY`` ``seq == -1``), never applied.  Expiry-then-locks
+  ordering is the correctness hinge: there is no tick where an expired
+  lock can still validate a release.
+* The wave coordinator is lease-aware (``txn.wave_coordinator_step``):
+  a PREP slot older than the lease can never hear its missing replies,
+  so it force-aborts (outcome code ``txn.WAVE_EXPIRED``, decoded by
+  ``TxnWaveDriver`` as ``mode == "wave_expired"``) and retires through
+  the normal all-answered path - slot qids never alias, and the
+  completion-log cursor can no longer be pinned by an abandoned slot.
+* The CP never moves lease words: recovery and rebalancing copy stores
+  plus the commit-version column only, and both already require
+  ``holder == -1`` in the touched region - a residual lease stamp on a
+  free key is inert by construction (expiry keys on ``holder != -1``).
+
+Machine-checked by repro-lint: the lease stamp and length are strong
+int32 ``LockTable`` lanes - RL003 rejects a weak python literal lease
+(the weak->strong flip would recompile the donated tick mid-sweep) and
+RL002 rejects a lease table or lease length closed over by a jitted
+stage instead of riding the traced state.  The known-clean/known-bad
+pair in tests/lint_corpus/lease_{clean,bad}.py pins this coverage.
+
 Partition-epoch rules (the rebalancing extension of the same contract)
 ----------------------------------------------------------------------
 ``SimState.pmap`` is the versioned bucket->chain ``PartitionMap`` (see
@@ -896,11 +937,17 @@ class ChainSim:
         full_inbox = lift_in(kept)
         stale_out = lift_in(stale_out)
 
+        # Lease expiry BEFORE the lock stage (lock-lease rules, module
+        # docstring): reclaim locks held past their lease and bump their
+        # version counters, so an expired holder's straggler COMMIT in
+        # this very batch already fails release validation and NACKs.
+        locks, n_expired = txn_lib.lease_expiry_stage(locks, t)
+
         # Transaction stage at the live head: PREPARE/ABORT are consumed
         # (lock edits + ACK/NACK replies), validated COMMITs pass through
         # to the node step as write-like ops.
         new_locks, full_inbox, txn_out, txn_counts = txn_lib.head_txn_stage(
-            locks, roles, stores, full_inbox,
+            locks, roles, stores, full_inbox, t=t,
             dense_rank=self.fabric == "dense",
         )
 
@@ -1080,6 +1127,7 @@ class ChainSim:
             # (admission happens before the injection reaches the tick)
             offered=metrics.offered,
             admission_drops=metrics.admission_drops,
+            lease_expiries=metrics.lease_expiries + n_expired,
             conflict_heat=new_heat,
         )
 
@@ -1131,9 +1179,12 @@ class ChainSim:
             # Runs BEFORE the chain ticks on last tick's control replies
             # (wave.coord_in): transitions slots, emits this tick's
             # PREPARE/COMMIT/ABORT sub-ops and final client replies.
+            # the per-chain lease length rides in so PREP slots older than
+            # the lease force-abort (lock-lease rules, module docstring)
             wave, sub_out, sub_target, final_out, wstats = jax.vmap(
-                txn_lib.wave_coordinator_step, in_axes=(0, 0, None)
-            )(state.wave, jnp.arange(self.C, dtype=jnp.int32), state.t)
+                txn_lib.wave_coordinator_step, in_axes=(0, 0, None, 0)
+            )(state.wave, jnp.arange(self.C, dtype=jnp.int32), state.t,
+              state.locks.lease_ticks)
             # sub-ops cross chains: one cluster-level segmented route to
             # each key's owning chain (the per-chain fabric never crosses)
             flat_sub: Msg = jax.tree.map(
@@ -1631,7 +1682,8 @@ class ChainDist:
         # partition map's slot tables (every device re-derives the same
         # transition from the all-gathered batch)
         lock_spec = LockTable(
-            holder=slot_spec, client=slot_spec, version=slot_spec
+            holder=slot_spec, client=slot_spec, version=slot_spec,
+            lease=slot_spec, lease_ticks=slot_spec,
         )
         # the telemetry shard is per-device state: every leaf shards on
         # the same (group, position) axes as the stores

@@ -1,0 +1,437 @@
+"""Declarative chaos suite - disturbances as data, replayed between fused
+open-loop segments.
+
+The robustness claim of the lock-lease rules (core/chain.py) is only worth
+anything if the cluster survives *composed* disturbances without a human in
+the loop: clients that abandon transactions mid-2PC, failure storms that
+rip nodes out and splice replacements back in, migration waves that move
+buckets under live load, and the stale clients those migrations create.
+This module makes each disturbance a plain host-side value:
+
+* ``ChaosEvent`` - one control-plane action pinned to a tick (fail a node,
+  recover it, migrate a bucket, retune the lock lease).  Events carry no
+  code, only coordinates - a scenario is a table, diffable and sweepable.
+* ``ChaosScenario`` - a named, tick-sorted event table plus the segment
+  length that discretizes the run.  Events fire on segment boundaries.
+* ``run_scenario`` - the only loop: alternate fused ``run_openloop``
+  segments (every segment the same static shape, so the whole scenario
+  reuses ONE compiled scan) with host-side ``Coordinator`` surgery at the
+  boundaries, then drain by retuning ``qps`` to zero (a traced-leaf edit)
+  and prove the drain invariants:
+
+      stores == serial reference     (reply-log join vs the counter-based
+                                      re-materialized offered stream)
+      leaked locks == 0              (under a finite lease; under
+                                      ``LEASE_OFF`` the leak is *counted*)
+      live replicas converged        (every live node agrees on slot 0)
+      inflight == 0                  (nothing stranded in the fabric)
+
+The zero-recompile contract extends to the whole lifecycle: the runner
+reports ``tick``/``drain``/``_openloop_scan`` cache sizes before and after,
+and the chaos tests pin the deltas at zero once the first cell warmed the
+caches.  Nothing in a scenario may introduce a new compiled program -
+that is precisely what makes a nightly {workload} x {disturbance} sweep
+affordable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import loadgen as loadgen_lib
+from repro.core import txn as txn_lib
+from repro.core.coordinator import Coordinator
+from repro.core.types import (LEASE_OFF, OP_NOP, OP_TXN_REPLY,
+                              OP_WRITE_REPLY, as_cluster)
+
+
+@dataclasses.dataclass(frozen=True)
+class ChaosEvent:
+    """One control-plane action at one tick.  ``kind``:
+
+    * ``"fail"``     - drop ``node`` from ``chain`` (phase-1 redirection)
+    * ``"recover"``  - freeze ``chain``, drain its locks, copy stores onto
+                       ``node`` spliced back at ``position``, unfreeze
+    * ``"migrate"``  - move ``bucket`` to ``dst_chain`` (freeze -> drain ->
+                       copy -> publish), leaving the open-loop generator a
+                       deliberately *stale* client of the moved bucket
+    * ``"lease"``    - retune the lock lease to ``lease_ticks`` (a traced
+                       leaf edit; ``LEASE_OFF`` disables expiry)
+
+    ``tick`` must land on a segment boundary (asserted by the runner) -
+    events are applied between fused segments, never inside one.
+    """
+
+    tick: int
+    kind: str
+    chain: int = -1
+    node: int = -1
+    position: int = -1
+    bucket: int = -1
+    dst_chain: int = -1
+    lease_ticks: int = -1
+
+
+@dataclasses.dataclass(frozen=True)
+class ChaosScenario:
+    """A named disturbance schedule: ``events`` over ``total_ticks`` of
+    offered load, discretized into ``segment_ticks``-tick fused segments
+    (every segment identical in static shape - the zero-recompile knob)."""
+
+    name: str
+    events: tuple = ()
+    total_ticks: int = 96
+    segment_ticks: int = 8
+
+    def __post_init__(self):
+        assert self.total_ticks % self.segment_ticks == 0, (
+            f"total_ticks={self.total_ticks} must be a whole number of "
+            f"{self.segment_ticks}-tick segments"
+        )
+        for ev in self.events:
+            assert ev.tick % self.segment_ticks == 0, (
+                f"event {ev} not on a segment boundary "
+                f"(segment_ticks={self.segment_ticks})"
+            )
+            assert 0 <= ev.tick <= self.total_ticks, ev
+        ticks = [ev.tick for ev in self.events]
+        assert ticks == sorted(ticks), "events must be tick-sorted"
+
+
+# -- scenario builders (the nightly sweep's four disturbance axes) ----------
+def none_scenario(total_ticks: int = 96, segment_ticks: int = 8):
+    """The control cell: no disturbance, same runner, same invariants."""
+    return ChaosScenario("none", (), total_ticks, segment_ticks)
+
+
+def failure_storm(n_chains: int, total_ticks: int = 96,
+                  segment_ticks: int = 8, node: int = 1):
+    """Every chain loses a middle node early and gets it spliced back at
+    its old position mid-run: redirection, freeze, copy, unfreeze - while
+    load keeps arriving.  Middle nodes only (the chain keeps head+tail,
+    so writes keep committing through the storm)."""
+    fail_at = segment_ticks * 2
+    recover_at = (total_ticks // segment_ticks // 2) * segment_ticks
+    events = tuple(
+        ChaosEvent(tick=fail_at, kind="fail", chain=c, node=node)
+        for c in range(n_chains)
+    ) + tuple(
+        ChaosEvent(tick=recover_at, kind="recover", chain=c, node=node,
+                   position=node)
+        for c in range(n_chains)
+    )
+    return ChaosScenario("failure_storm", events, total_ticks, segment_ticks)
+
+
+def migration_wave(moves, total_ticks: int = 96, segment_ticks: int = 8):
+    """A wave of bucket moves, one per boundary (the CP allows one open
+    migration at a time; the runner completes each - freeze, drain, copy,
+    publish - before the next segment).  ``moves`` is a list of
+    ``(bucket, dst_chain)``."""
+    start = segment_ticks * 2
+    events = tuple(
+        ChaosEvent(tick=start + i * segment_ticks, kind="migrate",
+                   bucket=b, dst_chain=d)
+        for i, (b, d) in enumerate(moves)
+    )
+    return ChaosScenario("migration_wave", events, total_ticks, segment_ticks)
+
+
+def stale_clients(bucket: int, dst_chain: int, total_ticks: int = 96,
+                  segment_ticks: int = 8):
+    """One early migration, then a long tail of offered load still routed
+    under the OLD map: the open-loop generator localizes by the static
+    home placement, so after the move it IS the stale client - every op it
+    aims at the moved bucket gets entry-node NACKed (``stale_routes``)
+    instead of silently reading the reset region."""
+    events = (ChaosEvent(tick=segment_ticks * 2, kind="migrate",
+                         bucket=bucket, dst_chain=dst_chain),)
+    return ChaosScenario("stale_clients", events, total_ticks, segment_ticks)
+
+
+# -- the serial-reference oracle over the open-loop stream ------------------
+def serial_reference(sim, state, gen_before, arrival_width: int,
+                     total_ticks: int) -> dict:
+    """Replay the counter-based offered stream host-side and derive the
+    expected final {global_key: value} from the run's OWN commit decisions:
+    a write is committed iff its reply (joined by qid) carries ``seq >= 0``
+    (``OP_WRITE_REPLY`` for plain writes, ``OP_TXN_REPLY`` for the 2PC
+    COMMIT at qid = PREPARE's qid + width); per key the max-seq committed
+    value wins - the store's per-key seq counter is the serialization
+    order.  An expired-then-straggling COMMIT was NACKed (``seq == -1``)
+    and correctly drops out here; an op shed at admission or stale-routed
+    never got a reply and drops out the same way."""
+    cluster = as_cluster(sim.cluster)
+    stream = loadgen_lib.materialize_stream(
+        gen_before, cluster, arrival_width, total_ticks
+    )
+    s_qid = np.asarray(stream.qid).ravel()
+    s_op = np.asarray(stream.op).ravel()
+    s_key = np.asarray(stream.key).ravel()
+    s_val = np.asarray(stream.value)[..., 0].ravel()
+    offered = {
+        int(q): (int(k), int(v))
+        for q, o, k, v in zip(s_qid, s_op, s_key, s_val)
+        if o != OP_NOP
+    }
+    log = state.replies.merged()
+    assert int(log.lost) == 0, (
+        "reply log overflowed - the oracle would miss commit decisions; "
+        "size reply_capacity up"
+    )
+    n = int(log.cursor)
+    best: dict[int, tuple[int, int]] = {}  # gkey -> (seq, value)
+    for q, o, s in zip(np.asarray(log.qid)[:n], np.asarray(log.op)[:n],
+                       np.asarray(log.seq)[:n]):
+        if int(s) < 0 or int(o) not in (OP_WRITE_REPLY, OP_TXN_REPLY):
+            continue
+        ent = offered.get(int(q))
+        assert ent is not None, (
+            f"committed reply qid={int(q)} not in the offered stream - "
+            "the counter-based replay diverged"
+        )
+        gk, val = ent
+        if gk not in best or int(s) > best[gk][0]:
+            best[gk] = (int(s), val)
+    return {gk: v for gk, (_, v) in best.items()}
+
+
+def check_serial_reference(sim, state, gen_before, arrival_width: int,
+                           total_ticks: int) -> int:
+    """Assert stores == serial reference for every in-use global key;
+    returns the number of committed-write keys checked."""
+    expected = serial_reference(sim, state, gen_before, arrival_width,
+                                total_ticks)
+    view = txn_lib.committed_view(as_cluster(sim.cluster), state)
+    for gk, got in sorted(view.items()):
+        want = expected.get(gk, 0)
+        assert got == want, (
+            f"global key {gk}: store has {got}, serial reference says "
+            f"{want} - a lost or phantom commit"
+        )
+    return len(expected)
+
+
+def check_replicas_converged(sim, state, coordinator: Coordinator) -> None:
+    """Every LIVE node of every chain agrees on the committed slot (a
+    failed-and-not-recovered node is excused - it stopped replicating the
+    moment the CP dropped it)."""
+    vals = np.asarray(state.stores.values)[:, :, :, 0, 0]  # [C, n, K]
+    for c, m in enumerate(coordinator.chains):
+        live = m.node_ids
+        ref = vals[c, live[0]]
+        for node in live[1:]:
+            assert (vals[c, node] == ref).all(), (
+                f"chain {c}: node {node} diverged from node {live[0]} "
+                f"on {int((vals[c, node] != ref).sum())} slot(s)"
+            )
+
+
+# -- the runner -------------------------------------------------------------
+def _cache_sizes(sim) -> dict:
+    return {
+        "tick": type(sim).tick._cache_size(),
+        "drain": type(sim).drain._cache_size(),
+        "openloop": type(sim)._openloop_scan._cache_size(),
+    }
+
+
+def _apply_event(sim, co: Coordinator, state, gen, ev: ChaosEvent,
+                 arrival_width: int, segment_ticks: int,
+                 max_drain_segments: int):
+    """Host-side surgery for one event; may tick extra fused segments (the
+    freeze-window drains) - returns (state, gen, extra_ticks_run)."""
+    extra = 0
+
+    def settle(state, gen, done, what):
+        """Tick same-shape segments under the published freeze until
+        ``done(state)`` - bounded, because the freeze NACKs new work.  The
+        bound is the abandonment tripwire: under ``LEASE_OFF`` an
+        abandoned lock NEVER drains and recovery would hang forever."""
+        nonlocal extra
+        for _ in range(max_drain_segments):
+            if done(state):
+                return state, gen
+            state, gen = sim.run_openloop(
+                state, gen, segment_ticks, arrival_width=arrival_width,
+                extra_ticks=0,
+            )
+            extra += segment_ticks
+        raise RuntimeError(
+            f"{what} did not quiesce within {max_drain_segments} frozen "
+            f"segments - with abandoning clients and lease_ticks == "
+            f"LEASE_OFF this is the expected hang the lock lease exists "
+            f"to prevent (lock-lease rules, core/chain.py)"
+        )
+
+    if ev.kind == "fail":
+        co.fail_node(ev.chain, ev.node)
+        state = co.install_roles(state)
+    elif ev.kind == "recover":
+        co.begin_recovery(ev.chain)
+        state = co.install_roles(state)
+        state, gen = settle(
+            state, gen, lambda s: co.locks_drained(s, ev.chain),
+            f"chain {ev.chain} lock drain before recovery copy",
+        )
+        _, stores = co.complete_recovery(
+            ev.chain, ev.node, ev.position, state.stores,
+            locks=state.locks,
+        )
+        state = co.install_roles(state._replace(stores=stores))
+    elif ev.kind == "migrate":
+        co.begin_rebalance(ev.bucket, ev.dst_chain)
+        state = co.install_roles(state)
+
+        def try_complete(s):
+            # complete_rebalance asserts all of its quiescence
+            # preconditions BEFORE mutating anything, so probing it and
+            # ticking on AssertionError is safe and reuses the CP's own
+            # (authoritative) checks instead of duplicating them here
+            try:
+                return co.complete_rebalance(s)
+            except AssertionError:
+                return None
+
+        done = try_complete(state)
+        while done is None:
+            state, gen = sim.run_openloop(
+                state, gen, segment_ticks, arrival_width=arrival_width,
+                extra_ticks=0,
+            )
+            extra += segment_ticks
+            if extra > max_drain_segments * segment_ticks:
+                raise RuntimeError(
+                    f"bucket {ev.bucket} migration did not quiesce within "
+                    f"{max_drain_segments} frozen segments - under "
+                    f"LEASE_OFF an abandoned lock on the source chain "
+                    f"blocks the copy forever (lock-lease rules, "
+                    f"core/chain.py)"
+                )
+            done = try_complete(state)
+        state = done
+    elif ev.kind == "lease":
+        state = co.set_lease(state, ev.lease_ticks)
+    else:
+        raise ValueError(f"unknown chaos event kind {ev.kind!r}")
+    return state, gen, extra
+
+
+def run_scenario(sim, gen, scenario: ChaosScenario, *,
+                 coordinator: Optional[Coordinator] = None,
+                 lease_ticks=None,
+                 arrival_width: Optional[int] = None,
+                 drain_segments: int = 24,
+                 max_drain_segments: int = 64,
+                 check: bool = True):
+    """One chaos cell, end to end: fused load segments with CP surgery at
+    the boundaries, a qps->0 traced-leaf drain, and the drain invariants.
+
+    Returns ``(state, gen, report)``.  ``report`` carries the per-boundary
+    ``samples`` (tick, held locks, cumulative replies - the lease sweep's
+    leakage trajectory), final ``metrics``, ``leaked_locks`` at drain, the
+    jit ``cache_sizes`` before/after (pin the deltas to prove zero
+    recompiles), and ``serial_keys`` (how many committed keys the oracle
+    checked).  ``check=False`` skips the invariants and only measures -
+    the ``LEASE_OFF`` leak-measurement arm of fig_chaos needs exactly
+    that (its locks are *supposed* to leak).
+    """
+    co = coordinator if coordinator is not None else Coordinator(sim.cluster)
+    if arrival_width is None:
+        arrival_width = sim.C * sim.n * sim.c_in
+    caches_before = _cache_sizes(sim)
+
+    state = sim.init_state()
+    if lease_ticks is not None:
+        state = co.set_lease(state, lease_ticks)
+    # the oracle must re-derive the exact offered stream after ``gen`` is
+    # donated away - keep an undonated copy of the (tiny) generator leaves
+    gen_before = jax.tree.map(lambda x: jnp.array(x), gen)
+
+    samples = []
+    events = list(scenario.events)
+    n_segments = scenario.total_ticks // scenario.segment_ticks
+    extra_run = 0
+    for seg in range(n_segments):
+        t_now = seg * scenario.segment_ticks
+        while events and events[0].tick <= t_now:
+            ev = events.pop(0)
+            state, gen, extra = _apply_event(
+                sim, co, state, gen, ev, arrival_width,
+                scenario.segment_ticks, max_drain_segments,
+            )
+            extra_run += extra
+        samples.append({
+            "t": int(np.asarray(state.t)[0]) if np.asarray(state.t).ndim
+            else int(state.t),
+            "held_locks": txn_lib.held_locks(state.locks),
+            "replies": int(np.asarray(state.replies.cursor).sum()),
+            "lease_expiries": int(
+                np.asarray(state.metrics.lease_expiries).sum()),
+        })
+        state, gen = sim.run_openloop(
+            state, gen, scenario.segment_ticks,
+            arrival_width=arrival_width, extra_ticks=0,
+        )
+    while events:  # boundary events pinned at exactly total_ticks
+        ev = events.pop(0)
+        state, gen, extra = _apply_event(
+            sim, co, state, gen, ev, arrival_width,
+            scenario.segment_ticks, max_drain_segments,
+        )
+        extra_run += extra
+
+    # drain through the SAME compiled segment: qps -> 0 is a traced-leaf
+    # edit, and abandoned locks age out inside the ticking engine
+    gen = gen._replace(qps=jnp.asarray(0.0, jnp.float32))
+    # under a finite lease the drain must outlive the youngest abandoned
+    # lock too - reclamation happens inside the ticking engine, so we keep
+    # ticking until the table empties (under LEASE_OFF it never will:
+    # that leak is the measurement, not a hang)
+    reclaims = bool(
+        (np.asarray(state.locks.lease_ticks) != LEASE_OFF).any())
+    drained_at = None
+    for d in range(drain_segments):
+        state, gen = sim.run_openloop(
+            state, gen, scenario.segment_ticks,
+            arrival_width=arrival_width, extra_ticks=0,
+        )
+        quiet = sim.inflight(state) == 0 and int(
+            np.asarray(state.stores.pending).sum()) == 0
+        if quiet and (not reclaims or txn_lib.held_locks(state.locks) == 0):
+            drained_at = d
+            break
+    leaked = txn_lib.held_locks(state.locks)
+    caches_after = _cache_sizes(sim)
+
+    report = {
+        "name": scenario.name,
+        "samples": samples,
+        "metrics": state.metrics.asdict(),
+        "leaked_locks": leaked,
+        "extra_ticks": extra_run,
+        "drained": drained_at is not None,
+        "cache_sizes": {k: (caches_before[k], caches_after[k])
+                        for k in caches_before},
+        "serial_keys": None,
+    }
+    if check:
+        assert drained_at is not None, (
+            f"{scenario.name}: ops still in flight after "
+            f"{drain_segments} drain segments"
+        )
+        assert leaked == 0, (
+            f"{scenario.name}: {leaked} lock(s) leaked at drain - "
+            f"abandoned transactions outlived the run (lease_ticks="
+            f"{lease_ticks}; see the lock-lease rules, core/chain.py)"
+        )
+        check_replicas_converged(sim, state, co)
+        total_ticks = scenario.total_ticks + extra_run
+        report["serial_keys"] = check_serial_reference(
+            sim, state, gen_before, arrival_width, total_ticks,
+        )
+    return state, gen, report

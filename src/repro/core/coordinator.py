@@ -205,6 +205,31 @@ class Coordinator:
             ph = ph[chain_idx]
         return bool((ph == 0).all())
 
+    @staticmethod
+    def leaked_locks(state, chain_idx: Optional[int] = None) -> int:
+        """How many locks are held right now (on ``chain_idx`` or anywhere).
+
+        The chaos suite's drain invariant: after every disturbance cell
+        drains, this must be 0 under a finite lease - an abandoned client's
+        locks are reclaimed by the lease-expiry stage (lock-lease rules,
+        core/chain.py).  Under ``LEASE_OFF`` it counts the leak instead."""
+        from repro.core.txn import held_locks
+
+        locks = state.locks
+        if chain_idx is not None:
+            locks = jax.tree.map(lambda x: x[chain_idx], locks)
+        return held_locks(locks)
+
+    @staticmethod
+    def set_lease(state, lease_ticks):
+        """Publish a new lock-lease bound into a running ``SimState`` (a
+        pure leaf edit between ticks - ``lease_ticks`` is traced data, so
+        retuning it never recompiles; see the lock-lease rules in
+        core/chain.py).  ``LEASE_OFF`` disables expiry bit-identically."""
+        from repro.core.txn import set_lease as _set
+
+        return state._replace(locks=_set(state.locks, lease_ticks))
+
     # -- data-plane role table (the DP's forwarding state) -------------------
     def roles_table(self) -> Roles:
         """[C, n] live role table reflecting current membership.

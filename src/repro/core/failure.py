@@ -35,6 +35,11 @@ class FailureDetector:
     _outstanding: dict[int, tuple[int, int]] = dataclasses.field(
         default_factory=dict
     )
+    # nodes ever addressed / ever heard from: a tracked node with NEITHER
+    # is invisible to the per-query loop in ``overdue`` (nothing was ever
+    # outstanding against it), so it needs its own silence check
+    _ever_sent: set[int] = dataclasses.field(default_factory=set)
+    _ever_heard: set[int] = dataclasses.field(default_factory=set)
     _now: int = 0
 
     def __post_init__(self):
@@ -46,6 +51,7 @@ class FailureDetector:
 
     def heard_from(self, node_id: int) -> None:
         self._last_seen[node_id] = self._now
+        self._ever_heard.add(node_id)
 
     # -- reply-timeout mode --------------------------------------------------
     # Instead of emulated heartbeats, the client derives liveness from its
@@ -58,6 +64,7 @@ class FailureDetector:
     def note_sent(self, node_id: int, qid: int) -> None:
         """Record a query issued to ``node_id`` (its ReplyLog t_inject)."""
         self._outstanding[qid] = (node_id, self._now)
+        self._ever_sent.add(node_id)
 
     def note_reply(self, qid: int) -> None:
         """A reply for ``qid`` appeared in the log (its t_done): the target
@@ -69,13 +76,25 @@ class FailureDetector:
     def overdue(self) -> list[int]:
         """Nodes with a query unanswered past ``timeout_ticks`` and no
         reply to *any* query within the window (a single dropped query on
-        an otherwise-responsive node is not a failure)."""
+        an otherwise-responsive node is not a failure).
+
+        A tracked node that was never sent to AND never heard from is
+        overdue too, once its grace window (from ``track``/init) lapses:
+        with no query ever outstanding against it the per-query loop
+        cannot see it, and a node the client's routing has black-holed
+        since birth is exactly as unresponsive as one sitting on a
+        query - the old implementation reported it healthy forever."""
         out = set()
         for node, t0 in self._outstanding.values():
             if self._now - t0 <= self.timeout_ticks:
                 continue
             last = self._last_seen.get(node)
             if last is None or self._now - last > self.timeout_ticks:
+                out.add(node)
+        for node, last in self._last_seen.items():
+            if node in self._ever_sent or node in self._ever_heard:
+                continue
+            if self._now - last > self.timeout_ticks:
                 out.add(node)
         return sorted(out)
 
@@ -88,6 +107,8 @@ class FailureDetector:
         """Stop watching a node the CP removed - it must neither linger in
         ``suspected()``/``overdue()`` nor KeyError later probes."""
         self._last_seen.pop(node_id, None)
+        self._ever_sent.discard(node_id)
+        self._ever_heard.discard(node_id)
         self._outstanding = {
             q: e for q, e in self._outstanding.items() if e[0] != node_id
         }

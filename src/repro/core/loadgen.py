@@ -41,6 +41,10 @@ arrive first; the head safely NACKs the orphan release (``OP_TXN_REPLY``
 seq = -1) and the late PREPARE's lock is released only by a later
 conflicting cycle - modelled as client-abandoned transactions, which is
 exactly the overload pathology an open-loop harness exists to surface.
+``abandon_fraction`` makes that pathology a first-class traced knob: an
+abandoning lane's COMMIT is simply never issued, so its lock leaks until
+the lock lease reclaims it (lock-lease rules in ``core/chain.py``;
+swept by ``benchmarks/fig_chaos.py``).
 
 Equivalence contract: at the same ``LoadGenState``, the fused
 ``run_openloop`` path and the host-materialized
@@ -103,6 +107,10 @@ class LoadGenState(NamedTuple):
     burst_period: jax.Array    # [] int32 ticks per burst cycle
     burst_len: jax.Array       # [] int32 leading ticks of the cycle bursting
     burst_mult: jax.Array      # [] float32 rate multiplier inside a burst
+    abandon_fraction: jax.Array  # [] float32 P(a PREPARE's client abandons:
+                               #    its follow-up COMMIT is never issued -
+                               #    the lock leaks until lease expiry; the
+                               #    chaos suite's abandonment knob)
     backlog: Msg               # [B] deferred arrivals, GLOBAL keys, FIFO
                                #    (original t_inject preserved - backlog
                                #    wait is real measured latency)
@@ -120,6 +128,7 @@ def make_loadgen(
     burst_period: int = 1,
     burst_len: int = 0,
     burst_mult: float = 1.0,
+    abandon_fraction: float = 0.0,
     backlog_capacity: int = 256,
 ) -> LoadGenState:
     """Build a generator state for ``cfg``'s in-use global key space.
@@ -147,6 +156,7 @@ def make_loadgen(
         burst_period=jnp.asarray(burst_period, jnp.int32),
         burst_len=jnp.asarray(burst_len, jnp.int32),
         burst_mult=jnp.asarray(burst_mult, jnp.float32),
+        abandon_fraction=jnp.asarray(abandon_fraction, jnp.float32),
         backlog=_empty_backlog(backlog_capacity, cluster.chain.value_words),
     )
 
@@ -224,9 +234,20 @@ def followup_commits(gen: LoadGenState, width: int, value_words: int,
     """Tick ``t``'s OP_COMMITs for tick ``t-1``'s PREPAREs, re-derived
     counter-based (no carried history): same key, same client, seq = the
     PREPARE's qid (= txn id), value = the PREPARE's drawn write value,
-    qid = the upper half of tick ``t-1``'s qid block."""
+    qid = the upper half of tick ``t-1``'s qid block.
+
+    An ``abandon_fraction`` lane (counter-based on the PREPARE's tick, so
+    materialize_stream replays it exactly) never issues its COMMIT: the
+    client abandoned the transaction and its lock leaks until the lease
+    expires - the abandonment pathology the lock-lease rules in
+    ``core/chain.py`` exist to bound.  At 0.0 this is bit-identical to
+    the pre-abandonment generator."""
     prev = draw_tick(gen, width, value_words, t - 1)
-    live = (prev.op == OP_PREPARE) & (t > 0)
+    k_ab = jax.random.fold_in(
+        jax.random.fold_in(jax.random.PRNGKey(gen.seed), t - 1), 7919
+    )
+    abandoned = jax.random.uniform(k_ab, (width,)) < gen.abandon_fraction
+    live = (prev.op == OP_PREPARE) & (t > 0) & ~abandoned
     return prev._replace(
         op=jnp.full((width,), OP_COMMIT, jnp.int32),
         qid=prev.qid + jnp.asarray(width, jnp.int32),

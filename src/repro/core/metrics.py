@@ -69,6 +69,12 @@ class Metrics(NamedTuple):
                                 # Distinct from ``drops`` (in-fabric losses)
                                 # - nonzero admission_drops IS the overload
                                 # signal past the hockey-stick knee
+    lease_expiries: jax.Array # locks reclaimed by the in-tick lease-expiry
+                              # stage (held past LockTable.lease_ticks: the
+                              # holding client abandoned the transaction, or
+                              # the lease was set too tight - the false-
+                              # expiry arm of benchmarks/fig_chaos.py).
+                              # Zero whenever lease_ticks == LEASE_OFF
     conflict_heat: jax.Array  # [B] per-bucket PREPARE-NACK counts (the
                               # ROADMAP item-1 telemetry hook: a raw integral
                               # the CP can EWMA-decay host-side to find hot
@@ -81,7 +87,7 @@ class Metrics(NamedTuple):
         conflict heat)."""
         z = jnp.zeros((), jnp.int32)
         return Metrics(
-            *([z] * 23),
+            *([z] * 24),
             conflict_heat=jnp.zeros((num_buckets,), jnp.int32),
         )
 

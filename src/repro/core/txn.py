@@ -107,6 +107,7 @@ import numpy as np
 from repro.core import store as store_lib
 from repro.core.types import (
     CLIENT_BASE,
+    LEASE_OFF,
     NOWHERE,
     OP_ABORT,
     OP_COMMIT,
@@ -142,21 +143,31 @@ class LockTable(NamedTuple):
     head's transaction stage (``head_txn_stage``).
     """
 
-    holder: jax.Array   # [K] int32 txn id holding the key's lock (-1 free)
-    client: jax.Array   # [K] int32 client that owns the intent (-1 free)
-    version: jax.Array  # [K] int32 committed-txn counter - the snapshot
-                        #     coordinate PREPARE_ACK hands to multi-key reads
+    holder: jax.Array       # [K] int32 txn id holding the key's lock (-1 free)
+    client: jax.Array       # [K] int32 client that owns the intent (-1 free)
+    version: jax.Array      # [K] int32 committed-txn counter - the snapshot
+                            #     coordinate PREPARE_ACK hands to multi-key
+                            #     reads
+    lease: jax.Array        # [K] int32 acquisition-tick stamp (-1 free) -
+                            #     the lease clock lease_expiry_stage reclaims
+                            #     against
+    lease_ticks: jax.Array  # [] int32 lease length; LEASE_OFF disables
+                            #     expiry (bit-identical to the pre-lease
+                            #     engine)
 
     @staticmethod
-    def empty(num_keys: int) -> "LockTable":
+    def empty(num_keys: int, lease_ticks: int = LEASE_OFF) -> "LockTable":
         neg = jnp.full((num_keys,), -1, jnp.int32)
         return LockTable(
-            holder=neg, client=neg, version=jnp.zeros((num_keys,), jnp.int32)
+            holder=neg, client=neg,
+            version=jnp.zeros((num_keys,), jnp.int32),
+            lease=neg,
+            lease_ticks=jnp.asarray(lease_ticks, jnp.int32),
         )
 
 
-def init_locks(cfg: ChainConfig) -> LockTable:
-    return LockTable.empty(cfg.num_keys)
+def init_locks(cfg: ChainConfig, lease_ticks: int = LEASE_OFF) -> LockTable:
+    return LockTable.empty(cfg.num_keys, lease_ticks=lease_ticks)
 
 
 def locks_all_free(locks: LockTable) -> bool:
@@ -165,12 +176,63 @@ def locks_all_free(locks: LockTable) -> bool:
     return bool((np.asarray(locks.holder) == -1).all())
 
 
+def held_locks(locks: LockTable) -> int:
+    """Host-side count of currently held locks (works on [K] and [C, K]
+    tables) - the chaos suite's leaked-lock probe at drain."""
+    return int((np.asarray(locks.holder) != -1).sum())
+
+
+def set_lease(locks: LockTable, lease_ticks) -> LockTable:
+    """Swap the lease length on a live lock table - a traced-leaf edit, so
+    the donated tick never recompiles.  Works on the engine's vmapped
+    [C]-leaf table (broadcasts a scalar over C) and on a single chain's."""
+    new = jnp.broadcast_to(
+        jnp.asarray(lease_ticks, jnp.int32), locks.lease_ticks.shape
+    )
+    return locks._replace(lease_ticks=new)
+
+
+def lease_expiry_stage(locks: LockTable, t):
+    """Reclaim locks held past their lease - runs inside the jitted tick,
+    immediately *before* ``head_txn_stage`` (see the lock-lease rules in
+    ``core/chain.py``).
+
+    A key is expired when it is held and ``t - lease >= lease_ticks``.
+    Reclamation clears holder/client/lease and *bumps the version counter*,
+    so a straggler COMMIT from the expired transaction fails the
+    ``holder == txn_id`` release validation in the same tick's lock stage
+    (expiry runs first) and is NACKed with ``OP_TXN_REPLY`` ``seq == -1`` -
+    never applied.  At ``lease_ticks == LEASE_OFF`` the predicate is never
+    true and the stage is the identity (bit-identical to the pre-lease
+    engine).
+
+    Returns ``(locks', n_expired int32)`` - the count feeds
+    ``Metrics.lease_expiries``.
+    """
+    held = locks.holder != -1
+    age = t - locks.lease
+    expired = held & (age >= locks.lease_ticks)
+    neg = jnp.asarray(-1, jnp.int32)
+    return LockTable(
+        holder=jnp.where(expired, neg, locks.holder),
+        client=jnp.where(expired, neg, locks.client),
+        version=locks.version + expired.astype(jnp.int32),
+        lease=jnp.where(expired, neg, locks.lease),
+        lease_ticks=locks.lease_ticks,
+    ), expired.sum().astype(jnp.int32)
+
+
 # ---------------------------------------------------------------------------
 # The head's transaction stage (runs inside _chain_tick, before node_step)
 # ---------------------------------------------------------------------------
 def head_txn_stage(locks: LockTable, roles: Roles, stores, inbox: Msg,
-                   dense_rank: bool = False):
+                   t=None, dense_rank: bool = False):
     """Process this tick's client transaction ops at the chain's live head.
+
+    ``t`` is the engine tick: every granted lock is stamped with it in
+    ``locks.lease`` so ``lease_expiry_stage`` can reclaim abandoned locks.
+    ``None`` (the ``ChainDist`` path, which carries no lease clock yet)
+    stamps 0 - inert while ``lease_ticks == LEASE_OFF``.
 
     ``dense_rank`` selects the O(B^2) same-key ranking of the pre-segmented
     engine (the ``fabric="dense"`` benchmark baseline; B here is the whole
@@ -191,6 +253,7 @@ def head_txn_stage(locks: LockTable, roles: Roles, stores, inbox: Msg,
     n, cap = inbox.op.shape
     K = locks.holder.shape[0]
     W = stores.values.shape[-1]
+    t_now = jnp.asarray(0 if t is None else t, jnp.int32)
     flat: Msg = jax.tree.map(
         lambda x: x.reshape((n * cap,) + x.shape[2:]), inbox
     )
@@ -221,6 +284,7 @@ def head_txn_stage(locks: LockTable, roles: Roles, stores, inbox: Msg,
     rel_key = jnp.where(valid_rel, k, K)
     holder = locks.holder.at[rel_key].set(-1, mode="drop")
     client = locks.client.at[rel_key].set(-1, mode="drop")
+    lease = locks.lease.at[rel_key].set(-1, mode="drop")
     com_key = jnp.where(com_ok, k, K)
     version = locks.version.at[com_key].add(1, mode="drop")
 
@@ -234,6 +298,7 @@ def head_txn_stage(locks: LockTable, roles: Roles, stores, inbox: Msg,
     g_key = jnp.where(grant, k, K)
     holder = holder.at[g_key].set(txn_id, mode="drop")
     client = client.at[g_key].set(flat.client, mode="drop")
+    lease = lease.at[g_key].set(t_now, mode="drop")
     nack = is_prep & ~grant
 
     # ---- snapshot read for PREPARE_ACK: the head's latest version,
@@ -286,7 +351,8 @@ def head_txn_stage(locks: LockTable, roles: Roles, stores, inbox: Msg,
         nack.sum().astype(jnp.int32),
     )
     return (
-        LockTable(holder=holder, client=client, version=version),
+        LockTable(holder=holder, client=client, version=version,
+                  lease=lease, lease_ticks=locks.lease_ticks),
         lift(passed),
         lift(replies),
         counts,
@@ -305,6 +371,13 @@ WAVE_FREE = 0       # unoccupied - admissible
 WAVE_ADMITTED = 1   # host filled the slot; PREPAREs go out next tick
 WAVE_PREP = 2       # phase 1 in flight - awaiting every participant's reply
 WAVE_FIN = 3        # phase 2 in flight - awaiting every release's ack
+
+# Completion-log outcome codes (``log_committed`` column / ``committing``
+# while a slot is in FIN): 0 = aborted, 1 = committed, 2 = lease-expired
+# force-abort (the slot's phase 1 outlived ``lease_ticks``; see
+# wave_coordinator_step).  ``TxnWaveDriver`` decodes 2 as ``mode ==
+# "wave_expired"`` so overload abandonment is observable, not a wedge.
+WAVE_EXPIRED = 2
 
 
 class WaveState(NamedTuple):
@@ -373,7 +446,8 @@ class WaveState(NamedTuple):
         )
 
 
-def wave_coordinator_step(wave: WaveState, chain_idx, t):
+def wave_coordinator_step(wave: WaveState, chain_idx, t,
+                          lease_ticks=LEASE_OFF):
     """One tick of one chain's device-resident 2PC coordinator.
 
     Runs inside the jitted tick, *before* the chain stage, vmapped over
@@ -403,6 +477,18 @@ def wave_coordinator_step(wave: WaveState, chain_idx, t):
     refuses a release it does not hold (rel_bad), so the extra ABORT is
     free, and deciding early on the first NACK could otherwise race our
     own still-in-flight PREPARE and leak its lock forever.
+
+    Lease interop: a PREP slot whose sub-ops have outlived ``lease_ticks``
+    (``t - t_admit >= lease_ticks`` - locks were granted *after* admission,
+    so every lock the slot could hold has expired by then) is **force-
+    aborted**: its missing replies are synthesized, it enters FIN with
+    ``committing == WAVE_EXPIRED`` and emits ABORTs for every participant.
+    The heads no longer hold its locks (expiry reclaimed them), so the
+    ABORTs come back as rel_bad TXN_REPLYs and the slot retires through
+    the normal all-done path - qids never alias, and the straggler's locks
+    can never be re-validated because expiry bumped the version counters.
+    A slot already in FIN is never forced: its COMMIT/ABORTs were emitted
+    at age < lease_ticks and land before any of its locks can expire.
     """
     W, KT = wave.p_gkey.shape
     VW = wave.coord_in.value.shape[-1]
@@ -448,17 +534,30 @@ def wave_coordinator_step(wave: WaveState, chain_idx, t):
     used = wave.p_gkey >= 0                              # [W, KT]
     occupancy = (wave.phase != WAVE_FREE).sum().astype(i32)
     admitted = wave.phase == WAVE_ADMITTED
+    # lease force-abort: a PREP slot past the lease can never hear its
+    # missing replies (the heads reclaimed its locks) - synthesize them so
+    # the slot decides NOW, as an abort, and retires through phase 2
+    forced = (wave.phase == WAVE_PREP) & (
+        (jnp.asarray(t, i32) - wave.t_admit)
+        >= jnp.asarray(lease_ticks, i32)
+    )
+    p_replied = jnp.where(
+        forced[:, None], jnp.maximum(p_replied, used.astype(i32)), p_replied
+    )
     prep_all = (wave.phase == WAVE_PREP) & jnp.all(
         (p_replied > 0) | ~used, axis=1
     )
     all_ack = jnp.all((p_acked > 0) | ~used, axis=1)
     enter_fin = prep_all
-    decide_commit = enter_fin & all_ack
+    decide_commit = enter_fin & all_ack & ~forced
     committing = jnp.where(
-        enter_fin, decide_commit.astype(i32), wave.committing
+        enter_fin,
+        jnp.where(forced, jnp.asarray(WAVE_EXPIRED, i32),
+                  decide_commit.astype(i32)),
+        wave.committing,
     )
     fin_all = (wave.phase == WAVE_FIN) & jnp.all((p_done > 0) | ~used, axis=1)
-    committed = wave.committing > 0                      # valid on FIN slots
+    committed = wave.committing == 1                     # valid on FIN slots
     phase = jnp.where(
         admitted, WAVE_PREP,
         jnp.where(enter_fin, WAVE_FIN,
@@ -531,7 +630,8 @@ def wave_coordinator_step(wave: WaveState, chain_idx, t):
         p_replied=p_replied, p_acked=p_acked, p_done=p_done,
         p_snap=p_snap, p_wseq=p_wseq,
         log_txn=put(wave.log_txn, wave.txn_id),
-        log_committed=put(wave.log_committed, committed.astype(i32)),
+        # the outcome code verbatim (0 abort / 1 commit / 2 lease-expired)
+        log_committed=put(wave.log_committed, wave.committing),
         log_t_admit=put(wave.log_t_admit, wave.t_admit),
         log_t_done=put(wave.log_t_done,
                        jnp.broadcast_to(jnp.asarray(t, i32), (W,))),
@@ -575,7 +675,9 @@ class Txn:
 class TxnResult:
     txn_id: int
     committed: bool
-    mode: str                      # "direct" (single-chain) | "2pc"
+    mode: str                      # "direct" (single-chain) | "2pc" |
+                                   # "wave" | "wave_expired" (lease-expired
+                                   # force-abort: slot recycled, txn aborted)
     nacks: int = 0                 # prepare NACKs observed (2pc only)
     write_seqs: dict = dataclasses.field(default_factory=dict)  # gkey -> seq
     read_values: dict = dataclasses.field(default_factory=dict)  # gkey -> v0
@@ -1003,10 +1105,13 @@ class TxnWaveDriver:
         results = []
         for c in range(w.log_txn.shape[0]):
             for r in range(int(base[c]), int(w.log_cursor[c])):
-                committed = bool(w.log_committed[c, r])
+                outcome = int(w.log_committed[c, r])
+                committed = outcome == 1
                 res = TxnResult(
                     txn_id=int(w.log_txn[c, r]),
-                    committed=committed, mode="wave",
+                    committed=committed,
+                    mode="wave_expired" if outcome == WAVE_EXPIRED
+                    else "wave",
                 )
                 if committed:
                     for gk, iw, ws, sn in zip(

@@ -135,6 +135,13 @@ CLIENT_BASE = 1 << 20
 # are routed back to their coordinator chain instead of the reply log.
 WAVE_BASE = 1 << 22
 
+# Lock-lease "disabled" sentinel (see the lock-lease rules in core/chain.py):
+# a LockTable whose lease_ticks leaf equals LEASE_OFF never expires a lock -
+# int32 max keeps `t - lease >= lease_ticks` unreachable for any simulated
+# tick count, so the expiry stage is branch-free AND bit-identical to the
+# pre-lease engine when leases are off.  A *data* switch, not a recompile.
+LEASE_OFF = (1 << 31) - 1
+
 # dst == NOWHERE means "message exits the system / empty slot".
 NOWHERE = -1
 # dst == MULTICAST: the P4 PRE analogue - router fans the packet out to every

@@ -212,13 +212,37 @@ class TelemetryHub:
             older, newer = self.snapshots[-2], self.snapshots[-1]
         dt = max(newer.t - older.t, 1)
         keys = ("replies", "packets", "drops", "lock_conflicts",
-                "stale_routes", "write_nacks")
+                "stale_routes", "write_nacks", "lease_expiries")
         return {
             k: float(
                 (getattr(newer.metrics, k).sum()
                  - getattr(older.metrics, k).sum()) / dt
             )
             for k in keys
+        }
+
+    # -- locks ------------------------------------------------------------
+    @staticmethod
+    def lock_health(state) -> dict:
+        """Cheap host probe of lock-table abandonment health: how many
+        locks are held right now, the age of the oldest (the distance to
+        its lease expiry), and the cumulative reclaim count.  Transfers
+        only the [C, K] holder/lease leaves and one counter - never the
+        reply log - so the chaos runner (core/chaos.py) and an operator
+        dashboard can poll it every segment.  An ``oldest_lock_age`` that
+        keeps growing while ``lease_expiries`` stays flat is the
+        LEASE_OFF leak signature (lock-lease rules, core/chain.py)."""
+        holder = np.asarray(state.locks.holder)
+        lease = np.asarray(state.locks.lease)
+        held = holder != -1
+        t = int(state.t)
+        ages = (t - lease)[held]
+        return {
+            "t": t,
+            "held_locks": int(held.sum()),
+            "oldest_lock_age": int(ages.max()) if ages.size else 0,
+            "lease_expiries": int(
+                np.asarray(state.metrics.lease_expiries).sum()),
         }
 
     # -- ring -------------------------------------------------------------

@@ -333,7 +333,36 @@ def txn_waves_from_spec(spec):
     return waves
 
 
-def run_txn_waves_and_check(spec, driver="host"):
+def inject_abandoned_prepares(sim, cluster, state, abandon, tid_base=9001):
+    """Phantom clients for the lock-lease tests: grab the head lock of
+    each *distinct* global key in ``abandon`` with a bare PREPARE, then
+    vanish - phase 2 never arrives, so the lock either leaks forever
+    (``lease_ticks == LEASE_OFF``) or is reclaimed by
+    ``lease_expiry_stage``.  Returns the post-injection state (one tick)."""
+    from repro.core.types import CLIENT_BASE, OP_PREPARE
+
+    assert len(set(abandon)) == len(abandon), "abandoned keys must be distinct"
+    pm = cluster.default_partition()
+    m = sim.empty_injection()
+    lanes: dict[int, int] = {}
+    for i, gk in enumerate(abandon):
+        chain = int(cluster.key_to_chain(gk, pm))
+        slot = int(cluster.key_to_slot(gk, pm))
+        lane = lanes.get(chain, 0)
+        lanes[chain] = lane + 1
+        m = m._replace(
+            op=m.op.at[chain, 0, lane].set(OP_PREPARE),
+            key=m.key.at[chain, 0, lane].set(slot),
+            seq=m.seq.at[chain, 0, lane].set(tid_base + i),
+            src=m.src.at[chain, 0, lane].set(CLIENT_BASE + 7),
+            client=m.client.at[chain, 0, lane].set(CLIENT_BASE + 7),
+            dst=m.dst.at[chain, 0, lane].set(0),
+            qid=m.qid.at[chain, 0, lane].set((1 << 20) + i),
+        )
+    return sim.tick(state, m)
+
+
+def run_txn_waves_and_check(spec, driver="host", abandon=(), lease_ticks=None):
     """The serializability oracle: run the spec's waves through the shared
     engine, then assert (1) locks drained + chains converged, (2) committed
     txns are atomic, (3) the observed write precedence is acyclic, and (4)
@@ -343,17 +372,33 @@ def run_txn_waves_and_check(spec, driver="host"):
     wave through the host-side ``TxnDriver`` (the correctness oracle of
     core/txn.py), ``"wave"`` admits the same waves into the in-network
     wave-table coordinator (``TxnWaveDriver``) - same checks, wave
-    boundaries preserved (one run per wave, like the host driver)."""
+    boundaries preserved (one run per wave, like the host driver).
+
+    ``abandon`` names distinct global keys whose locks are grabbed by
+    phantom clients *before* the waves and never released (see
+    ``inject_abandoned_prepares``).  ``lease_ticks`` (when not ``None``)
+    arms the lock-lease clock on the engine's lock table.  At a finite
+    lease the oracle additionally asserts the abandoned locks were
+    reclaimed (``lease_expiries`` counted, table drained); at
+    ``None``/``LEASE_OFF`` it asserts the leak is exactly the abandoned
+    lock count - the unbounded-growth arm of the lease sweep."""
     import numpy as np
 
     from repro.core import (Coordinator, TxnDriver, TxnPlanner,
-                            TxnWaveDriver, committed_view, locks_all_free,
-                            reference_execute, serial_order)
+                            TxnWaveDriver, committed_view, held_locks,
+                            locks_all_free, reference_execute, serial_order,
+                            set_lease)
+    from repro.core.types import LEASE_OFF
 
     assert driver in ("host", "wave"), driver
     cluster, sim = prop_engine() if driver == "host" else wave_prop_engine()
     waves = txn_waves_from_spec(spec)
     state = sim.init_state()
+    finite = lease_ticks is not None and lease_ticks != LEASE_OFF
+    if lease_ticks is not None:
+        state = state._replace(locks=set_lease(state.locks, lease_ticks))
+    if abandon:
+        state = inject_abandoned_prepares(sim, cluster, state, abandon)
     if driver == "host":
         drv = TxnDriver(sim, TxnPlanner(cluster))
     else:
@@ -363,10 +408,21 @@ def run_txn_waves_and_check(spec, driver="host"):
         state, res = drv.run(state, wave)
         results += res
     empty = sim.empty_injection()
-    for _ in range(4 * sim.n + 4):
+    drain_ticks = 4 * sim.n + 4
+    if finite and abandon:
+        # the phantom locks must age past the lease *during* the drain
+        drain_ticks += int(lease_ticks)
+    for _ in range(drain_ticks):
         state = sim.tick(state, empty)
 
-    assert locks_all_free(state.locks)
+    if abandon and not finite:
+        # abandonment without a lease: the leak is permanent and exact
+        assert held_locks(state.locks) == len(abandon)
+        assert state.metrics.asdict()["lease_expiries"] == 0
+    else:
+        assert locks_all_free(state.locks)
+        if abandon:
+            assert state.metrics.asdict()["lease_expiries"] >= len(abandon)
     assert int(state.stores.pending.sum()) == 0
     if driver == "wave":
         assert Coordinator.waves_drained(state)

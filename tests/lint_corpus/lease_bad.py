@@ -1,0 +1,56 @@
+"""Known-bad exemplar: a lock-lease clock breaking the traced-leaf rules.
+
+The lock-lease rules (core/chain.py module docstring) carry the lease as
+*traced* ``LockTable`` leaves - per-key acquisition stamps plus the
+``lease_ticks`` scalar - so retuning a lease mid-run is a leaf edit the
+donated tick never recompiles for.  This twin keeps the shapes but breaks
+the contract in exactly the two ways repro-lint machine-checks: a jitted
+expiry stage closing over the lease table instead of threading it (RL002 -
+the executable bakes the stale stamps in as a constant, so nothing ever
+ages), and weak python literals flowing into the strong int32 lease lanes
+(RL003 - the weak->strong flip across a tick boundary silently recompiles
+the donated tick).
+"""
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+LEASE_OFF = (1 << 31) - 1
+
+LEASE = jnp.full((16,), -1, jnp.int32)  # module-level lease stamps
+
+
+class Locks(NamedTuple):
+    lease: jax.Array
+    lease_ticks: jax.Array
+
+
+@jax.jit
+def expired(t):
+    # BAD (RL002): the lease stamps are baked in as a compile-time
+    # constant - every tick ages the same stale -1 stamps, so no lock
+    # ever expires
+    return (t - LEASE) >= 8
+
+
+def make_expirer():
+    stamps = jnp.zeros((16,), jnp.int32)
+
+    @jax.jit
+    def age(t):
+        return t - stamps  # BAD (RL002): closure-captured lease stamps
+
+    return age
+
+
+def reclaim(expire_mask):
+    return Locks(
+        lease=jnp.where(expire_mask, 1, 0),  # BAD (RL003): both branches weak
+        lease_ticks=8,                       # BAD (RL003): weak literal lane
+    )
+
+
+def disarm(locks):
+    # BAD (RL003): weak module constant into a strong int32 lane
+    return locks._replace(lease_ticks=LEASE_OFF)

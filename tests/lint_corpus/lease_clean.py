@@ -1,0 +1,42 @@
+"""Clean twin: the lock-lease clock under the traced-leaf rules.
+
+Same shapes as lease_bad.py, written the way core/txn.py actually carries
+the lease: the stamps and the lease length thread through jitted code as
+*traced arguments* (``set_lease`` is a leaf edit, never a rebuild), and
+every int32 lease lane is dtype-pinned at construction.
+"""
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+LEASE_OFF = (1 << 31) - 1
+
+
+class Locks(NamedTuple):
+    lease: jax.Array
+    lease_ticks: jax.Array
+
+
+@jax.jit
+def expired(lease, lease_ticks, t):
+    # the stamps and the lease length flow in as traced leaves
+    return (t - lease) >= lease_ticks
+
+
+def make_expirer():
+    def age(stamps, t):
+        return t - stamps  # stamps are a traced argument
+
+    return jax.jit(age)
+
+
+def reclaim(expire_mask):
+    return Locks(
+        lease=expire_mask.astype(jnp.int32),
+        lease_ticks=jnp.asarray(8, jnp.int32),
+    )
+
+
+def disarm(locks):
+    return locks._replace(lease_ticks=jnp.asarray(LEASE_OFF, jnp.int32))

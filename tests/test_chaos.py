@@ -1,0 +1,126 @@
+"""Declarative chaos suite (core/chaos.py): scenarios as data, run between
+fused open-loop segments.
+
+Fast, small-cluster twins of the benchmarks/fig_chaos.py cells:
+
+* the control cell drains clean under abandoning clients with a finite
+  lease (stores == serial reference, leaked locks == 0);
+* ``LEASE_OFF`` leaks exactly what the finite lease reclaims - the two
+  arms of the lease sweep, as a pinned regression;
+* storm / migration / stale-client disturbances all run through ONE
+  compiled open-loop scan (cache deltas pinned at zero after warm-up)
+  with the full drain invariants;
+* a scenario is *data*: malformed event tables (off-boundary ticks,
+  unsorted events, unknown kinds) are rejected loudly, not executed.
+"""
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    ChainConfig,
+    ChainSim,
+    ChaosEvent,
+    ChaosScenario,
+    ClusterConfig,
+    LEASE_OFF,
+    failure_storm,
+    make_loadgen,
+    migration_wave,
+    none_scenario,
+    run_scenario,
+    stale_clients,
+)
+from repro.core import loadgen as loadgen_lib
+
+SEG = 8
+_ENGINE = None
+
+
+def engine():
+    """Lazy module singleton: jit caches key on the ChainSim instance, so
+    every chaos cell in this file reuses the same compiled scan."""
+    global _ENGINE
+    if _ENGINE is None:
+        cluster = ClusterConfig(
+            chain=ChainConfig(n_nodes=3, num_keys=6, num_versions=6),
+            n_chains=2, buckets_per_chain=2, spare_keys=2,
+        )
+        sim = ChainSim(cluster, inject_capacity=8, route_capacity=128,
+                       reply_capacity=8192)
+        _ENGINE = (cluster, sim)
+    return _ENGINE
+
+
+def _gen(cluster, **kw):
+    kw.setdefault("write_fraction", 0.3)
+    kw.setdefault("txn_fraction", 0.2)
+    return make_loadgen(cluster, qps=4.0, seed=3, backlog_capacity=64, **kw)
+
+
+def test_control_cell_drains_with_abandonment_under_finite_lease():
+    cluster, sim = engine()
+    g = _gen(cluster, abandon_fraction=0.25)
+    _, _, rep = run_scenario(sim, g, none_scenario(32, SEG), lease_ticks=8)
+    assert rep["drained"] and rep["leaked_locks"] == 0
+    assert rep["serial_keys"] > 0          # the oracle checked real commits
+    assert rep["metrics"]["lease_expiries"] > 0  # abandonment was reclaimed
+
+
+def test_lease_off_leaks_what_a_finite_lease_reclaims():
+    cluster, sim = engine()
+    off_gen = _gen(cluster, abandon_fraction=0.3)
+    _, _, off = run_scenario(sim, off_gen, none_scenario(32, SEG),
+                             lease_ticks=LEASE_OFF, check=False)
+    assert off["leaked_locks"] > 0, "abandonment never stranded a lock"
+    assert off["metrics"]["lease_expiries"] == 0
+    # identical seed and knobs, finite lease: the same abandonment drains
+    fin_gen = _gen(cluster, abandon_fraction=0.3)
+    _, _, fin = run_scenario(sim, fin_gen, none_scenario(32, SEG),
+                             lease_ticks=8)
+    assert fin["leaked_locks"] == 0
+    assert fin["metrics"]["lease_expiries"] >= off["leaked_locks"]
+
+
+def test_disturbance_cells_share_one_compiled_scan():
+    cluster, sim = engine()
+    # warm cell pins the caches; everything after must add zero programs
+    g = _gen(cluster, abandon_fraction=0.1)
+    _, g, rep0 = run_scenario(sim, g, none_scenario(2 * SEG, SEG),
+                              lease_ticks=8)
+    for scenario in (
+        failure_storm(cluster.n_chains, 48, SEG, node=1),
+        migration_wave([(0, 1)], 32, SEG),
+        stale_clients(0, 1, 32, SEG),
+    ):
+        g = loadgen_lib.reset(g)._replace(qps=jnp.asarray(4.0, jnp.float32))
+        _, g, rep = run_scenario(sim, g, scenario, lease_ticks=8)
+        assert rep["drained"] and rep["leaked_locks"] == 0, scenario.name
+        deltas = {k: a - b for k, (b, a) in rep["cache_sizes"].items()}
+        assert all(d == 0 for d in deltas.values()), (
+            f"{scenario.name} recompiled: {rep['cache_sizes']}")
+        if scenario.name in ("migration_wave", "stale_clients"):
+            assert rep["metrics"]["stale_routes"] > 0, (
+                f"{scenario.name}: the post-move generator never hit the "
+                "stale-route gate")
+
+
+def test_scenarios_are_validated_data():
+    mid_fail = ChaosEvent(tick=5, kind="fail", chain=0, node=1)
+    with pytest.raises(AssertionError):
+        ChaosScenario("off_boundary", (mid_fail,), 32, 8)
+    with pytest.raises(AssertionError):
+        ChaosScenario("ragged", (), 30, 8)
+    with pytest.raises(AssertionError):
+        ChaosScenario("unsorted", (
+            ChaosEvent(tick=16, kind="fail", chain=0, node=1),
+            ChaosEvent(tick=8, kind="fail", chain=1, node=1),
+        ), 32, 8)
+
+
+def test_unknown_event_kind_is_rejected_not_executed():
+    cluster, sim = engine()
+    bad = ChaosScenario("bad_kind", (
+        ChaosEvent(tick=0, kind="frobnicate"),
+    ), 8, 8)
+    with pytest.raises(ValueError, match="frobnicate"):
+        run_scenario(sim, _gen(cluster), bad, lease_ticks=8)

@@ -88,6 +88,38 @@ def test_detector_tracks_spliced_in_fresh_id():
     assert 7 in det.suspected()  # ...and IS watchable from then on
 
 
+def test_overdue_flags_node_never_sent_to_and_never_heard():
+    """A tracked node with no query ever outstanding against it and no
+    reply ever seen must still turn up in ``overdue()`` once its grace
+    window lapses (regression: the per-query loop could not see it, so a
+    node the client's routing black-holed since birth was reported healthy
+    forever)."""
+    det = FailureDetector(n_nodes=3, timeout_ticks=2)
+    det.tick()
+    det.tick()
+    assert det.overdue() == []  # grace window still open for everyone
+    det.tick()
+    # nodes 0..2 were never sent to and never heard from: all overdue now
+    assert det.overdue() == [0, 1, 2]
+
+    # hearing from a node (even without traffic to it) clears it ...
+    det.heard_from(0)
+    assert det.overdue() == [1, 2]
+    # ... and so does addressing it: node 1 moves to the per-query path,
+    # which applies the same window from the send, not from birth
+    det.note_sent(1, qid=42)
+    assert det.overdue() == [2]
+    for _ in range(3):
+        det.tick()
+    assert det.overdue() == [1, 2]  # query 42 now unanswered past timeout
+    det.note_reply(42)
+    assert det.overdue() == [2]
+
+    # untrack removes the silent node entirely
+    det.untrack(2)
+    assert det.overdue() == []
+
+
 def test_coordinator_syncs_detector_with_membership():
     """fail_node untracks; complete_recovery tracks the replacement."""
     cfg = ChainConfig(n_nodes=4, num_keys=16)

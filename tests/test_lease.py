@@ -1,0 +1,153 @@
+"""Lock leases (core/txn.py lease_expiry_stage + the LockTable lease leaf).
+
+The robustness contract behind the chaos suite (ISSUE-10): a client that
+acquires a lock and vanishes must not wedge the cluster.  Pinned here:
+
+* every granted lock is stamped with its acquisition tick; release clears
+  the stamp;
+* a lock held past ``lease_ticks`` is reclaimed inside the jitted tick
+  (holder cleared, version bumped, ``Metrics.lease_expiries`` counted) and
+  the key is immediately re-grantable;
+* a straggler COMMIT arriving *after* its lock expired is NACKed through
+  the bumped version counter - never applied (expiry runs before the lock
+  stage in the same tick, so there is no window);
+* ``lease_ticks == LEASE_OFF`` is branch-free off: bit-identical state
+  trajectories to a finite lease that never fires, and ``set_lease`` is a
+  traced-leaf edit that never recompiles the donated tick.
+
+The wave coordinator's force-abort half of the lease story lives in
+tests/test_txn.py (``wave_expired``); the cluster-scale sweep in
+benchmarks/fig_chaos.py.
+"""
+import jax
+import numpy as np
+
+from repro.core import ChainSim, locks_all_free, set_lease
+from repro.core.types import (
+    CLIENT_BASE,
+    LEASE_OFF,
+    OP_ABORT,
+    OP_COMMIT,
+    OP_PREPARE,
+    OP_PREPARE_ACK,
+    OP_TXN_REPLY,
+)
+
+
+def _engine():
+    from helpers import prop_engine
+
+    return prop_engine()
+
+
+def _inject(sim, op, local_key, val, txn_id, chain, qid):
+    m = sim.empty_injection()
+    return m._replace(
+        op=m.op.at[chain, 0, 0].set(op),
+        key=m.key.at[chain, 0, 0].set(local_key),
+        value=m.value.at[chain, 0, 0, 0].set(val),
+        seq=m.seq.at[chain, 0, 0].set(txn_id),
+        src=m.src.at[chain, 0, 0].set(CLIENT_BASE + 1),
+        client=m.client.at[chain, 0, 0].set(CLIENT_BASE + 1),
+        dst=m.dst.at[chain, 0, 0].set(0),
+        qid=m.qid.at[chain, 0, 0].set(qid),
+    )
+
+
+def _drain(sim, state, ticks):
+    empty = sim.empty_injection()
+    for _ in range(ticks):
+        state = sim.tick(state, empty)
+    return state
+
+
+def _replies(state):
+    r = state.replies.merged()
+    return {int(q): (int(op), int(s), int(v))
+            for q, op, s, v in zip(r.qid, r.op, r.seq, r.value0)}
+
+
+def test_grant_stamps_lease_and_release_clears_it():
+    _, sim = _engine()
+    state = sim.init_state()
+    t0 = int(state.t)
+    state = sim.tick(state, _inject(sim, OP_PREPARE, 2, 0, 7, 0, qid=1))
+    assert int(state.locks.holder[0, 2]) == 7
+    assert int(state.locks.lease[0, 2]) == t0      # acquisition tick
+    assert int(state.locks.lease_ticks[0]) == LEASE_OFF
+    state = sim.tick(state, _inject(sim, OP_ABORT, 2, 0, 7, 0, qid=2))
+    assert int(state.locks.holder[0, 2]) == -1
+    assert int(state.locks.lease[0, 2]) == -1      # stamp cleared
+
+
+def test_expiry_reclaims_counts_and_key_is_regrantable():
+    _, sim = _engine()
+    state = sim.init_state()
+    state = state._replace(locks=set_lease(state.locks, 3))
+    state = sim.tick(state, _inject(sim, OP_PREPARE, 1, 0, 7, 0, qid=1))
+    assert int(state.locks.holder[0, 1]) == 7
+    state = _drain(sim, state, 6)                  # age past the lease
+    assert locks_all_free(state.locks)
+    assert int(state.locks.version[0, 1]) == 1     # expiry bumps
+    assert state.metrics.asdict()["lease_expiries"] == 1
+    # a fresh txn gets the key and sees the bumped version in its ACK
+    state = sim.tick(state, _inject(sim, OP_PREPARE, 1, 0, 8, 0, qid=2))
+    state = _drain(sim, state, 2)
+    recs = _replies(state)
+    assert recs[2][0] == OP_PREPARE_ACK and recs[2][1] == 1
+
+
+def test_straggler_commit_after_expiry_is_nacked_never_applied():
+    _, sim = _engine()
+    state = sim.init_state()
+    state = state._replace(locks=set_lease(state.locks, 3))
+    state = sim.tick(state, _inject(sim, OP_PREPARE, 0, 0, 9, 1, qid=1))
+    state = _drain(sim, state, 6)                  # lock expired meanwhile
+    state = sim.tick(state, _inject(sim, OP_COMMIT, 0, 42, 9, 1, qid=2))
+    state = _drain(sim, state, 6)
+    recs = _replies(state)
+    assert recs[2] == (OP_TXN_REPLY, -1, 0)        # release refused
+    assert int(np.asarray(state.stores.values[1, :, 0]).sum()) == 0
+    m = state.metrics.asdict()
+    assert m["txn_commits"] == 0 and m["lease_expiries"] == 1
+
+
+def test_lease_off_bit_identical_to_finite_lease_that_never_fires():
+    """LEASE_OFF is the int32-max sentinel, not a branch: with a lease too
+    long to fire, every traced leaf of the final state - stores, locks,
+    replies, metrics - matches the OFF run bit-for-bit, even with an
+    abandoned lock held through the whole run."""
+    _, sim = _engine()
+
+    def run(lease_ticks):
+        state = sim.init_state()
+        if lease_ticks is not None:
+            state = state._replace(locks=set_lease(state.locks, lease_ticks))
+        state = sim.tick(state, _inject(sim, OP_PREPARE, 3, 0, 5, 0, qid=1))
+        state = sim.tick(state, _inject(sim, OP_PREPARE, 2, 0, 6, 0, qid=2))
+        state = sim.tick(state, _inject(sim, OP_COMMIT, 2, 17, 6, 0, qid=3))
+        state = _drain(sim, state, 10)             # txn 5 stays abandoned
+        return state
+
+    off, finite = run(None), run(1000)
+    assert int(off.locks.holder[0, 3]) == 5        # the abandoned hold
+    assert off.metrics.asdict()["lease_expiries"] == 0
+    assert finite.metrics.asdict()["lease_expiries"] == 0
+    # normalize the one intentionally different leaf, then compare all
+    norm = lambda s: jax.tree.leaves(s._replace(
+        locks=set_lease(s.locks, 0)))
+    for a, b in zip(norm(off), norm(finite)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_set_lease_is_a_leaf_edit_no_recompile():
+    _, sim = _engine()
+    state = sim.init_state()
+    state = sim.tick(state, sim.empty_injection())      # warmup
+    warm = ChainSim.tick._cache_size()
+    state = state._replace(locks=set_lease(state.locks, 7))
+    state = sim.tick(state, _inject(sim, OP_PREPARE, 0, 0, 3, 0, qid=1))
+    state = _drain(sim, state, 9)                       # grant, then expire
+    assert locks_all_free(state.locks)
+    assert state.metrics.asdict()["lease_expiries"] == 1
+    assert ChainSim.tick._cache_size() == warm

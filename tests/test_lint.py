@@ -121,6 +121,20 @@ def test_loadgen_exemplars_pin_the_openloop_harness_rules():
     assert clean.findings == [], clean.findings
 
 
+def test_lease_exemplars_pin_the_lock_lease_rules():
+    """The lock-lease contract in core/chain.py points here: the bad twin
+    breaks the traced-leaf rules in exactly the two machine-checked ways
+    (RL002 module-level lease stamps / closure-captured stamps inside
+    jitted expiry stages, RL003 weak literals into the int32 lease lanes)
+    and nothing else fires on it; the clean twin - written the way
+    core/txn.py actually threads its lease clock - is strict-silent."""
+    bad = _lint_corpus_file("lease_bad.py")
+    per_rule = bad.per_rule()
+    assert per_rule == {"RL002": 2, "RL003": 3}, bad.findings
+    clean = _lint_corpus_file("lease_clean.py", strict=True)
+    assert clean.findings == [], clean.findings
+
+
 # --------------------------------------------------------------------------
 # 2. pragmas
 # --------------------------------------------------------------------------

@@ -178,7 +178,7 @@ def test_hub_rates_jsonl_and_summary(tmp_path):
     rates = hub.rates()
     assert rates is not None and rates["replies"] >= 0.0
     assert set(rates) == {"replies", "packets", "drops", "lock_conflicts",
-                          "stale_routes", "write_nacks"}
+                          "stale_routes", "write_nacks", "lease_expiries"}
     path = tmp_path / "telemetry.jsonl"
     hub.write_jsonl(str(path))
     lines = path.read_text().splitlines()

@@ -331,3 +331,74 @@ def test_committed_txns_serializable_seeded_fuzz():
         n_aborted += sum(not r.committed for r in results)
     # the fuzz actually exercised both outcomes
     assert n_committed > 20 and n_aborted > 5, (n_committed, n_aborted)
+
+
+# ---------------------------------------------------------------------------
+# lock leases: abandonment is survivable (ISSUE-10) - the wave coordinator
+# force-aborts slots that outlive the lease, and the shared serializability
+# oracle holds with phantom clients that vanish mid-2PC
+# ---------------------------------------------------------------------------
+def test_wave_slot_outliving_lease_force_aborts_as_wave_expired():
+    """A cross-chain wave txn under a 1-tick lease can never hear its
+    PREPARE replies in time: the coordinator must force-abort the slot
+    (``mode == "wave_expired"``), recycle it, and the expired straggler's
+    release must NACK through the bumped version counter - the store stays
+    untouched and the lock table drains."""
+    from helpers import wave_prop_engine
+    from repro.core import TxnWaveDriver, set_lease
+
+    cluster, sim = wave_prop_engine()
+    state = sim.init_state()
+    state = state._replace(locks=set_lease(state.locks, 1))
+    drv = TxnWaveDriver(sim, TxnPlanner(cluster))
+    # global keys 0 (chain 0) and 1 (chain 1): forced cross-chain 2PC, so
+    # the grant->ACK->decision round trip is >= 2 ticks > the lease
+    state, res = drv.run(state, [Txn(txn_id=5, writes=((0, 55), (1, 66)))])
+    assert res[0].mode == "wave_expired" and not res[0].committed
+    empty = sim.empty_injection()
+    for _ in range(4 * sim.n + 4):
+        state = sim.tick(state, empty)
+    assert locks_all_free(state.locks)
+    assert np.asarray(state.wave.phase == 0).all()   # slot recycled
+    view = committed_view(cluster, state)
+    assert view[0] == 0 and view[1] == 0             # never applied
+    m = state.metrics.asdict()
+    assert m["txn_commits"] == 0
+    assert m["lease_expiries"] >= 1                  # heads reclaimed
+
+
+def test_abandoning_clients_fuzz_under_lease_reclamation():
+    """Seeded fuzz with phantom clients that grab locks and vanish, at
+    several lease lengths: the shared oracle asserts the abandoned locks
+    are reclaimed (lease_expiries counted, table drained) and that the
+    committed subset stays serializable against the reference executor."""
+    from helpers import (PROP_MAX_KEYS_PER_TXN, PROP_MAX_TXNS_PER_WAVE,
+                         PROP_MAX_WAVES, PROP_NUM_GLOBAL_KEYS,
+                         run_txn_waves_and_check)
+
+    rng = np.random.default_rng(1)
+    for lease_ticks in (8, 16, 32):
+        for _ in range(4):
+            spec = [
+                [tuple(rng.choice(PROP_NUM_GLOBAL_KEYS,
+                                  size=rng.integers(
+                                      1, PROP_MAX_KEYS_PER_TXN + 1),
+                                  replace=False).tolist())
+                 for _ in range(rng.integers(1, PROP_MAX_TXNS_PER_WAVE + 1))]
+                for _ in range(rng.integers(1, PROP_MAX_WAVES + 1))
+            ]
+            abandon = tuple(rng.choice(
+                PROP_NUM_GLOBAL_KEYS, size=2, replace=False).tolist())
+            run_txn_waves_and_check(spec, abandon=abandon,
+                                    lease_ticks=lease_ticks)
+
+
+def test_abandoned_locks_leak_exactly_at_lease_off():
+    """The control arm of the lease sweep: without a lease the phantom
+    clients' locks leak permanently and exactly (the oracle asserts the
+    held count equals the abandoned count and zero expiries) - while the
+    committed traffic around them still serializes."""
+    from helpers import run_txn_waves_and_check
+
+    run_txn_waves_and_check([[(0, 3), (5,)], [(1, 4)]],
+                            abandon=(2, 6), lease_ticks=None)
